@@ -1,0 +1,89 @@
+"""Shared helpers for the paper-track benchmarks: train-once model cache,
+calibration, and quantized evaluation."""
+from __future__ import annotations
+
+import os
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import run_calibration, spec_for_mode
+from repro.models.cnn import (CNNConfig, cnn_apply, evaluate, make_gratings,
+                              train_cnn)
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+os.makedirs(ART, exist_ok=True)
+
+TASKS = {
+    # paper Table-1 rows -> our proxies (same protocol, synthetic data);
+    # 16 classes + heavy noise keep fp32 off the ceiling so quantization
+    # gaps are visible.
+    "cls_resnet": CNNConfig(arch="mini_resnet", width=24, res=20, n_classes=16),
+    "cls_mobilenet": CNNConfig(arch="mini_mobilenet", width=24, res=20, n_classes=16),
+    "seg_unet": CNNConfig(arch="mini_seg", width=24, res=20, n_classes=16),
+}
+TRAIN_STEPS = {"cls_resnet": 250, "cls_mobilenet": 250, "seg_unet": 200}
+
+
+def get_trained(task: str):
+    cfg = TASKS[task]
+    path = os.path.join(ART, f"cnn_{task}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return cfg, pickle.load(f)
+    params = train_cnn(cfg, steps=TRAIN_STEPS[task], batch=32,
+                       segmentation=task.startswith("seg"))
+    params = jax.device_get(params)
+    with open(path, "wb") as f:
+        pickle.dump(params, f)
+    return cfg, params
+
+
+def eval_data(task: str, n: int = 512, seed: int = 77):
+    cfg = TASKS[task]
+    imgs, labels = make_gratings(seed, n, res=cfg.res, n_classes=cfg.n_classes,
+                                 noise=0.45)
+    if task.startswith("seg"):
+        from repro.models.cnn import seg_labels
+        labels = seg_labels(labels, cfg.res, cfg.n_classes)
+    return imgs, labels
+
+
+def calib_data(task: str, n: int = 16, seed: int = 5):
+    cfg = TASKS[task]
+    imgs, _ = make_gratings(seed, n, res=cfg.res, n_classes=cfg.n_classes,
+                            noise=0.45)
+    return [jnp.asarray(imgs[i: i + 8]) for i in range(0, n, 8)]
+
+
+def apply_fn_for(cfg: CNNConfig):
+    def apply_fn(params, batch, *, spec, qstate, tape=None):
+        return cnn_apply(params, batch, cfg=cfg, spec=spec, qstate=qstate,
+                         tape=tape)
+    return apply_fn
+
+
+def calibrate_task(task: str, params, per_channel: bool, gamma: int = 1,
+                   n_calib: int = 16, seed: int = 5):
+    cfg = TASKS[task]
+    spec = spec_for_mode("pdq", per_channel=per_channel, gamma=gamma)
+    return run_calibration(apply_fn_for(cfg), params,
+                           calib_data(task, n_calib, seed), spec)
+
+
+def accuracy(task: str, params, imgs, labels, mode: str, per_channel: bool,
+             qstate=None, gamma: int = 1, batch: int = 128) -> float:
+    cfg = TASKS[task]
+    spec = spec_for_mode(mode, per_channel=per_channel, gamma=gamma)
+    fn = jax.jit(lambda p, x, q: cnn_apply(p, x, cfg=cfg, spec=spec, qstate=q))
+    correct = total = 0
+    for i in range(0, len(imgs), batch):
+        xb = jnp.asarray(imgs[i: i + batch])
+        yb = labels[i: i + batch]
+        logits = fn(params, xb, qstate if qstate is not None else {})
+        pred = np.asarray(jnp.argmax(logits, -1))
+        correct += (pred == yb).sum()
+        total += yb.size
+    return correct / total

@@ -1,0 +1,91 @@
+"""Paper Fig. 3: estimation cost scaling.
+
+(a) vs input channels  - linear   (estimation touches each input once)
+(b) vs output channels - constant (moments are output-shape independent)
+(c) vs sampling stride - quadratic decrease (gamma^-2 positions sampled)
+
+Measured as jitted CPU wall time of the moment estimate vs the conv itself,
+plus the analytic op-count model from Sec. 4.2.  The absolute numbers are
+CPU-host values (the paper's are STM32); the *scaling shapes* are the claim
+being reproduced.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import surrogate, weight_stats
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+
+def _time(fn, *args, reps: int = 20) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def measure() -> dict:
+    res: dict = {"vs_cin": [], "vs_cout": [], "vs_gamma": []}
+    key = jax.random.PRNGKey(0)
+
+    def conv_fn(x, k):
+        import jax.lax as lax
+        dn = lax.conv_dimension_numbers(x.shape, k.shape, ("NHWC", "HWIO", "NHWC"))
+        return lax.conv_general_dilated(x, k, (1, 1), "SAME",
+                                        dimension_numbers=dn)
+
+    def est_fn(x, k, gamma=1):
+        ws = weight_stats(k, reduce_axes=(0, 1, 2), per_channel=False)
+        return surrogate.conv_moments(x, ws, (3, 3), (1, 1), "SAME", False,
+                                      gamma)
+
+    # (a) input channels, C_out = 3 (paper setup)
+    for cin in (4, 8, 16, 32, 64):
+        x = jax.random.normal(key, (1, 32, 32, cin))
+        k = jax.random.normal(key, (3, 3, cin, 3)) * 0.1
+        res["vs_cin"].append({"cin": cin,
+                              "conv_us": _time(jax.jit(conv_fn), x, k),
+                              "est_us": _time(jax.jit(est_fn), x, k)})
+    # (b) output channels, C_in = 3
+    for cout in (4, 8, 16, 32, 64):
+        x = jax.random.normal(key, (1, 32, 32, 3))
+        k = jax.random.normal(key, (3, 3, 3, cout)) * 0.1
+        res["vs_cout"].append({"cout": cout,
+                               "conv_us": _time(jax.jit(conv_fn), x, k),
+                               "est_us": _time(jax.jit(est_fn), x, k)})
+    # (c) sampling stride
+    x = jax.random.normal(key, (1, 32, 32, 3))
+    k = jax.random.normal(key, (3, 3, 3, 16)) * 0.1
+    for gamma in (1, 2, 4, 8):
+        fn = jax.jit(lambda xx, kk, g=gamma: est_fn(xx, kk, g))
+        n_pos = (32 // gamma) ** 2
+        res["vs_gamma"].append({"gamma": gamma, "est_us": _time(fn, x, k),
+                                "positions": n_pos})
+    return res
+
+
+def main():
+    res = measure()
+    with open(os.path.join(ART, "fig3_latency.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    print("\n## Fig 3a: estimation cost vs input channels (expect ~linear)")
+    for r in res["vs_cin"]:
+        print(f"  cin={r['cin']:3d}  est={r['est_us']:8.1f}us  conv={r['conv_us']:8.1f}us")
+    print("## Fig 3b: estimation cost vs output channels (expect ~constant)")
+    for r in res["vs_cout"]:
+        print(f"  cout={r['cout']:3d}  est={r['est_us']:8.1f}us  conv={r['conv_us']:8.1f}us")
+    print("## Fig 3c: estimation cost vs gamma (positions fall as gamma^-2)")
+    for r in res["vs_gamma"]:
+        print(f"  gamma={r['gamma']:2d}  est={r['est_us']:8.1f}us  positions={r['positions']}")
+
+
+if __name__ == "__main__":
+    main()

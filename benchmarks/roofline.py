@@ -1,0 +1,125 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Terms per (arch x shape), single-pod mesh, TPU v5e constants:
+  compute    = scaled_dot_flops / 197e12            [s/chip]
+  memory     = traffic_proxy    / 819e9             [s/chip]
+               traffic_proxy = argument + output + 2 * temp bytes
+               (decode/prefill: every argument byte - params + cache - is
+               read once per step; temp counted twice for write+read)
+  collective = scaled_collective_bytes / 50e9       [s/chip]
+
+dominant = argmax; MODEL_FLOPS from the analytic model (model_flops.py);
+ratio = MODEL_FLOPS / (chips * scaled_dot_flops): the useful fraction of
+compiled compute (catches remat + masked-attention waste).
+roofline_frac = model_compute_time / max(term): the score headline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts",
+                   "dryrun")
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+
+def load_cells(mesh: str = "pod16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms_for(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    mem = rec.get("memory", {})
+    traffic = (mem.get("argument_bytes", 0) + mem.get("output_bytes", 0)
+               + 2 * mem.get("temp_bytes", 0))
+    compute = rec["scaled_dot_flops"] / PEAK_FLOPS
+    memory = traffic / HBM_BW
+    coll = rec.get("scaled_collective_total", 0.0) / ICI_BW
+    dom = max(("compute", compute), ("memory", memory), ("collective", coll),
+              key=lambda kv: kv[1])
+    return {"compute_s": compute, "memory_s": memory, "collective_s": coll,
+            "dominant": dom[0], "bound_s": dom[1], "traffic_bytes": traffic}
+
+
+def full_table(mesh: str = "pod16x16", with_model: bool = True):
+    rows = []
+    model_cache: dict[str, dict] = {}
+    if with_model:
+        from repro.configs import get_config
+        from repro.launch.model_flops import model_flops
+    for rec in load_cells(mesh):
+        t = terms_for(rec)
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "status": rec.get("status")}
+        if t is None:
+            row["reason"] = rec.get("reason", rec.get("error", ""))[:90]
+            rows.append(row)
+            continue
+        row.update(t)
+        if with_model:
+            key = f"{rec['arch']}|{rec['shape']}"
+            if key not in model_cache:
+                model_cache[key] = model_flops(get_config(rec["arch"]),
+                                               rec["shape"])
+            mf = model_cache[key]
+            chips = rec["mesh_info"]["n_devices"]
+            hlo_total = rec["scaled_dot_flops"] * chips
+            row["model_flops"] = mf["total"]
+            row["flops_ratio"] = mf["total"] / max(hlo_total, 1.0)
+            model_time = mf["total"] / chips / PEAK_FLOPS
+            row["roofline_frac"] = model_time / max(t["bound_s"], 1e-30)
+        rows.append(row)
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPs | HLO/model | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | skipped: "
+                       f"{r.get('reason','')[:60]} | - | - | - |\n")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |\n")
+            continue
+        inv = 1.0 / r["flops_ratio"] if r.get("flops_ratio") else float("nan")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r.get('model_flops', 0):.3e} | {inv:.2f}x | "
+            f"{r.get('roofline_frac', 0):.3f} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = full_table()
+    md = render_markdown(rows)
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "roofline.md"), "w") as f:
+        f.write(md)
+    with open(os.path.join(OUT, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(md)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        import statistics
+        fr = [r["roofline_frac"] for r in ok if "roofline_frac" in r]
+        print(f"# {len(ok)} cells ok; median roofline fraction "
+              f"{statistics.median(fr):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Benchmark harness - one entry per paper table/figure + the roofline.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``name,us_per_call,derived`` CSV lines per benchmark as the summary,
+after each section's human-readable output.  Artifacts (json/md) land in
+benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+CSV: list[tuple[str, float, str]] = []
+
+
+def _csv(name: str, us: float, derived: str):
+    CSV.append((name, us, derived))
+
+
+def bench_kernels():
+    """Microbench the PDQ kernel surfaces (CPU ref-path timings; the Pallas
+    kernels themselves are TPU-target, validated in interpret mode by tests)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512, 2048))
+    xq = jax.random.randint(key, (512, 2048), -128, 128, jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(key, (2048, 2048), -128, 128, jnp.int32).astype(jnp.int8)
+
+    def timeit(fn, *a, reps=5):
+        fn(*a)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*a)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    t = timeit(jax.jit(lambda v: ops.act_stats(v)), x)
+    _csv("kernel.act_stats_512x2048", t, "fused s1+s2 single pass")
+    t = timeit(jax.jit(lambda a, b: ops.w8a8_matmul(a, b, 0.01, 0, 0.01)), xq, wq)
+    _csv("kernel.w8a8_512x2048x2048", t, "int8 matmul + dequant epilogue")
+    t = timeit(jax.jit(lambda v: ops.quantize(v, 0.05, 0)), x)
+    _csv("kernel.quantize_512x2048", t, "affine int8 quantize")
+
+
+def bench_paper_tables(quick: bool):
+    import paper_tables
+    res = paper_tables.run_tables(n_eval=128 if quick else 384)
+    print(paper_tables.render(res))
+    import json
+    from _cnn_common import ART
+    with open(os.path.join(ART, "paper_tables.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    for domain in ("in_domain", "ood"):
+        for task, row in res[domain].items():
+            gap_pdq = row["fp32"] - row["ours_C"]
+            gap_static = row["fp32"] - row["static_C"]
+            _csv(f"table.{domain}.{task}", 0.0,
+                 f"fp32={row['fp32']:.4f} ours_C={row['ours_C']:.4f} "
+                 f"dyn_C={row['dynamic_C']:.4f} static_C={row['static_C']:.4f} "
+                 f"pdq_gap={gap_pdq:.4f} static_gap={gap_static:.4f}")
+
+
+def bench_fig3():
+    import fig3_latency
+    res = fig3_latency.measure()
+    import json
+    from _cnn_common import ART
+    with open(os.path.join(ART, "fig3_latency.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    a = res["vs_cin"]
+    slope = (a[-1]["est_us"] - a[0]["est_us"]) / (a[-1]["cin"] - a[0]["cin"])
+    _csv("fig3.est_vs_cin", a[-1]["est_us"], f"linear slope ~{slope:.2f}us/ch")
+    b = res["vs_cout"]
+    _csv("fig3.est_vs_cout", b[-1]["est_us"],
+         f"constant: {b[0]['est_us']:.1f} -> {b[-1]['est_us']:.1f}us")
+    g = res["vs_gamma"]
+    _csv("fig3.est_vs_gamma", g[-1]["est_us"],
+         f"gamma 1->8 time {g[0]['est_us']:.1f}->{g[-1]['est_us']:.1f}us "
+         f"positions /{g[0]['positions'] // g[-1]['positions']}")
+
+
+def bench_fig4():
+    import fig4_stride
+    rows = fig4_stride.run()
+    for r in rows:
+        _csv(f"fig4.gamma{r['gamma']}.{r['granularity']}", 0.0,
+             f"in={r['in_domain']:.4f} ood={r['ood']:.4f}")
+
+
+def bench_fig5():
+    import fig5_calibsize
+    rows = fig5_calibsize.run()
+    for r in rows:
+        _csv(f"fig5.S{r['n_calib']}.{r['granularity']}", 0.0,
+             f"acc={r['acc_mean']:.4f}+-{r['acc_std']:.4f}")
+
+
+def bench_roofline():
+    import roofline
+    rows = roofline.full_table()
+    md = roofline.render_markdown(rows)
+    with open(os.path.join(roofline.OUT, "roofline.md"), "w") as f:
+        f.write(md)
+    import json
+    with open(os.path.join(roofline.OUT, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        _csv(f"roofline.{r['arch']}.{r['shape']}", r["bound_s"] * 1e6,
+             f"dom={r['dominant']} frac={r.get('roofline_frac', 0):.3f}")
+    if not ok:
+        _csv("roofline", 0.0, "no dry-run artifacts yet - run repro.launch.dryrun")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: kernels,tables,fig3,fig4,fig5,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("kernels"):
+        bench_kernels()
+    if want("tables"):
+        bench_paper_tables(args.quick)
+    if want("fig3"):
+        bench_fig3()
+    if want("fig4") and not args.quick:
+        bench_fig4()
+    if want("fig5") and not args.quick:
+        bench_fig5()
+    if want("roofline"):
+        bench_roofline()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in CSV:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the PDQ idea in 30 lines.
+
+Calibrate once, then quantize a layer's output with parameters *predicted
+from the input* - before the matmul runs (paper Sec. 4).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import run_calibration, spec_for_mode
+from repro.core import qlinear
+
+
+def model(params, x, *, spec, qstate, tape=None):
+    """A 2-layer MLP whose pre-activations are quantized per the spec."""
+    h = qlinear.dense(x, params[0], None, name="fc1",
+                      policy=spec.resolve("fc1"), state=qstate, tape=tape)
+    h = jax.nn.relu(h)
+    return qlinear.dense(h, params[1], None, name="fc2",
+                         policy=spec.resolve("fc2"), state=qstate, tape=tape)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = (0.1 * jax.random.normal(key, (256, 512)),
+              0.1 * jax.random.normal(jax.random.PRNGKey(1), (512, 64)))
+
+    # 1. calibrate (16 samples, shared by static & PDQ - as in the paper)
+    calib = [jax.random.normal(jax.random.PRNGKey(i), (8, 256)) for i in range(2)]
+    spec = spec_for_mode("pdq", per_channel=True)
+    qstate = run_calibration(model, params, calib, spec)
+
+    # 2. evaluate the three quantization modes under an input-scale shift
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(9), (32, 256))
+    ref = model(params, x, spec=spec_for_mode("none"), qstate={})
+    for mode in ("static", "dynamic", "pdq"):
+        out = model(params, x, spec=spec_for_mode(mode, per_channel=True),
+                    qstate=qstate)
+        err = float(jnp.abs(out - ref).mean() / jnp.abs(ref).mean())
+        print(f"{mode:8s} rel-err under 5x input shift: {err:.4f}")
+    print("-> PDQ tracks the shifted inputs (like dynamic) without ever "
+          "materializing an unquantized output tensor (like static).")
+
+
+if __name__ == "__main__":
+    main()

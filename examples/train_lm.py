@@ -1,0 +1,54 @@
+"""End-to-end LM training driver (deliverable b).
+
+Default: a ~20M-param GPT-style model for 200 steps on CPU (minutes).
+--full trains a ~110M model for 300 steps - the assignment's "100M for a
+few hundred steps" target - sized for a real accelerator.
+
+    PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def small_cfg(full: bool) -> ArchConfig:
+    if full:  # ~110M params
+        return ArchConfig(name="gpt-110m", n_layers=12, d_model=768,
+                          n_heads=12, n_kv_heads=12, d_ff=3072, vocab=32000,
+                          head_dim=64, loss_chunk=128, dtype="float32")
+    return ArchConfig(name="gpt-20m", n_layers=6, d_model=384, n_heads=6,
+                      n_kv_heads=6, d_ff=1536, vocab=8192, head_dim=64,
+                      remat="none", loss_chunk=64, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = small_cfg(args.full)
+    steps = args.steps or (300 if args.full else 200)
+    bundle = build_model(cfg)
+    trainer = Trainer(
+        bundle, AdamWConfig(lr=3e-3),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch),
+        TrainerConfig(total_steps=steps, ckpt_every=100,
+                      ckpt_dir="/tmp/repro_train_lm", log_every=20))
+    out = trainer.train()
+    first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
+    print(f"{cfg.name}: loss {first:.3f} -> {last:.3f} over {steps} steps "
+          f"(restarts={out['restarts']})")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import io, manager
+from .manager import CheckpointManager

@@ -1,0 +1,80 @@
+"""Checkpoint manager: rotation, latest-resume, async background writes."""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+
+from .io import load_pytree, save_pytree
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3, async_write: bool = True,
+                 host_id: int = 0):
+        self.root = root
+        self.keep = keep
+        self.async_write = async_write
+        self.host_id = host_id
+        self._pending: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------- queries
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step}")
+
+    # --------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra_meta: dict | None = None,
+             block: bool = False):
+        """Device arrays are fetched synchronously (cheap vs. train step);
+        serialization + fsync happen on a background thread."""
+        self.wait()
+        fetched = jax.tree.map(lambda x: jax.device_get(x), tree)
+        meta = dict(extra_meta or {}, step=step)
+
+        def work():
+            save_pytree(fetched, self._dir(step), host_id=self.host_id,
+                        extra_meta=meta)
+            self._gc()
+
+        if self.async_write and not block:
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def restore(self, template: Any, step: int | None = None):
+        """Returns (tree, meta) from ``step`` or the latest checkpoint."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        return load_pytree(template, self._dir(step), host_id=self.host_id)

@@ -1,0 +1,16 @@
+"""seamless-m4t-medium [audio]: enc-dec, 12L encoder + 12L decoder,
+d_model=1024 16H d_ff=4096 vocab=256206. [arXiv:2308.11596; hf]
+
+The speech frontend is a STUB (assignment): input_specs provides precomputed
+frame embeddings (seq/4 frames).  long_500k: SKIPPED (full attention).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="encdec", enc_layers=12,
+    n_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256206, head_dim=64,
+    pattern=("global",),
+    frontend="audio",
+)

@@ -1,0 +1,106 @@
+"""Uniform affine quantization primitives (paper Eqs. 1-4).
+
+Convention note: the paper's Eq. (3) computes ``z = -round(m/s) - 2^{b-1}``
+(a *signed*-grid zero point, matching the CMSIS-NN ``_s8`` kernels the paper
+wraps) while Eq. (1) clamps to the unsigned range ``[0, 2^b - 1]``.  The two
+are inconsistent as written; we follow the signed-grid convention throughout
+(grid ``[-2^{b-1}, 2^{b-1} - 1]``), which makes Q(m) = -2^{b-1} and
+Q(M) = 2^{b-1} - 1 exact.  Symmetric quantization is the special case z = 0.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+class QParams(NamedTuple):
+    """Affine quantization parameters.
+
+    ``scale`` / ``zero_point`` are either scalars (per-tensor) or arrays
+    broadcastable against the tensor being quantized (per-channel).
+    ``bits`` is static (python int) so it never triggers retracing.
+    """
+
+    scale: jax.Array
+    zero_point: jax.Array
+    bits: int = 8
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def storage_dtype(bits: int):
+    return jnp.int8 if bits <= 8 else jnp.int32
+
+
+def qparams_from_range(m: jax.Array, M: jax.Array, bits: int = 8) -> QParams:
+    """Paper Eq. (3): scale / zero-point from an observed [m, M] range."""
+    m = jnp.minimum(m, 0.0)  # range must include 0 so that 0 is exactly representable
+    M = jnp.maximum(M, 0.0)
+    scale = (M - m) / (2**bits - 1)
+    scale = jnp.maximum(scale, _EPS)
+    zero_point = (-jnp.round(m / scale) - 2 ** (bits - 1)).astype(jnp.int32)
+    return QParams(scale=scale, zero_point=zero_point, bits=bits)
+
+
+def symmetric_qparams_from_amax(amax: jax.Array, bits: int = 8) -> QParams:
+    """Symmetric special case: z = 0, scale from the absolute max."""
+    scale = jnp.maximum(amax, _EPS) / (2 ** (bits - 1) - 1)
+    return QParams(scale=scale, zero_point=jnp.zeros_like(scale, jnp.int32), bits=bits)
+
+
+def quantize(x: jax.Array, qp: QParams) -> jax.Array:
+    """Paper Eq. (1): clamp(round(x / s) + z, qmin, qmax)."""
+    q = jnp.round(x / qp.scale) + qp.zero_point
+    q = jnp.clip(q, qp.qmin, qp.qmax)
+    return q.astype(storage_dtype(qp.bits))
+
+
+def dequantize(q: jax.Array, qp: QParams, dtype=jnp.float32) -> jax.Array:
+    """Paper Eq. (4): x ~= s * (q - z)."""
+    return (q.astype(jnp.int32) - qp.zero_point).astype(dtype) * qp.scale.astype(dtype)
+
+
+def fake_quant(x: jax.Array, qp: QParams) -> jax.Array:
+    """Quantize-dequantize roundtrip (simulated integer inference)."""
+    return dequantize(quantize(x, qp), qp, dtype=x.dtype)
+
+
+def _reduce_axes(ndim: int, channel_axis: int | None):
+    if channel_axis is None:
+        return tuple(range(ndim))
+    channel_axis = channel_axis % ndim
+    return tuple(a for a in range(ndim) if a != channel_axis)
+
+
+def range_of(x: jax.Array, channel_axis: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """(min, max) per-tensor (channel_axis=None) or per-channel (keepdims)."""
+    axes = _reduce_axes(x.ndim, channel_axis)
+    return jnp.min(x, axis=axes, keepdims=channel_axis is not None), jnp.max(
+        x, axis=axes, keepdims=channel_axis is not None
+    )
+
+
+def dynamic_qparams(x: jax.Array, bits: int = 8, channel_axis: int | None = None) -> QParams:
+    """Dynamic quantization parameters: measure the range of ``x`` on the fly.
+
+    This is the paper's "dynamic" baseline - it requires ``x`` to be fully
+    materialized before its range is known (the O(b' * h) memory overhead the
+    paper's method removes).
+    """
+    m, M = range_of(x, channel_axis)
+    return qparams_from_range(m, M, bits)
+
+
+def weight_qparams(w: jax.Array, bits: int = 8, channel_axis: int | None = None) -> QParams:
+    """Weights are always quantized offline (both paper baselines and ours)."""
+    return dynamic_qparams(w, bits=bits, channel_axis=channel_axis)

@@ -1,0 +1,109 @@
+"""Calibration driver (paper Sec. 4.1 / 5.2).
+
+Runs the model in *observe* mode over a small calibration set (the paper uses
+16 images), capturing every quantized layer's pre-activations and PDQ moment
+predictions, then fits:
+
+* the static output ranges  (static-quantization baseline), and
+* the PDQ interval parameters (alpha, beta) via coverage quantiles (Eq. 13).
+
+Both baselines and our method deliberately share the same calibration data,
+exactly as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import interval as interval_mod
+from .policy import QuantSpec, as_observe
+
+# Cap on pooled deviation samples per layer (memory bound, deterministic).
+_MAX_DEV_SAMPLES = 1 << 16
+
+ApplyFn = Callable[..., Any]  # apply(params, batch, *, spec, qstate, tape) -> out
+
+
+def _subsample(a: np.ndarray, limit: int) -> np.ndarray:
+    if a.shape[0] <= limit:
+        return a
+    stride = int(np.ceil(a.shape[0] / limit))
+    return a[::stride]
+
+
+def calibrate(
+    apply_fn: ApplyFn,
+    params: Any,
+    batches: Iterable[Any],
+    spec: QuantSpec,
+) -> dict[str, dict[str, jax.Array]]:
+    """Returns the per-layer quantization state pytree used at inference."""
+    obs_spec = as_observe(spec)
+    ranges: dict[str, list[tuple[np.ndarray, np.ndarray]]] = {}
+    devs: dict[str, list[np.ndarray]] = {}
+    kinds: dict[str, str] = {}
+
+    for batch in batches:
+        tape: dict[str, Any] = {}
+        apply_fn(params, batch, spec=obs_spec, qstate={}, tape=tape)
+        for name, rec in tape.items():
+            y = np.asarray(rec["y"], np.float32)
+            kinds[name] = rec["kind"]
+            pol = spec.resolve(name)
+            # --- static range (min/max over everything but channels) ---
+            if pol.per_channel and rec["kind"] != "input":
+                axes = tuple(range(y.ndim - 1))
+                lo, hi = y.min(axis=axes), y.max(axis=axes)
+            else:
+                lo, hi = np.float32(y.min()), np.float32(y.max())
+            ranges.setdefault(name, []).append((lo, hi))
+            # --- PDQ deviations ---
+            m = rec.get("moments")
+            if m is not None:
+                mean = np.asarray(m.mean, np.float32)
+                sigma = np.sqrt(np.maximum(np.asarray(m.var, np.float32), 0.0)) + 1e-8
+                if pol.per_channel:
+                    # mean/sigma: (B, C); y: (B, pos..., C)
+                    bshape = (y.shape[0],) + (1,) * (y.ndim - 2) + (y.shape[-1],)
+                    u = (y - mean.reshape(bshape)) / sigma.reshape(bshape)
+                    u = u.reshape(-1, y.shape[-1])
+                else:
+                    bshape = (y.shape[0],) + (1,) * (y.ndim - 1)
+                    u = (y - mean.reshape(bshape)) / sigma.reshape(bshape)
+                    u = u.reshape(-1, 1)
+                devs.setdefault(name, []).append(_subsample(u, _MAX_DEV_SAMPLES))
+
+    qstate: dict[str, dict[str, jax.Array]] = {}
+    for name, rr in ranges.items():
+        los = np.stack([r[0] for r in rr])
+        his = np.stack([r[1] for r in rr])
+        entry: dict[str, jax.Array] = {
+            "static_lo": jnp.asarray(los.min(axis=0)),
+            "static_hi": jnp.asarray(his.max(axis=0)),
+        }
+        if name in devs:
+            pol = spec.resolve(name)
+            u = np.concatenate(devs[name], axis=0)
+            u = _subsample(u, 4 * _MAX_DEV_SAMPLES)
+            ip = interval_mod.calibrate_alpha_beta(
+                u, target_coverage=pol.coverage,
+                channel_axis=1 if pol.per_channel else None,
+            )
+            if not pol.per_channel:
+                ip = interval_mod.IntervalParams(ip.alpha.reshape(()), ip.beta.reshape(()))
+            else:
+                # small-sample guard: a channel's quantile from few pooled
+                # positions (e.g. dense layers: 1/row/image) undershoots the
+                # range and clips; floor each channel at the per-tensor fit.
+                ip_t = interval_mod.calibrate_alpha_beta(
+                    u, target_coverage=pol.coverage, channel_axis=None)
+                ip = interval_mod.IntervalParams(
+                    alpha=jnp.maximum(ip.alpha, ip_t.alpha),
+                    beta=jnp.maximum(ip.beta, ip_t.beta))
+            entry["alpha"] = ip.alpha
+            entry["beta"] = ip.beta
+        qstate[name] = entry
+    return qstate

@@ -1,0 +1,205 @@
+"""Probabilistic surrogate of layer pre-activation moments (paper Sec. 4.1).
+
+The surrogate assumes weights are i.i.d. Gaussian, W_ij ~ N(mu_W, sigma_W^2)
+(per-tensor) or per output channel (per-channel).  Then for y = W x:
+
+    E[y_j]   = mu_W[j]      * sum_i x_i        (Eq. 8)
+    Var[y_j] = sigma_W[j]^2 * sum_i x_i^2      (Eq. 9)
+
+so a single O(d) pass over the *input* prices the whole output's dynamic
+range - the output never needs to be materialized at higher precision.
+
+For convolutions, per-output-position estimates come from windowed sums of x
+and x^2 (Eqs. 10-11), computed here as a convolution with a ones-kernel over
+the channel-summed input.  Per-position / per-token estimates are aggregated
+into per-tensor or per-channel statistics with the law of total variance
+(Eq. 12; see DESIGN.md for the typo reconciliation):
+
+    E[y]   = mean_pos E[y_pos]
+    Var[y] = mean_pos Var[y_pos] + mean_pos (E[y_pos] - E[y])^2
+
+The ``gamma`` *sampling stride* subsamples positions entering the estimate -
+quadratic cost reduction for conv feature maps, linear for token sequences.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class Moments(NamedTuple):
+    """Predicted output moments. Shapes:
+
+    per-tensor:  mean/var are (batch,)            - one interval per example
+    per-channel: mean/var are (batch, channels)   - one interval per channel
+    """
+
+    mean: jax.Array
+    var: jax.Array
+
+    @property
+    def std(self) -> jax.Array:
+        return jnp.sqrt(jnp.maximum(self.var, 0.0))
+
+
+class WeightStats(NamedTuple):
+    """Offline per-layer weight statistics (computed once at deploy time)."""
+
+    mu: jax.Array   # () per-tensor or (out_channels,) per-channel
+    var: jax.Array  # same shape
+    fan_in: int
+
+
+def weight_stats(w: jax.Array, reduce_axes: tuple[int, ...], per_channel: bool) -> WeightStats:
+    """Gaussian fit of the weights. ``reduce_axes`` are the fan-in axes.
+
+    For a linear layer with w of shape (d, h), reduce_axes=(0,) keeps the
+    output-channel axis.  per_channel=False additionally pools channels.
+    """
+    axes = tuple(range(w.ndim)) if not per_channel else reduce_axes
+    mu = jnp.mean(w, axis=axes)
+    var = jnp.var(w, axis=axes)
+    fan_in = 1
+    for a in reduce_axes:
+        fan_in *= w.shape[a]
+    return WeightStats(mu=mu, var=var, fan_in=int(fan_in))
+
+
+def _aggregate(mean_pos: jax.Array, var_pos: jax.Array, axes: tuple[int, ...]) -> Moments:
+    """Law-of-total-variance aggregation over position axes (Eq. 12)."""
+    mean = jnp.mean(mean_pos, axis=axes)
+    var = jnp.mean(var_pos, axis=axes) + jnp.mean(
+        (mean_pos - jnp.expand_dims(mean, axes)) ** 2, axis=axes
+    )
+    return Moments(mean=mean, var=var)
+
+
+# ---------------------------------------------------------------------------
+# Linear / token-stack layers (Eqs. 8-9)
+# ---------------------------------------------------------------------------
+
+
+def linear_moments(
+    x: jax.Array,
+    ws: WeightStats,
+    per_channel: bool,
+    gamma: int = 1,
+) -> Moments:
+    """Surrogate moments of y = x @ W for x of shape (batch, ..., d).
+
+    Any axes between batch and the feature axis are "positions" (tokens,
+    pixels); ``gamma`` subsamples them with a stride.  Cost: O(d) per sampled
+    position, independent of the output width h - this is the paper's
+    headline complexity result.
+    """
+    if x.ndim > 2 and gamma > 1:
+        x = x[:, ::gamma]
+    s1 = jnp.sum(x, axis=-1)                  # (batch, pos...)
+    s2 = jnp.sum(jnp.square(x), axis=-1)      # (batch, pos...)
+    pos_axes = tuple(range(1, s1.ndim))
+    if per_channel:
+        mean_pos = s1[..., None] * ws.mu      # (batch, pos..., h)
+        var_pos = s2[..., None] * ws.var
+        if pos_axes:
+            return _aggregate(mean_pos, var_pos, pos_axes)
+        return Moments(mean=mean_pos, var=var_pos)
+    mean_pos = s1 * ws.mu                     # scalar weight stats
+    var_pos = s2 * ws.var
+    if pos_axes:
+        return _aggregate(mean_pos, var_pos, pos_axes)
+    return Moments(mean=mean_pos, var=var_pos)
+
+
+# ---------------------------------------------------------------------------
+# Convolutions (Eqs. 10-11), NHWC layout
+# ---------------------------------------------------------------------------
+
+
+def conv_window_sums(
+    x: jax.Array,
+    kernel_hw: tuple[int, int],
+    stride: tuple[int, int],
+    padding: str,
+    gamma: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """Windowed sums S1 = sum_window x and S2 = sum_window x^2, NHWC input.
+
+    Channel-independent: we first pool channels, then convolve with a ones
+    kernel.  ``gamma`` multiplies the stride (the paper's sampling stride:
+    positions sampled drop as gamma^-2).
+    """
+    kh, kw = kernel_hw
+    sh, sw = stride
+    xs = jnp.sum(x, axis=-1, keepdims=True)            # (N, H, W, 1)
+    xs2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    ones = jnp.ones((kh, kw, 1, 1), x.dtype)
+    dn = lax.conv_dimension_numbers(xs.shape, ones.shape, ("NHWC", "HWIO", "NHWC"))
+    strides = (sh * gamma, sw * gamma)
+    s1 = lax.conv_general_dilated(xs, ones, strides, padding, dimension_numbers=dn)
+    s2 = lax.conv_general_dilated(xs2, ones, strides, padding, dimension_numbers=dn)
+    return s1[..., 0], s2[..., 0]                      # (N, H', W')
+
+
+def conv_moments(
+    x: jax.Array,
+    ws: WeightStats,
+    kernel_hw: tuple[int, int],
+    stride: tuple[int, int],
+    padding: str,
+    per_channel: bool,
+    gamma: int = 1,
+) -> Moments:
+    """Surrogate moments for conv pre-activations (Eqs. 10-12)."""
+    s1, s2 = conv_window_sums(x, kernel_hw, stride, padding, gamma)  # (N, H', W')
+    if per_channel:
+        mean_pos = s1[..., None] * ws.mu   # (N, H', W', C_out)
+        var_pos = s2[..., None] * ws.var
+        return _aggregate(mean_pos, var_pos, (1, 2))
+    mean_pos = s1 * ws.mu
+    var_pos = s2 * ws.var
+    return _aggregate(mean_pos, var_pos, (1, 2))
+
+
+def empirical_moments(y: jax.Array, per_channel: bool) -> Moments:
+    """Ground-truth moments of an observed pre-activation tensor.
+
+    Used by tests / calibration to validate the surrogate: y has shape
+    (batch, pos..., channels).
+    """
+    if per_channel:
+        axes = tuple(range(1, y.ndim - 1))
+    else:
+        axes = tuple(range(1, y.ndim))
+    return Moments(mean=jnp.mean(y, axis=axes), var=jnp.var(y, axis=axes))
+
+
+def depthwise_conv_moments(
+    x: jax.Array,
+    ws: WeightStats,
+    kernel_hw: tuple[int, int],
+    stride: tuple[int, int],
+    padding: str,
+    per_channel: bool,
+    gamma: int = 1,
+) -> Moments:
+    """Surrogate moments for DEPTHWISE conv: output channel v sees only
+    input channel v, so windowed sums are computed per channel (p=1 in
+    Eqs. 10-11)."""
+    kh, kw = kernel_hw
+    sh, sw = stride
+    C = x.shape[-1]
+    ones = jnp.ones((kh, kw, 1, C), x.dtype)
+    dn = lax.conv_dimension_numbers(x.shape, ones.shape, ("NHWC", "HWIO", "NHWC"))
+    strides = (sh * gamma, sw * gamma)
+    s1 = lax.conv_general_dilated(x, ones, strides, padding,
+                                  dimension_numbers=dn, feature_group_count=C)
+    s2 = lax.conv_general_dilated(jnp.square(x), ones, strides, padding,
+                                  dimension_numbers=dn, feature_group_count=C)
+    mean_pos = s1 * ws.mu          # (N, H', W', C) * () or (C,)
+    var_pos = s2 * ws.var
+    if per_channel:
+        return _aggregate(mean_pos, var_pos, (1, 2))
+    return _aggregate(mean_pos, var_pos, (1, 2, 3))

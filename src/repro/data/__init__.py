@@ -1,0 +1,2 @@
+from . import corruptions, pipeline
+from .pipeline import DataConfig, Prefetcher, make_source

@@ -1,0 +1,60 @@
+"""Fault handling at fleet scale: elastic resharding + failure bookkeeping.
+
+On a real cluster the control plane (borg/k8s) replaces failed hosts; the
+framework's job is to (a) checkpoint in a mesh-agnostic layout, (b) restore
+onto whatever mesh the restarted job gets, and (c) flag stragglers so the
+scheduler can drain them.  This module implements (b) and the bookkeeping
+for (c); (a) is checkpoint/io.py's full-logical-array layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_state(state: Any, target_mesh: Mesh, spec_tree: Any) -> Any:
+    """Elastic scaling: lay a (restored, host-local numpy) state out onto a
+    NEW mesh - the device count may differ from the mesh that wrote the
+    checkpoint.  Sharding specs are logical (axis names), so they transfer."""
+    def place(x, spec):
+        return jax.device_put(np.asarray(x), NamedSharding(target_mesh, spec))
+
+    return jax.tree.map(place, state, spec_tree,
+                        is_leaf=lambda x: isinstance(x, (np.ndarray, jax.Array)))
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """EMA step-time tracker: flags steps (hosts) slower than factor x EMA.
+
+    On a fleet, per-host step times arrive via the coordination service;
+    here the single-process loop feeds its own timings (tests inject
+    synthetic delays)."""
+    factor: float = 3.0
+    ema: float | None = None
+    flagged: int = 0
+    history: list = dataclasses.field(default_factory=list)
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+        self.flagged += int(slow)
+        self.history.append((dt, slow))
+        return slow
+
+
+@dataclasses.dataclass
+class FailureLog:
+    events: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, kind: str, detail: str = ""):
+        self.events.append({"t": time.time(), "step": step, "kind": kind,
+                            "detail": detail})
+
+    def count(self, kind: str | None = None) -> int:
+        return len([e for e in self.events if kind is None or e["kind"] == kind])

@@ -1,0 +1,190 @@
+"""Sharding rules: param-name conventions -> PartitionSpecs.
+
+Strategy (single pod mesh ('data','model'); multi-pod adds a leading 'pod'
+axis used as pure DP for params):
+
+  * TP: the "wide" dim of every projection shards over 'model' (heads, ffn,
+    vocab, experts).
+  * FSDP/ZeRO-3: the other matrix dim shards over 'data'; optimizer states
+    inherit the param specs.
+  * EP: expert-stacked (E, ., .) tensors shard E over 'model'.
+  * Vectors (norms, biases, A_log...) replicate.
+  * lax.scan block stacking / int8-weight records add leading dims: rules
+    are right-aligned (extra leading dims replicate).
+
+Activation/batch/cache shardings:
+  * batch dims shard over ('pod','data') when divisible;
+  * decode caches shard batch over DP and heads over 'model';
+  * long-context (batch 1) caches shard the *sequence* dim over 'data'
+    (context parallelism) and heads over 'model'.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+# (regex on the param path, right-aligned spec entries)
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/embedding$", ("model", "data")),
+    # expert stacks (E, d_in, d_out): EP over model + FSDP over data
+    (r"we_gate$", ("model", "data", None)),
+    (r"we_up$", ("model", "data", None)),
+    (r"we_down$", ("model", None, "data")),
+    (r"router$", (None, None)),
+    # column-parallel (d_model -> wide)
+    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)(/q)?$", ("data", "model")),
+    # row-parallel (wide -> d_model)
+    (r"(wo|w_down|out_proj|wk_b|wv_b)(/q)?$", ("model", "data")),
+    # low-rank down-projections: small output, shard input dim only
+    (r"(wq_a|wkv_a)(/q)?$", ("data", None)),
+    # quantized-record auxiliaries: per-output-channel vectors
+    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)/scale$", ("model",)),
+    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)/colsum$", (None, "model")),
+    (r"(wo|w_down|out_proj|wk_b|wv_b)/scale$", ("data",)),
+    (r"(wo|w_down|out_proj|wk_b|wv_b)/colsum$", (None, "data")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return int(mesh.shape[entry])
+
+
+def spec_for_param(path: str, leaf, mesh=None) -> P:
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if ndim == 0:
+        return P()
+    for pat, entries in _RULES:
+        if re.search(pat, path):
+            entries = tuple(entries)
+            if len(entries) > ndim:       # e.g. scalar 'scale' on tiny layers
+                entries = entries[-ndim:]
+            pad = (None,) * (ndim - len(entries))
+            full = list(pad + entries)
+            if mesh is not None:
+                # drop axes the dim doesn't divide (e.g. vocab 50280 % 16)
+                for i, e in enumerate(full):
+                    if e is not None and leaf.shape[i] % _axis_size(mesh, e) != 0:
+                        full[i] = None
+            return P(*full)
+    return P(*((None,) * ndim))           # vectors & unknowns replicate
+
+
+def param_specs(params, mesh=None) -> Any:
+    leaves, treedef = tree_flatten_with_path(params)
+    specs = [spec_for_param(_path_str(p), v, mesh) for p, v in leaves]
+    return tree_unflatten(jax.tree.structure(params), specs)
+
+
+def named(mesh: Mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(mesh: Mesh, batch_tree, seq_over_model: bool = False) -> Any:
+    """Shard every batch leaf's leading (batch) dim over the DP axes; with
+    seq_over_model, also shard dim 1 (sequence) over 'model' (SP prefill)."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    model_size = mesh.shape["model"]
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        entries = [None] * leaf.ndim
+        if leaf.shape[0] % dp_size == 0:
+            entries[0] = dp
+        if (seq_over_model and leaf.ndim >= 2
+                and leaf.shape[1] % model_size == 0):
+            entries[1] = "model"
+        return P(*entries)
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_spec(mesh: Mesh, caches, batch: int,
+               seq_over_model: bool = False) -> Any:
+    """Decode caches: DP on batch when divisible, else context-parallel on
+    the sequence dim; KV-head / state dims over 'model' when divisible."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    model_size = mesh.shape["model"]
+    data_size = mesh.shape["data"]
+
+    # core rank of each cache leaf (batch-leading); scan-stacked block caches
+    # carry extra leading dims which replicate (right-aligned rules).
+    core_rank = {"k": 4, "v": 4, "k_scale": 3, "v_scale": 3, "ckv": 3,
+                 "krope": 3, "state": 4, "conv": 3, "cross_k": 4,
+                 "cross_v": 4, "pos": 2, "len": 1}
+
+    leaves, _ = tree_flatten_with_path(caches)
+    specs = []
+    for path, leaf in leaves:
+        name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        if nd == 0 or name not in core_rank:
+            specs.append(P(*((None,) * nd)))
+            continue
+        core = core_rank[name]
+        lead = nd - core
+        shape = leaf.shape[lead:]
+        e: list = [None] * core
+        batch_sharded = shape[0] % dp_size == 0 and shape[0] > 1
+        if batch_sharded:
+            e[0] = dp
+        seq_ok = (not batch_sharded) and core >= 2 and shape[1] % data_size == 0
+        sp_ok = seq_over_model and core >= 2 and shape[1] % model_size == 0
+        if name in ("k", "v"):
+            if sp_ok:
+                e[1] = "model"                # sequence-parallel prefill
+            elif shape[2] % model_size == 0:
+                e[2] = "model"
+            if seq_ok:
+                e[1] = "data"                 # context parallel (long_500k)
+        elif name in ("k_scale", "v_scale"):
+            if sp_ok:
+                e[1] = "model"
+            elif shape[2] % model_size == 0:
+                e[2] = "model"
+            if seq_ok:
+                e[1] = "data"
+        elif name in ("ckv", "krope"):
+            if sp_ok:
+                e[1] = "model"
+            elif seq_ok:
+                e[1] = "data"
+        elif name == "state":
+            if shape[1] % model_size == 0:
+                e[1] = "model"
+        elif name == "conv":
+            if shape[2] % model_size == 0:
+                e[2] = "model"
+        elif name in ("cross_k", "cross_v"):
+            if shape[2] % model_size == 0:
+                e[2] = "model"
+        elif name == "pos":
+            if sp_ok:
+                e[1] = "model"
+            elif seq_ok:
+                e[1] = "data"
+        specs.append(P(*(((None,) * lead) + tuple(e))))
+    return tree_unflatten(jax.tree.structure(caches), specs)

@@ -1,0 +1,2 @@
+from . import ops, ref
+__all__ = ["ops", "ref"]

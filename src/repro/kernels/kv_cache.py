@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: flash-decode attention over an int8-quantized KV cache.
+
+Beyond-paper extension (DESIGN.md Sec. 2): the KV cache is stored int8 with
+PDQ-predicted per-token-per-head scales, halving (vs bf16) the decode
+memory-roofline term.  The kernel streams int8 K/V tiles HBM -> VMEM,
+dequantizes in-register, and runs the online-softmax recurrence, so the
+fp-dequantized cache never exists in HBM.
+
+Layout: one query token, grouped-query attention (H = G * Hkv).
+Grid (Hkv, S/bs); m/l/acc live in VMEM scratch across the S dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, scale: float):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    offs = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = offs < length                                        # (1, bs)
+
+    qb = q_ref[0]                                               # (G, Dh)
+    kf = k_ref[0].astype(jnp.float32) * ks_ref[...].reshape(bs, 1)   # (bs, Dh)
+    vf = v_ref[0].astype(jnp.float32) * vs_ref[...].reshape(bs, 1)
+
+    logits = jnp.dot(qb, kf.T, preferred_element_type=jnp.float32) * scale  # (G, bs)
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_prev = m_ref[...]                                         # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)      # (G, bs)
+    corr = jnp.exp(m_prev - m_new)                              # (G, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, vf, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attend_i8kv_p(
+    q: jax.Array,        # (Hkv, G, Dh) f32
+    k_q: jax.Array,      # (Hkv, S, Dh) int8
+    v_q: jax.Array,      # (Hkv, S, Dh) int8
+    k_scale: jax.Array,  # (Hkv, S) f32
+    v_scale: jax.Array,  # (Hkv, S) f32
+    length: jax.Array,   # (1, 1) int32
+    *,
+    bs: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    Hkv, G, Dh = q.shape
+    S = k_q.shape[1]
+    bs = min(bs, S)
+    n_s = S // bs
+    grid = (Hkv, n_s)
+    kern = functools.partial(_kernel, n_s=n_s, bs=bs, scale=1.0 / (Dh ** 0.5))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, s: (0, 0)),          # length
+            pl.BlockSpec((1, G, Dh), lambda h, s: (h, 0, 0)),   # q
+            pl.BlockSpec((1, bs, Dh), lambda h, s: (h, s, 0)),  # k
+            pl.BlockSpec((1, bs, Dh), lambda h, s: (h, s, 0)),  # v
+            pl.BlockSpec((1, bs), lambda h, s: (h, s)),         # k_scale
+            pl.BlockSpec((1, bs), lambda h, s: (h, s)),         # v_scale
+        ],
+        out_specs=pl.BlockSpec((1, G, Dh), lambda h, s: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Hkv, G, Dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k_q, v_q, k_scale, v_scale)

@@ -1,0 +1,208 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy (``set_impl``):
+  'auto'   - real Pallas kernel on TPU, jnp reference on other backends
+             (interpret-mode Pallas is a correctness tool, not a fast path).
+  'kernel' - force the Pallas kernel (interpret=True off-TPU). Used by tests.
+  'ref'    - force the pure-jnp oracle.
+
+All wrappers accept arbitrary leading batch dims and handle padding to the
+kernel's block multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .act_stats import act_stats_p
+from .kv_cache import decode_attend_i8kv_p
+from .quantize import dequantize_p, quantize_p
+from .w8a8_matmul import w8a8_matmul_p
+
+_IMPL = "auto"
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("auto", "kernel", "ref")
+    _IMPL = impl
+
+
+def _use_kernel() -> bool:
+    if _IMPL == "ref":
+        return False
+    if _IMPL == "kernel":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int, value=0):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _norm_row(a, M, dtype):
+    """Broadcast a scalar / (M,) / (M,1) quantity to (M, 1)."""
+    a = jnp.asarray(a, dtype)
+    if a.ndim == 0:
+        a = jnp.full((M, 1), a)
+    return a.reshape(M, 1)
+
+
+# ---------------------------------------------------------------------------
+
+
+def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
+                colsum=None, block=(128, 128, 128)):
+    """y = s_x*s_w*(x_q @ w_q - z_x*colsum); requantized int8 iff s_out given.
+
+    x_q: (..., K) int8; w_q: (K, N) int8. s_x/z_x/s_out/z_out: scalar, (...)
+    or (..., 1) per-row; s_w: scalar or (N,) per-channel.
+    """
+    lead = x_q.shape[:-1]
+    K = x_q.shape[-1]
+    N = w_q.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x_q.reshape(M, K)
+    s_w2 = jnp.asarray(s_w, jnp.float32)
+    s_w2 = jnp.broadcast_to(s_w2.reshape(1, -1) if s_w2.ndim else s_w2, (1, N)).reshape(1, N)
+    requant = s_out is not None
+    sx = _norm_row(s_x, M, jnp.float32)
+    zx = _norm_row(z_x, M, jnp.int32)
+    so = _norm_row(s_out if requant else 1.0, M, jnp.float32)
+    zo = _norm_row(z_out if requant else 0, M, jnp.int32)
+
+    if not _use_kernel():
+        y = ref.w8a8_matmul_ref(x2, w_q, sx, zx, s_w2,
+                                so if requant else None, zo if requant else None)
+        return y.reshape(*lead, N)
+
+    if colsum is None:
+        colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+    colsum = colsum.reshape(1, N)
+    bm, bn, bk = block
+    xp = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w_q, 0, bk), 1, bn)
+    Mp = xp.shape[0]
+    pads = dict(axis=0, mult=bm)
+    y = w8a8_matmul_p(
+        xp, wp,
+        _pad_to(sx, **pads, value=1.0), _pad_to(zx, **pads),
+        _pad_to(s_w2, 1, bn, value=1.0), _pad_to(colsum, 1, bn),
+        _pad_to(so, **pads, value=1.0), _pad_to(zo, **pads),
+        requant=requant, block=block, interpret=_interpret(),
+    )
+    return y[:M, :N].reshape(*lead, N)
+
+
+def act_stats(x, gamma: int = 1, *, block=(256, 512)):
+    """Fused (sum x, sum x^2) over the last axis; gamma subsamples the
+    second-to-last ("position") axis.  Returns arrays shaped like x[..., 0]."""
+    if x.ndim > 2 and gamma > 1:
+        x = x[..., ::gamma, :]
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, K)
+    if not _use_kernel():
+        s1, s2 = ref.act_stats_ref(x2)
+        return s1.reshape(lead), s2.reshape(lead)
+    bm, bk = block
+    xp = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    s1, s2 = act_stats_p(xp, block=(bm, bk), interpret=_interpret())
+    return s1[:M].reshape(lead), s2[:M].reshape(lead)
+
+
+def quantize(x, scale, zero_point, *, per_channel: bool = False):
+    """Affine int8 quantize. scale/zp: per-row (broadcast over last axis) by
+    default, or per-channel (last axis) with per_channel=True."""
+    lead = x.shape[:-1]
+    N = x.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, N)
+    if per_channel:
+        s = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, N))
+        z = jnp.broadcast_to(jnp.asarray(zero_point, jnp.int32).reshape(1, -1), (1, N))
+    else:
+        s = _norm_row(scale, M, jnp.float32)
+        z = _norm_row(zero_point, M, jnp.int32)
+    if not _use_kernel():
+        return ref.quantize_ref(x2, s, z).reshape(*lead, N)
+    xp = _pad_to(_pad_to(x2, 0, 256), 1, 256)
+    sp = _pad_to(s, 1, 256, value=1.0) if per_channel else _pad_to(s, 0, 256, value=1.0)
+    zp = _pad_to(z, 1, 256) if per_channel else _pad_to(z, 0, 256)
+    q = quantize_p(xp, sp, zp, interpret=_interpret())
+    return q[:M, :N].reshape(*lead, N)
+
+
+def dequantize(q, scale, zero_point, *, per_channel: bool = False, out_dtype=jnp.float32):
+    lead = q.shape[:-1]
+    N = q.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    q2 = q.reshape(M, N)
+    if per_channel:
+        s = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, N))
+        z = jnp.broadcast_to(jnp.asarray(zero_point, jnp.int32).reshape(1, -1), (1, N))
+    else:
+        s = _norm_row(scale, M, jnp.float32)
+        z = _norm_row(zero_point, M, jnp.int32)
+    if not _use_kernel():
+        return ref.dequantize_ref(q2, s, z, out_dtype).reshape(*lead, N)
+    qp_ = _pad_to(_pad_to(q2, 0, 256), 1, 256)
+    sp = _pad_to(s, 1, 256, value=1.0) if per_channel else _pad_to(s, 0, 256, value=1.0)
+    zp_ = _pad_to(z, 1, 256) if per_channel else _pad_to(z, 0, 256)
+    y = dequantize_p(qp_, sp, zp_, out_dtype=out_dtype, interpret=_interpret())
+    return y[:M, :N].reshape(*lead, N).astype(out_dtype)
+
+
+def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256):
+    """Batched flash-decode over an int8 KV cache.
+
+    q: (B, H, Dh) f32; k_q/v_q: (B, S, Hkv, Dh) int8;
+    k_scale/v_scale: (B, S, Hkv) f32; length: (B,) int32.
+    Returns (B, H, Dh) f32.
+    """
+    B, H, Dh = q.shape
+    S, Hkv = k_q.shape[1], k_q.shape[2]
+    G = H // Hkv
+
+    if not _use_kernel():
+        return jax.vmap(ref.decode_attend_i8kv_ref)(q, k_q, v_q, k_scale, v_scale, length)
+
+    def one(q1, k1, v1, ks1, vs1, len1):
+        qh = q1.reshape(Hkv, G, Dh)
+        k_t = jnp.transpose(k1, (1, 0, 2))      # (Hkv, S, Dh)
+        v_t = jnp.transpose(v1, (1, 0, 2))
+        ks_t = jnp.transpose(ks1, (1, 0))        # (Hkv, S)
+        vs_t = jnp.transpose(vs1, (1, 0))
+        bss = min(bs, S)
+        k_t = _pad_to(k_t, 1, bss)
+        v_t = _pad_to(v_t, 1, bss)
+        ks_t = _pad_to(ks_t, 1, bss, value=1.0)
+        vs_t = _pad_to(vs_t, 1, bss, value=1.0)
+        o = decode_attend_i8kv_p(qh, k_t, v_t, ks_t, vs_t,
+                                 len1.reshape(1, 1).astype(jnp.int32),
+                                 bs=bss, interpret=_interpret())
+        return o.reshape(H, Dh)
+
+    return jax.vmap(one)(q, k_q, v_q, k_scale, v_scale, length)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: kernel tests sweep shapes/dtypes and
+assert_allclose against these references (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def w8a8_matmul_ref(
+    x_q: jax.Array,        # (M, K) int8
+    w_q: jax.Array,        # (K, N) int8
+    s_x: jax.Array,        # () or (M, 1) float32 activation scale
+    z_x: jax.Array,        # () or (M, 1) int32 activation zero-point
+    s_w: jax.Array,        # () or (1, N) float32 weight scale (symmetric, z_w = 0)
+    s_out: jax.Array | None = None,   # () or (M, 1): requantized int8 output
+    z_out: jax.Array | None = None,
+) -> jax.Array:
+    """int8 x int8 -> int32 matmul with dequant (or requant) epilogue.
+
+    y_fp = s_x * s_w * ( x_q @ w_q  -  z_x * colsum(w_q) )
+    if (s_out, z_out) given: y_q = clamp(round(y_fp / s_out) + z_out, -128, 127)
+    """
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)   # (1, N)
+    acc = acc - z_x.astype(jnp.int32) * colsum
+    y = acc.astype(jnp.float32) * (s_x.astype(jnp.float32) * s_w.astype(jnp.float32))
+    if s_out is None:
+        return y
+    q = jnp.round(y / s_out) + z_out
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def act_stats_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused row moments: s1 = sum_k x, s2 = sum_k x^2 for x (M, K) -> (M,), (M,)."""
+    x = x.astype(jnp.float32)
+    return jnp.sum(x, axis=-1), jnp.sum(jnp.square(x), axis=-1)
+
+
+def quantize_ref(x: jax.Array, scale: jax.Array, zero_point: jax.Array) -> jax.Array:
+    """Affine int8 quantize: clamp(round(x/scale) + z, -128, 127)."""
+    q = jnp.round(x.astype(jnp.float32) / scale) + zero_point
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, zero_point: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.int32) - zero_point).astype(dtype) * scale.astype(dtype)
+
+
+def decode_attend_i8kv_ref(
+    q: jax.Array,          # (H, Dh) float32 - one query token, H heads
+    k_q: jax.Array,        # (S, Hkv, Dh) int8 quantized keys
+    v_q: jax.Array,        # (S, Hkv, Dh) int8 quantized values
+    k_scale: jax.Array,    # (S, Hkv) float32
+    v_scale: jax.Array,    # (S, Hkv)
+    length: jax.Array,     # () int32 - valid prefix of the cache
+) -> jax.Array:
+    """Flash-decode oracle with an int8 (symmetric, per-token-per-head) KV cache."""
+    S, Hkv, Dh = k_q.shape
+    H = q.shape[0]
+    groups = H // Hkv
+    k = k_q.astype(jnp.float32) * k_scale[..., None]
+    v = v_q.astype(jnp.float32) * v_scale[..., None]
+    k = jnp.repeat(k, groups, axis=1)          # (S, H, Dh)
+    v = jnp.repeat(v, groups, axis=1)
+    logits = jnp.einsum("hd,shd->hs", q, k) / jnp.sqrt(Dh).astype(jnp.float32)
+    mask = jnp.arange(S) < length
+    logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hs,shd->hd", p, v)

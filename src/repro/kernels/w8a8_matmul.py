@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: int8 x int8 -> int32 matmul with PDQ requant epilogue.
+
+The PDQ-critical property: the output requantization scale ``s_out`` is an
+*input* to the kernel (predicted by the surrogate before the matmul runs),
+so the int32 MXU accumulator is collapsed to int8 inside the epilogue and
+the fp32/bf16 output tile never round-trips through HBM.  A dynamic-quant
+epilogue cannot do this - it needs the full output materialized to find its
+range first (the paper's O(b' * h) overhead, transposed to HBM traffic).
+
+Tiling: (bm, bn, bk) = (128, 128, 128) by default - MXU-aligned; the int32
+accumulator lives in VMEM scratch across the K grid dimension.
+
+Zero-point convention: activations are affine (z_x), weights symmetric
+(z_w = 0, standard practice), so
+
+    y = s_x * s_w * (x_q @ w_q - z_x * colsum(w_q)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, sx_ref, zx_ref, sw_ref, colsum_ref, sout_ref, zout_ref,
+            o_ref, acc_ref, *, n_k: int, requant: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...] - zx_ref[...] * colsum_ref[...]          # (bm, bn)
+        y = acc.astype(jnp.float32) * (sx_ref[...] * sw_ref[...])
+        if requant:
+            q = jnp.round(y / sout_ref[...]) + zout_ref[...].astype(jnp.float32)
+            o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+        else:
+            o_ref[...] = y.astype(o_ref.dtype)
+
+
+def w8a8_matmul_p(
+    x_q: jax.Array,       # (M, K) int8
+    w_q: jax.Array,       # (K, N) int8
+    s_x: jax.Array,       # (M, 1) f32
+    z_x: jax.Array,       # (M, 1) i32
+    s_w: jax.Array,       # (1, N) f32
+    colsum: jax.Array,    # (1, N) i32  (precomputed at weight-deploy time)
+    s_out: jax.Array,     # (M, 1) f32  (ignored unless requant)
+    z_out: jax.Array,     # (M, 1) i32
+    *,
+    requant: bool,
+    block: tuple[int, int, int] = (128, 128, 128),
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Raw pallas call; all dims must already be multiples of the block."""
+    M, K = x_q.shape
+    _, N = w_q.shape
+    bm, bn, bk = block
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+
+    kern = functools.partial(_kernel, n_k=n_k, requant=requant)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s_x
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # z_x
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # s_w
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # colsum
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s_out
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # z_out
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8 if requant else out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, s_x, z_x, s_w, colsum, s_out, z_out)

@@ -1,0 +1,219 @@
+"""Scaled HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once, which
+undercounts lax.scan-heavy programs (layer stacks, chunked attention, loss
+chunks) by their trip counts.  This module re-derives per-device costs from
+the partitioned HLO text with loop-trip scaling:
+
+  * computations are parsed into (name -> ops) blocks;
+  * each ``while`` op contributes scale(body) += scale(parent) * trip, where
+    the trip count is recovered from the largest integer constant in the
+    loop condition computation (how lax.scan bounds lower);
+  * matmul FLOPs come from ``dot`` ops: 2 * prod(result) * K, with K read
+    from lhs_contracting_dims;
+  * collective payload bytes use the result shapes of all-reduce (x2,
+    ring), all-gather, reduce-scatter, all-to-all, collective-permute.
+
+Everything is per-device (the partitioned module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_ATTRS = ("body=", "condition=", "to_apply=", "calls=")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "u4": 1, "s4": 1, "token": 0}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class Costs:
+    dot_flops: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def _shape_elems_bytes(tok: str) -> tuple[int, int]:
+    m = _SHAPE.match(tok)
+    if not m:
+        return 0, 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if stripped == "}" or stripped.startswith("} //"):
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_HEADER.match(s)
+            if m:
+                return m.group(1)
+    return None
+
+
+def _callees(line: str) -> list[tuple[str, str]]:
+    """(attr, computation) references on an op line."""
+    out = []
+    for attr in _CALL_ATTRS:
+        for m in re.finditer(re.escape(attr) + r"%?([\w\.\-_]+)", line):
+            out.append((attr.rstrip("="), m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        for name in m.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+def _trip_count(cond_ops: list[str]) -> int:
+    best = 1
+    for line in cond_ops:
+        m = re.search(r"constant\((\d+)\)", line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.*)$")
+_OPERANDS_RE = re.compile(r"dot\(([^)]*)\)")
+
+
+def _result_dims(rhs: str) -> list[int] | None:
+    m = _SHAPE.search(rhs)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _symbol_table(ops: list[str]) -> dict[str, list[int]]:
+    """op name -> result dims (first shape after '='), incl. parameters."""
+    table: dict[str, list[int]] = {}
+    for line in ops:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        dims = _result_dims(m.group(2))
+        if dims is not None:
+            table[m.group(1)] = dims
+    return table
+
+
+def _dot_flops(line: str, table: dict[str, list[int]]) -> float:
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    res_dims = _result_dims(m.group(2))
+    if res_dims is None:
+        return 0.0
+    res = 1
+    for d in res_dims:
+        res *= d
+    # lhs operand: first argument of dot(...); shape inline or via symbol
+    lhs_dims = None
+    mo = _OPERANDS_RE.search(line)
+    if mo:
+        first = mo.group(1).split(",")[0].strip()
+        ms = _SHAPE.search(first)
+        if ms:
+            lhs_dims = [int(d) for d in ms.group(2).split(",") if d]
+        else:
+            name = first.lstrip("%")
+            lhs_dims = table.get(name)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    K = 1
+    if lhs_dims and mc is not None:
+        for idx in mc.group(1).split(","):
+            if idx:
+                K *= lhs_dims[int(idx)]
+    return 2.0 * res * K
+
+
+def analyze(hlo: str) -> Costs:
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    scales: dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None:
+        return Costs()
+    scales[entry] = 1.0
+
+    # propagate scales breadth-first (HLO call graphs are acyclic)
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for line in comps.get(c, ()):
+            callees = _callees(line)
+            trip = 1
+            if " while(" in line or line.startswith("while") or "= while" in line:
+                cond = next((n for a, n in callees if a == "condition"), None)
+                if cond is not None:
+                    trip = _trip_count(comps.get(cond, []))
+            for attr, name in callees:
+                if name not in comps:
+                    continue
+                mult = trip if attr == "body" else 1
+                scales[name] = scales.get(name, 0.0) + scales[c] * mult
+                if name not in seen:
+                    seen.add(name)
+                    order.append(name)
+
+    costs = Costs()
+    for c, ops in comps.items():
+        s = scales.get(c, 0.0)
+        if s == 0.0:
+            continue
+        table = _symbol_table(ops)
+        for line in ops:
+            if " dot(" in line:
+                costs.dot_flops += s * _dot_flops(line, table)
+            else:
+                for kind in _COLLECTIVES:
+                    if f" {kind}(" in line or f"{kind}-start(" in line:
+                        shapes = _SHAPE.findall(line)
+                        if shapes:
+                            dt, dims = shapes[0]
+                            n = 1
+                            for d in dims.split(","):
+                                if d:
+                                    n *= int(d)
+                            b = n * _DTYPE_BYTES.get(dt, 4)
+                            if kind == "all-reduce":
+                                b *= 2
+                            costs.collective_bytes[kind] = (
+                                costs.collective_bytes.get(kind, 0.0) + s * b)
+                        break
+    return costs

@@ -1,0 +1,45 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; everything else
+sees the real device count).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    # dry-run host platform exposes 512 placeholder devices; the single-pod
+    # mesh uses the first 256 of them.
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int | None = None):
+    """Small mesh over whatever devices exist (tests / CPU smoke runs)."""
+    n = jax.device_count()
+    if data is None and model is None:
+        model = 1
+        data = n
+    elif data is None:
+        data = n // model
+    elif model is None:
+        model = n // data
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_info(mesh) -> dict:
+    return {
+        "axis_names": list(mesh.axis_names),
+        "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        "n_devices": int(np.prod([mesh.shape[a] for a in mesh.axis_names])),
+    }

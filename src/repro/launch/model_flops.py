@@ -1,0 +1,84 @@
+"""Analytic MODEL_FLOPS per (arch x shape): the MFU denominator.
+
+MODEL_FLOPS = useful flops only: 6*N_active*T for training (2*N fwd + 4*N
+bwd), 2*N_active*T for prefill, 2*N_active*B for decode, plus causal
+attention-score flops (the 6N rule excludes them):
+
+  attn_train  = 12 * L_attn * B * S^2 * H * Dh * 0.5      (fwd+bwd, causal)
+  attn_prefill=  4 * L_attn * B * S^2 * H * Dh * 0.5
+  attn_decode =  4 * L_attn * B * S_ctx * H * Dh
+
+Sliding-window layers use S_ctx = min(S, window).  N counts come from
+jax.eval_shape over the real init (no allocation); MoE expert leaves are
+down-weighted by top_k/E (plus shared/dense applied to all tokens).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.tree_util import tree_flatten_with_path
+
+from repro.models import SHAPES, build_model
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_counts(cfg) -> dict[str, float]:
+    bundle = build_model(cfg)
+    params = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    leaves, _ = tree_flatten_with_path(params)
+    total = expert = embed = 0
+    for p, leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        name = _path_str(p)
+        total += n
+        if "/we_" in name or name.endswith(("we_gate", "we_up", "we_down")):
+            expert += n
+        if "embedding" in name:
+            embed += n
+    n_active = total - expert
+    if cfg.moe is not None and expert:
+        n_active += expert * cfg.moe.top_k / cfg.moe.n_experts
+    return {"params_total": float(total), "params_expert": float(expert),
+            "active": float(n_active), "params_embed": float(embed)}
+
+
+def _attn_layers(cfg) -> list[int]:
+    """Effective attention context bound per layer kind instance."""
+    kinds = list(cfg.head) + list(cfg.pattern) * cfg.n_blocks + list(cfg.tail)
+    out = []
+    for k in kinds:
+        if k == "mamba":
+            continue
+        if k == "local":
+            out.append(cfg.window or 1 << 30)
+        else:
+            out.append(1 << 30)
+    return out
+
+
+def model_flops(cfg, shape_name: str) -> dict[str, float]:
+    sp = SHAPES[shape_name]
+    counts = param_counts(cfg)
+    N = counts["active"]
+    B, S = sp.batch, sp.seq
+    H, Dh = cfg.n_heads, cfg.hd
+    if cfg.mla is not None:
+        Dh = cfg.mla.qk_nope + cfg.mla.qk_rope
+
+    windows = _attn_layers(cfg)
+    if sp.kind == "train":
+        T = B * S
+        dense = 6.0 * N * T
+        attn = sum(12.0 * B * min(S, w) * S * H * Dh * 0.5 for w in windows)
+    elif sp.kind == "prefill":
+        T = B * S
+        dense = 2.0 * N * T
+        attn = sum(4.0 * B * min(S, w) * S * H * Dh * 0.5 for w in windows)
+    else:  # decode: one token, context S
+        T = B
+        dense = 2.0 * N * B
+        attn = sum(4.0 * B * min(S, w) * H * Dh for w in windows)
+    return {**counts, "dense": dense, "attn": attn, "total": dense + attn}

@@ -1,0 +1,71 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --reduced --steps 100 --batch 8 --seq 128 [--mesh host]
+
+--reduced uses the smoke-scale config of the same family (CPU-friendly);
+omit it on a real pod to train the full assigned config.  --mesh host
+builds a mesh over the local devices and runs the fully-sharded step
+(same code path as the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import ALL_ARCHS, get_config, reduced_config
+from repro.data import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.models import context as mctx
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+from repro.train.train_step import dist_context_for
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b", choices=list(ALL_ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["none", "host", "pod", "multipod"],
+                    default="none")
+    ap.add_argument("--quant-opt-state", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    bundle = build_model(cfg)
+
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    elif args.mesh == "pod":
+        mesh = make_production_mesh()
+    elif args.mesh == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+    if mesh is not None:
+        mctx.set_context(dist_context_for(mesh))
+
+    trainer = Trainer(
+        bundle,
+        AdamWConfig(lr=args.lr, quant_state=args.quant_opt_state),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch),
+        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=10),
+        mesh=mesh,
+    )
+    out = trainer.train()
+    print(json.dumps({"history": out["history"][-5:],
+                      "restarts": out["restarts"],
+                      "final_loss": out["final_loss"]}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

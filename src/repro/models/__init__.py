@@ -1,0 +1,7 @@
+from . import api, attention, config, context, layers, linops, moe, ssm, transformer
+from .api import SHAPES, ModelBundle, build_model
+from .config import ArchConfig, reduced
+
+__all__ = ["api", "attention", "config", "context", "layers", "linops", "moe",
+           "ssm", "transformer", "build_model", "ModelBundle", "SHAPES",
+           "ArchConfig", "reduced"]

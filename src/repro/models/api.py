@@ -1,0 +1,171 @@
+"""Public model API: build a ModelBundle from an ArchConfig.
+
+The bundle's step functions are pure and jit/pjit-friendly; the dry-run
+lowers them against ``input_specs(shape)`` ShapeDtypeStructs without any
+allocation.
+
+Shapes (assignment):
+    train_4k     seq 4096,   global batch 256   -> train step
+    prefill_32k  seq 32768,  global batch 32    -> prefill (serve) step
+    decode_32k   seq 32768,  global batch 128   -> one-token decode step
+    long_500k    seq 524288, global batch 1     -> one-token decode step
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import chunked_xent_loss
+from .transformer import _dtype, lm_apply, lm_init, lm_init_caches, lm_logits
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str           # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def _src_len(cfg: ArchConfig, seq: int) -> int:
+    """Encoder-side length for encdec (audio frames downsample ~4x)."""
+    return max(seq // 4, 8)
+
+
+def _patch_count(cfg: ArchConfig) -> int:
+    return cfg.frontend_tokens if cfg.frontend == "vision" else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_caches: Callable[..., Any]
+    input_specs: Callable[[str], dict[str, Any]]
+    cache_slice: Callable[..., Any] = None
+    cache_merge: Callable[..., Any] = None
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    cfg = cfg.validate()
+    dtype = _dtype(cfg)
+
+    def init(rng):
+        return lm_init(rng, cfg)
+
+    # ----------------------------------------------------------------- train
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        B, S_text = tokens.shape
+        P = _patch_count(cfg)
+        pos = jnp.broadcast_to(jnp.arange(P + S_text)[None], (B, P + S_text))
+        h, _, aux = lm_apply(
+            params, cfg, tokens=tokens, positions=pos, mode="train",
+            frames=batch.get("frames"), patches=batch.get("patches"))
+        h_text = h[:, P:]
+        loss = chunked_xent_loss(params["embed"]["embedding"], h_text, labels,
+                                 chunk=cfg.loss_chunk,
+                                 logit_softcap=cfg.logit_softcap)
+        return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+    # --------------------------------------------------------------- serving
+    def init_caches(batch: int, max_len: int, mem_len: int = 0):
+        return lm_init_caches(cfg, batch, max_len, mem_len)
+
+    def prefill(params, batch, caches):
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        P = _patch_count(cfg)
+        pos = jnp.broadcast_to(jnp.arange(P + S_text)[None], (B, P + S_text))
+        h, caches, _ = lm_apply(
+            params, cfg, tokens=tokens, positions=pos, mode="prefill",
+            caches=caches, frames=batch.get("frames"),
+            patches=batch.get("patches"))
+        logits = lm_logits(params, cfg, h[:, -1:])[:, 0]
+        return logits, caches
+
+    def decode_step(params, caches, tokens, positions):
+        """tokens: (B, 1); positions: (B, 1) absolute positions."""
+        h, caches, _ = lm_apply(params, cfg, tokens=tokens, positions=positions,
+                                mode="decode", caches=caches)
+        logits = lm_logits(params, cfg, h[:, -1:])[:, 0]
+        return logits, caches
+
+    # -------------------------------------------------- cache slot helpers
+    # head/tail cache leaves carry batch on axis 0; scanned block caches are
+    # stacked (n_blocks, batch, ...) so batch is axis 1.
+    def cache_slice(caches, lo: int, hi: int):
+        return {
+            "head": jax.tree.map(lambda c: c[lo:hi], caches["head"]),
+            "tail": jax.tree.map(lambda c: c[lo:hi], caches["tail"]),
+            "blocks": jax.tree.map(lambda c: c[:, lo:hi], caches["blocks"]),
+        }
+
+    def cache_merge(caches, sub, lo: int):
+        return {
+            "head": jax.tree.map(lambda c, s: c.at[lo:lo + s.shape[0]].set(s),
+                                 caches["head"], sub["head"]),
+            "tail": jax.tree.map(lambda c, s: c.at[lo:lo + s.shape[0]].set(s),
+                                 caches["tail"], sub["tail"]),
+            "blocks": jax.tree.map(lambda c, s: c.at[:, lo:lo + s.shape[1]].set(s),
+                                   caches["blocks"], sub["blocks"]),
+        }
+
+    # ------------------------------------------------------------ dry-run IO
+    def input_specs(shape_name: str) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every input of the step function."""
+        sp = SHAPES[shape_name]
+        f32, i32 = jnp.float32, jnp.int32
+        P = _patch_count(cfg)
+        if sp.kind == "train":
+            S_text = sp.seq - P
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((sp.batch, S_text), i32),
+                "labels": jax.ShapeDtypeStruct((sp.batch, S_text), i32),
+            }
+            if cfg.frontend == "vision":
+                specs["patches"] = jax.ShapeDtypeStruct((sp.batch, P, cfg.d_model), dtype)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (sp.batch, _src_len(cfg, sp.seq), cfg.d_model), dtype)
+            return specs
+        if sp.kind == "prefill":
+            S_text = sp.seq - P
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((sp.batch, S_text), i32),
+            }
+            if cfg.frontend == "vision":
+                specs["patches"] = jax.ShapeDtypeStruct((sp.batch, P, cfg.d_model), dtype)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (sp.batch, _src_len(cfg, sp.seq), cfg.d_model), dtype)
+            return specs
+        # decode: one new token against a seq-length cache
+        mem_len = _src_len(cfg, sp.seq) if cfg.family == "encdec" else 0
+        caches = jax.eval_shape(lambda: init_caches(sp.batch, sp.seq, mem_len))
+        return {
+            "tokens": jax.ShapeDtypeStruct((sp.batch, 1), i32),
+            "positions": jax.ShapeDtypeStruct((sp.batch, 1), i32),
+            "caches": caches,
+        }
+
+    return ModelBundle(cfg=cfg, init=init, train_loss=train_loss,
+                       prefill=prefill, decode_step=decode_step,
+                       init_caches=init_caches, input_specs=input_specs,
+                       cache_slice=cache_slice, cache_merge=cache_merge)

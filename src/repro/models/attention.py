@@ -1,0 +1,439 @@
+"""Attention variants: GQA (full/sliding-window), MLA, cross-attention.
+
+All functions are pure; KV caches are dict pytrees threaded by the caller.
+Training/prefill attention is chunked (flash-style online softmax via
+lax.scan) so the (S x S) score matrix never materializes - required at
+32k prefill and beyond.
+
+KV caches:
+  full   : {'k','v': (B, S, Hkv, Dh), 'len': (B,)}        [optionally int8 + scales]
+  window : {'k','v': (B, W, Hkv, Dh), 'len': (B,)}         ring buffer
+  mla    : {'ckv': (B, S, r), 'krope': (B, S, dr), 'len': (B,)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import apply_rope, dense_init, rms_norm, softcap
+from .linops import lin
+
+NEG = -2.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    attn_softcap: float | None = None
+    window: int | None = None          # sliding window (local attention)
+    quant_kv: str = "none"             # 'none' | 'dynamic' | 'pdq'
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,            # (B, Sq, H, Dh)
+    k: jax.Array,            # (B, Sk, Hkv, Dh)
+    v: jax.Array,            # (B, Sk, Hkv, Dh)
+    q_pos: jax.Array,        # (B, Sq) absolute positions
+    k_pos: jax.Array,        # (B, Sk)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    attn_softcap: float | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    parallel_q: bool = False,
+) -> jax.Array:
+    """Online-softmax attention; scores exist only per (q_chunk x kv_chunk).
+
+    q/k share head_dim Dh; v may have a different head_dim Dv (MLA)."""
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    scale = Dh ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    # (B, Sq, H, Dh) -> (nq, B, H, qc, Dh); scale in q.dtype (bf16 stays bf16)
+    qc = q.reshape(B, nq, q_chunk, H, Dh).transpose(1, 0, 3, 2, 4) \
+        * jnp.asarray(scale, q.dtype)
+    qp = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, Dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, Dv).transpose(1, 0, 3, 2, 4)
+    kp = k_pos.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+
+    def q_step(_, qx):
+        qi, qpi = qx                                  # (B, H, qc, Dh), (B, qc)
+        qi = qi.reshape(B, Hkv, G, q_chunk, Dh)
+
+        def kv_step(carry, kx):
+            m, l, acc = carry
+            ki, vi, kpi = kx                          # (B, Hkv, kc, Dh), (B, kc)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, attn_softcap)
+            msk = jnp.ones((B, 1, 1, q_chunk, kv_chunk), bool)
+            rel = qpi[:, None, None, :, None] - kpi[:, None, None, None, :]
+            if causal:
+                msk &= rel >= 0
+            if window is not None:
+                msk &= rel < window
+            s = jnp.where(msk, s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), ()
+
+        init = (jnp.full((B, Hkv, G, q_chunk), NEG, jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk), jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (kc, vc, kp))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.reshape(B, H, q_chunk, Dv)
+
+    if parallel_q:
+        # q blocks as a batched dim (shardable: sequence parallelism); the
+        # online-softmax scan runs only over KV chunks.
+        qb = qc.reshape(nq, B, Hkv, G, q_chunk, Dh)
+
+        def kv_step_p(carry, kx):
+            m, l, acc = carry
+            ki, vi, kpi = kx
+            s = jnp.einsum("nbhgqd,bhkd->nbhgqk", qb, ki,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, attn_softcap)
+            rel = qp[:, :, None, None, :, None] - kpi[None, :, None, None, None, :]
+            msk = jnp.ones(rel.shape, bool)
+            if causal:
+                msk &= rel >= 0
+            if window is not None:
+                msk &= rel < window
+            s = jnp.where(msk, s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "nbhgqk,bhkd->nbhgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), ()
+
+        init = (jnp.full((nq, B, Hkv, G, q_chunk), NEG, jnp.float32),
+                jnp.zeros((nq, B, Hkv, G, q_chunk), jnp.float32),
+                jnp.zeros((nq, B, Hkv, G, q_chunk, Dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step_p, init, (kc, vc, kp))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]      # (nq,B,Hkv,G,qc,Dv)
+        out = o.reshape(nq, B, H, q_chunk, Dv)
+    else:
+        _, out = jax.lax.scan(q_step, None, (qc, qp))  # (nq, B, H, qc, Dv)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, H, Dh) one token
+    k: jax.Array,            # (B, S, Hkv, Dh)
+    v: jax.Array,
+    q_pos: jax.Array,        # (B,)
+    k_pos: jax.Array,        # (B, S) absolute position per slot (-1 = empty)
+    *,
+    window: int | None = None,
+    attn_softcap: float | None = None,
+) -> jax.Array:
+    B, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Dh) * jnp.asarray(Dh ** -0.5, q.dtype)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k, preferred_element_type=jnp.float32)
+    s = softcap(s, attn_softcap)
+    rel = q_pos[:, None] - k_pos                      # (B, S)
+    ok = (rel >= 0) & (k_pos >= 0)
+    if window is not None:
+        ok &= rel < window
+    s = jnp.where(ok[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, dims: AttnDims, dtype):
+    ks = jax.random.split(key, 4)
+    d, H, Hkv, Dh = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    return {
+        "wq": dense_init(ks[0], d, H * Dh, dtype),
+        "wk": dense_init(ks[1], d, Hkv * Dh, dtype),
+        "wv": dense_init(ks[2], d, Hkv * Dh, dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype),
+    }
+
+
+def init_cache(dims: AttnDims, batch: int, max_len: int, dtype) -> dict[str, Any]:
+    Hkv, Dh = dims.n_kv_heads, dims.head_dim
+    S = min(max_len, dims.window) if dims.window else max_len
+    cache = {
+        "pos": jnp.full((batch, S), -1, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if dims.quant_kv != "none":
+        cache["k"] = jnp.zeros((batch, S, Hkv, Dh), jnp.int8)
+        cache["v"] = jnp.zeros((batch, S, Hkv, Dh), jnp.int8)
+        cache["k_scale"] = jnp.ones((batch, S, Hkv), jnp.float32)
+        cache["v_scale"] = jnp.ones((batch, S, Hkv), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros((batch, S, Hkv, Dh), dtype)
+        cache["v"] = jnp.zeros((batch, S, Hkv, Dh), dtype)
+    return cache
+
+
+def _quant_kv_token(k_new, v_new):
+    """Symmetric per-(token, head) int8 quantization of new KV entries."""
+    def q(t):
+        amax = jnp.max(jnp.abs(t), axis=-1)                     # (B, S, Hkv)
+        scale = jnp.maximum(amax, 1e-6) / 127.0
+        tq = jnp.clip(jnp.round(t / scale[..., None]), -127, 127).astype(jnp.int8)
+        return tq, scale
+    kq, ks = q(k_new.astype(jnp.float32))
+    vq, vs = q(v_new.astype(jnp.float32))
+    return kq, ks, vq, vs
+
+
+def _cache_write(cache, k_new, v_new, positions, quant: str):
+    """Write S_new tokens at ring positions (pos % W for windows)."""
+    B, S_new = positions.shape
+    W = cache["k"].shape[1]
+    slots = positions % W
+    bidx = jnp.arange(B)[:, None]
+    if quant != "none":
+        kq, ks, vq, vs = _quant_kv_token(k_new, v_new)
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[bidx, slots].set(kq)
+        cache["v"] = cache["v"].at[bidx, slots].set(vq)
+        cache["k_scale"] = cache["k_scale"].at[bidx, slots].set(ks)
+        cache["v_scale"] = cache["v_scale"].at[bidx, slots].set(vs)
+    else:
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[bidx, slots].set(k_new.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[bidx, slots].set(v_new.astype(cache["v"].dtype))
+    cache["pos"] = cache["pos"].at[bidx, slots].set(positions)
+    cache["len"] = jnp.maximum(cache["len"], positions[:, -1] + 1)
+    return cache
+
+
+def _cache_kv_float(cache, dtype):
+    if "k_scale" in cache:
+        k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
+        v = cache["v"].astype(jnp.float32) * cache["v_scale"][..., None]
+        return k.astype(dtype), v.astype(dtype)
+    return cache["k"], cache["v"]
+
+
+def gqa_apply(
+    p,
+    dims: AttnDims,
+    x: jax.Array,                     # (B, S, d)  [S=1 for decode]
+    positions: jax.Array,             # (B, S)
+    *,
+    mode: str,                        # 'train' | 'prefill' | 'decode'
+    cache: dict | None = None,
+    causal: bool = True,
+):
+    B, S, d = x.shape
+    H, Hkv, Dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = lin(x, p["wq"]).reshape(B, S, H, Dh)
+    k = lin(x, p["wk"]).reshape(B, S, Hkv, Dh)
+    v = lin(x, p["wv"]).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+
+    if mode == "train":
+        o = chunked_attention(q, k, v, positions, positions, causal=causal,
+                              window=dims.window, attn_softcap=dims.attn_softcap)
+        return lin(o.reshape(B, S, H * Dh), p["wo"]), None
+
+    assert cache is not None
+    if mode == "prefill":
+        cache = _cache_write(cache, k, v, positions, dims.quant_kv)
+        o = chunked_attention(q, k, v, positions, positions, causal=causal,
+                              window=dims.window, attn_softcap=dims.attn_softcap,
+                              parallel_q=True)
+        return lin(o.reshape(B, S, H * Dh), p["wo"]), cache
+
+    # decode: S == 1
+    cache = _cache_write(cache, k, v, positions, dims.quant_kv)
+    q1 = q[:, 0]                                            # (B, H, Dh)
+    if ("k_scale" in cache and dims.attn_softcap is None and dims.window is None):
+        # int8-KV flash-decode kernel path (falls back to ref off-TPU)
+        o = ops.decode_attend_i8kv(
+            q1.astype(jnp.float32), cache["k"], cache["v"],
+            cache["k_scale"], cache["v_scale"], cache["len"])
+        o = o.astype(x.dtype)
+    else:
+        kf, vf = _cache_kv_float(cache, x.dtype)
+        o = decode_attention(q1, kf, vf, positions[:, 0], cache["pos"],
+                             window=dims.window, attn_softcap=dims.attn_softcap)
+    return lin(o.reshape(B, 1, H * Dh), p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder); no rope, bidirectional over memory
+# ---------------------------------------------------------------------------
+
+
+def cross_init(key, dims: AttnDims, dtype):
+    return gqa_init(key, dims, dtype)
+
+
+def cross_apply(p, dims: AttnDims, x, memory_kv, memory_mask=None):
+    """x: (B, Sq, d); memory_kv: precomputed (k, v) each (B, Sm, Hkv, Dh)."""
+    B, Sq, _ = x.shape
+    H, Hkv, Dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = lin(x, p["wq"]).reshape(B, Sq, H, Dh)
+    k, v = memory_kv
+    Sm = k.shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    kpos = jnp.broadcast_to(jnp.arange(Sm)[None], (B, Sm))
+    o = chunked_attention(q, k, v, qpos, kpos, causal=False, window=None)
+    return lin(o.reshape(B, Sq, H * Dh), p["wo"])
+
+
+def cross_memory(p, dims: AttnDims, memory):
+    """Precompute cross-attention K/V from encoder output (B, Sm, d)."""
+    B, Sm, _ = memory.shape
+    Hkv, Dh = dims.n_kv_heads, dims.head_dim
+    k = lin(memory, p["wk"]).reshape(B, Sm, Hkv, Dh)
+    v = lin(memory, p["wv"]).reshape(B, Sm, Hkv, Dh)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank q/kv with compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_model: int
+    n_heads: int
+    q_lora: int
+    kv_lora: int
+    qk_nope: int
+    qk_rope: int
+    v_head: int
+    rope_theta: float = 10_000.0
+
+
+def mla_init(key, m: MLADims, dtype):
+    ks = jax.random.split(key, 7)
+    H = m.n_heads
+    return {
+        "wq_a": dense_init(ks[0], m.d_model, m.q_lora, dtype),
+        "q_norm": jnp.zeros((m.q_lora,), dtype),
+        "wq_b": dense_init(ks[1], m.q_lora, H * (m.qk_nope + m.qk_rope), dtype),
+        "wkv_a": dense_init(ks[2], m.d_model, m.kv_lora + m.qk_rope, dtype),
+        "kv_norm": jnp.zeros((m.kv_lora,), dtype),
+        "wk_b": dense_init(ks[3], m.kv_lora, H * m.qk_nope, dtype),
+        "wv_b": dense_init(ks[4], m.kv_lora, H * m.v_head, dtype),
+        "wo": dense_init(ks[5], H * m.v_head, m.d_model, dtype),
+    }
+
+
+def mla_init_cache(m: MLADims, batch: int, max_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _mla_qkv(p, m: MLADims, x, positions):
+    B, S, _ = x.shape
+    H = m.n_heads
+    q = lin(rms_norm(lin(x, p["wq_a"]), p["q_norm"]), p["wq_b"])
+    q = q.reshape(B, S, H, m.qk_nope + m.qk_rope)
+    q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, positions, m.rope_theta)
+    kv = lin(x, p["wkv_a"])
+    ckv = rms_norm(kv[..., : m.kv_lora], p["kv_norm"])
+    krope = apply_rope(kv[..., None, m.kv_lora:], positions, m.rope_theta)[..., 0, :]
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_apply(p, m: MLADims, x, positions, *, mode: str, cache=None):
+    B, S, _ = x.shape
+    H = m.n_heads
+    q_nope, q_rope, ckv, krope = _mla_qkv(p, m, x, positions)
+
+    if mode in ("train", "prefill"):
+        # expanded path: materialize per-head k/v from the compressed stream
+        k_nope = lin(ckv, p["wk_b"]).reshape(B, S, H, m.qk_nope)
+        v = lin(ckv, p["wv_b"]).reshape(B, S, H, m.v_head)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None], (B, S, H, m.qk_rope))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        o = chunked_attention(q, k, v, positions, positions, causal=True)
+        y = lin(o.reshape(B, S, H * m.v_head), p["wo"])
+        if mode == "train":
+            return y, None
+        bidx = jnp.arange(B)[:, None]
+        cache = dict(cache)
+        cache["ckv"] = cache["ckv"].at[bidx, positions].set(ckv.astype(cache["ckv"].dtype))
+        cache["krope"] = cache["krope"].at[bidx, positions].set(krope.astype(cache["krope"].dtype))
+        cache["pos"] = cache["pos"].at[bidx, positions].set(positions)
+        cache["len"] = jnp.maximum(cache["len"], positions[:, -1] + 1)
+        return y, cache
+
+    # decode (absorbed): attention runs entirely in the compressed space.
+    bidx = jnp.arange(B)[:, None]
+    cache = dict(cache)
+    cache["ckv"] = cache["ckv"].at[bidx, positions].set(ckv.astype(cache["ckv"].dtype))
+    cache["krope"] = cache["krope"].at[bidx, positions].set(krope.astype(cache["krope"].dtype))
+    cache["pos"] = cache["pos"].at[bidx, positions].set(positions)
+    cache["len"] = jnp.maximum(cache["len"], positions[:, -1] + 1)
+
+    from .linops import is_quantized
+    wk_b_arr = (p["wk_b"]["q"].astype(jnp.float32) * p["wk_b"]["scale"][None, :]
+                if is_quantized(p["wk_b"]) else p["wk_b"])
+    wk_b = wk_b_arr.reshape(m.kv_lora, H, m.qk_nope)
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], wk_b)          # (B, H, r)
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_eff, cache["ckv"],
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], cache["krope"],
+                      preferred_element_type=jnp.float32)) * scale
+    ok = (cache["pos"] <= positions[:, :1]) & (cache["pos"] >= 0)
+    s = jnp.where(ok[:, None, :], s, NEG)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", prob.astype(cache["ckv"].dtype), cache["ckv"],
+                     preferred_element_type=jnp.float32)            # (B, H, r)
+    wv_b_arr = (p["wv_b"]["q"].astype(jnp.float32) * p["wv_b"]["scale"][None, :]
+                if is_quantized(p["wv_b"]) else p["wv_b"])
+    wv_b = wv_b_arr.reshape(m.kv_lora, H, m.v_head)
+    o = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), wv_b)
+    return lin(o.reshape(B, 1, H * m.v_head), p["wo"]), cache

@@ -1,0 +1,20 @@
+"""Modality frontend STUBS (per assignment: [audio]/[vlm] entries specify the
+transformer backbone only; ``input_specs()`` provides precomputed frame/patch
+embeddings).  These helpers synthesize such embeddings for real (smoke/
+example) runs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stub_patch_embeddings(key, batch: int, n_tokens: int, d_model: int,
+                          dtype=jnp.bfloat16) -> jax.Array:
+    """Stands in for a CLIP-style vision tower output (phi-3-vision)."""
+    return (0.02 * jax.random.normal(key, (batch, n_tokens, d_model))).astype(dtype)
+
+
+def stub_frame_embeddings(key, batch: int, n_frames: int, d_model: int,
+                          dtype=jnp.bfloat16) -> jax.Array:
+    """Stands in for a speech feature encoder output (seamless-m4t)."""
+    return (0.02 * jax.random.normal(key, (batch, n_frames, d_model))).astype(dtype)

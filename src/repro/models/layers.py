@@ -1,0 +1,131 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Params are nested dicts; leaf names are the contract the sharding rules in
+``repro.distributed.sharding`` key on - do not rename casually.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .linops import lin
+
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype=jnp.float32, minval=-scale,
+                              maxval=scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype):
+    return uniform_init(key, (d_in, d_out), (3.0 / d_in) ** 0.5, dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                              # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, dh/2)
+    sin = jnp.sin(angles)[..., None, :]                        # (..., seq, 1, dh/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(lin(x, p["w_gate"])) * lin(x, p["w_up"])
+    return lin(h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return {"embedding": 0.02 * jax.random.normal(key, (vocab, d_model), jnp.float32).astype(dtype)}
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed_logits(p, h, softcap_val: float | None = None):
+    logits = h @ p["embedding"].T
+    return softcap(logits.astype(jnp.float32), softcap_val)
+
+
+def chunked_xent_loss(
+    embedding: jax.Array,       # (V, d)
+    h: jax.Array,               # (B, S, d) final hidden states
+    labels: jax.Array,          # (B, S) int32
+    *,
+    chunk: int = 512,
+    logit_softcap: float | None = None,
+) -> jax.Array:
+    """Cross-entropy without materializing the full (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits exist only inside the
+    (rematerialized) scan body.  Essential at vocab >= 100k x seq 4k.
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    h_c = h[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    y_c = labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hc, yc = xs                                   # (B, chunk, d), (B, chunk)
+        logits = softcap((hc @ embedding.T).astype(jnp.float32), logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), ()
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (h_c, y_c))
+    return total / (B * n_chunks * chunk)

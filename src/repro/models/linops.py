@@ -1,0 +1,98 @@
+"""Switchable linear op: fp matmul or PDQ-int8 (W8A8) execution.
+
+Models call ``lin(x, w)`` for every large projection.  When a weight leaf
+has been replaced by a quantized record (see ``quantize_weight``), the
+matmul runs int8 x int8 with the *PDQ-predicted* output requantization
+scale - computed from the input moments BEFORE the matmul (paper Sec. 4),
+so the fp accumulator never needs to be materialized to find its range.
+
+The int8 output is immediately dequantized to the compute dtype for
+composability with the surrounding (residual / norm) ops; on TPU the wins
+are int8 weight streaming (2x HBM) and the int8 epilogue (no fp32 output
+round-trip).  See DESIGN.md Sec. 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def quantize_weight(w: jax.Array, alpha: float = 6.0, beta: float = 6.0) -> dict:
+    """Deploy-time: per-output-channel symmetric int8 weight record with the
+    Gaussian weight stats the PDQ surrogate needs (Eqs. 8-9)."""
+    w32 = w.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(w32), axis=0), 1e-8)      # (h,)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(w32 / scale[None, :]), -127, 127).astype(jnp.int8)
+    return {
+        "q": q,
+        "scale": scale,
+        "colsum": jnp.sum(q.astype(jnp.int32), axis=0, keepdims=True),
+        "mu_w": jnp.mean(w32),
+        "var_w": jnp.var(w32),
+        "alpha": jnp.float32(alpha),
+        "beta": jnp.float32(beta),
+    }
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, dict) and "q" in w
+
+
+def lin(x: jax.Array, w) -> jax.Array:
+    """y = x @ w, fp or PDQ-int8 depending on the weight leaf."""
+    if not is_quantized(w):
+        return x @ w
+
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    # per-token symmetric input quantization (input is already materialized -
+    # the paper's overhead concerns the *output* pre-activations)
+    amax = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8)
+    s_x = amax / 127.0
+    x_q = jnp.clip(jnp.round(x32 / s_x[..., None]), -127, 127).astype(jnp.int8)
+
+    # PDQ surrogate: predict the output range BEFORE the matmul (Eqs. 8-9 + I(a,b))
+    s1, s2 = ops.act_stats(x32)
+    mean = w["mu_w"] * s1
+    sigma = jnp.sqrt(jnp.maximum(w["var_w"] * s2, 0.0)) + 1e-8
+    lo = mean - w["alpha"] * sigma
+    hi = mean + w["beta"] * sigma
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, 0.0)
+    s_out = jnp.maximum((hi - lo) / 255.0, 1e-8)
+    z_out = (-jnp.round(lo / s_out) - 128.0).astype(jnp.int32)
+
+    y_q = ops.w8a8_matmul(x_q, w["q"], s_x[..., None], 0, w["scale"],
+                          s_out[..., None], z_out[..., None], colsum=w["colsum"])
+    y = (y_q.astype(jnp.float32) - z_out[..., None].astype(jnp.float32)) \
+        * s_out[..., None]
+    return y.astype(dt)
+
+
+def quantize_param_tree(params, path_pred=None, alpha: float = 6.0, beta: float = 6.0):
+    """Replace selected 2-D weight leaves with quantized records.
+
+    path_pred(path_str, leaf) -> bool selects leaves; default: every 2-D
+    float leaf whose name starts with 'w' or ends with '_proj'.
+    """
+    from jax.tree_util import tree_flatten_with_path, tree_unflatten, DictKey
+
+    def default_pred(path, leaf):
+        name = path.split("/")[-1]
+        return (leaf.ndim == 2 and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and (name.startswith("w") or name.endswith("_proj")
+                     or name in ("in_proj", "out_proj")))
+
+    pred = path_pred or default_pred
+    leaves, treedef = tree_flatten_with_path(params)
+    out = []
+    for path, leaf in leaves:
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        if pred(pstr, leaf):
+            out.append(quantize_weight(leaf, alpha, beta))
+        else:
+            out.append(leaf)
+    return tree_unflatten(treedef, out)

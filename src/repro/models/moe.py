@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Dispatch design (production path, used under shard_map over ('data','model')):
+
+  1. tokens are sharded over *both* mesh axes; each device routes its local
+     tokens and packs them into a per-global-expert capacity buffer
+     (E, C_e, d) - slot overflow drops (capacity factor 1.25, standard).
+  2. one all_to_all over the 'model' (expert) axis with split_axis=0 /
+     concat_axis=1 lands the buffer already bucketed per *local* expert:
+     (E_local, nshards * C_e, d).
+  3. batched SwiGLU einsum over the local expert stack.
+  4. reverse all_to_all; the source combines expert outputs with its gates.
+
+Zero-padded slots are free: SwiGLU(0) = 0 and the combine gathers only real
+slots.  A dense-masked path (each device computes all its local experts over
+all tokens, psum over 'model') serves tiny-token decode steps where the
+dispatch machinery would be all overhead.
+
+Extras: shared experts (DeepSeek) and a dense FFN residual (Arctic), both
+plain TP-sharded MLPs applied to every token; switch-style load-balance aux
+loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0               # shared experts applied to all tokens
+    dense_residual: bool = False    # Arctic: dense FFN in parallel with MoE
+    d_ff_dense: int = 0             # width of shared/dense-residual FFN
+    capacity_factor: float = 1.25
+    router_scale: float = 1.0       # gate multiplier (deepseek routed_scaling)
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 6)
+    E, ff = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "we_gate": jax.vmap(lambda k: dense_init(k, d_model, ff, dtype))(
+            jax.random.split(ks[1], E)),
+        "we_up": jax.vmap(lambda k: dense_init(k, d_model, ff, dtype))(
+            jax.random.split(ks[2], E)),
+        "we_down": jax.vmap(lambda k: dense_init(k, ff, d_model, dtype))(
+            jax.random.split(ks[3], E)),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(ks[4], d_model, cfg.d_ff_dense or ff * cfg.n_shared, dtype)
+    if cfg.dense_residual:
+        p["dense"] = mlp_init(ks[5], d_model, cfg.d_ff_dense or ff, dtype)
+    return p
+
+
+def route(x: jax.Array, wr: jax.Array, cfg: MoEConfig):
+    """x: (T, d) -> gates (T, k), ids (T, k), aux load-balance loss."""
+    logits = (x.astype(jnp.float32) @ wr)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    gates = gates * cfg.router_scale
+    # switch-style aux: E * sum_e f_e * p_e
+    E = wr.shape[1]
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+    return gates, ids, aux
+
+
+def _bucket(x: jax.Array, flat_ids: jax.Array, E: int, C: int):
+    """Scatter tokens into (E, C, d) capacity buckets; overflow drops.
+
+    Returns the buffer plus (bucket, slot, valid) per flattened assignment.
+    """
+    N = flat_ids.shape[0]
+    oh = (flat_ids[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh                        # earlier same-id count
+    slot = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]
+    valid = slot < C
+    buf = jnp.zeros((E, C, x.shape[-1]), x.dtype)
+    buf = buf.at[flat_ids, slot].set(x, mode="drop")         # OOB slots dropped
+    return buf, slot, valid
+
+
+def _expert_ffn(p, h: jax.Array) -> jax.Array:
+    """h: (E_local, C, d) through the stacked SwiGLU experts."""
+    g = jnp.einsum("ecd,edf->ecf", h, p["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h, p["we_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["we_down"])
+
+
+def moe_ffn_tokens(
+    p,
+    x: jax.Array,              # (T_local, d) tokens on this shard
+    cfg: MoEConfig,
+    *,
+    axis_name: str | None = None,   # expert-parallel mesh axis ('model')
+) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE over already-flattened local tokens."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    nshards = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    E_loc = E // nshards
+
+    gates, ids, aux = route(x, p["router"], cfg)
+    flat_ids = ids.reshape(-1)                              # (T*k,)
+    xk = jnp.repeat(x, k, axis=0)                           # (T*k, d)
+    C = max(1, int(T * k * cfg.capacity_factor / E + 0.999))
+    buf, slot, valid = _bucket(xk, flat_ids, E, C)          # (E, C, d)
+
+    if axis_name is not None and nshards > 1:
+        recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=1,
+                                  tiled=True)               # (E_loc, nshards*C, d)
+        out = _expert_ffn(p, recv)
+        buf_out = jax.lax.all_to_all(out, axis_name, split_axis=1, concat_axis=0,
+                                     tiled=True)            # (E, C, d)
+    else:
+        buf_out = _expert_ffn(p, buf)
+
+    # combine: gather each assignment's expert output, weight by its gate
+    y_k = buf_out[flat_ids, jnp.minimum(slot, C - 1)]       # (T*k, d)
+    y_k = jnp.where(valid[:, None], y_k, 0.0)
+    y = jnp.sum((y_k * gates.reshape(-1, 1).astype(y_k.dtype)).reshape(T, k, d), axis=1)
+    return y, aux
+
+
+def moe_ffn_dense_masked(
+    p,
+    x: jax.Array,              # (T, d) tokens (replicated over 'model')
+    cfg: MoEConfig,
+    *,
+    axis_name: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode-path MoE: every shard computes its local experts over all
+    tokens, masked by gates; psum over the expert axis combines."""
+    E, k = cfg.n_experts, cfg.top_k
+    nshards = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    E_loc = E // nshards
+    gates, ids, aux = route(x, p["router"], cfg)
+    shard = 0 if axis_name is None else jax.lax.axis_index(axis_name)
+    e_offset = shard * E_loc
+
+    h = jnp.broadcast_to(x[None], (E_loc, *x.shape))        # (E_loc, T, d)
+    out = _expert_ffn(p, h)                                 # (E_loc, T, d)
+    local_eids = e_offset + jnp.arange(E_loc)               # (E_loc,)
+    sel = (ids[None, :, :] == local_eids[:, None, None])    # (E_loc, T, k)
+    w = jnp.sum(sel * gates[None], axis=-1)                 # (E_loc, T)
+    y = jnp.einsum("et,etd->td", w.astype(out.dtype), out)
+    if axis_name is not None and nshards > 1:
+        y = jax.lax.psum(y, axis_name)
+    return y, aux

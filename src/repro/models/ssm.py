@@ -1,0 +1,192 @@
+"""Mamba2 (SSD - state-space duality) block, arXiv:2405.21060.
+
+Chunked training/prefill algorithm (the "SSD minimal" formulation):
+intra-chunk attention-like term + inter-chunk state recurrence via lax.scan;
+single-step recurrent update for decode.  The recurrent state is the only
+cache - O(H * P * N) per sequence regardless of context length, which is why
+the long_500k shape runs on SSM/hybrid architectures.
+
+Layout: x ( B, L, d_model ) -> in_proj -> [z | xc | B | C | dt] with
+d_inner = expand * d_model, H = d_inner / head_dim heads, n_groups = 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+from .linops import lin
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def ssm_init(key, cfg: SSMConfig, dtype):
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.d_conv, cfg.conv_dim), jnp.float32).astype(dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)).astype(jnp.float32),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "norm": jnp.zeros((cfg.d_inner,), dtype),
+        "out_proj": dense_init(ks[4], cfg.d_inner, cfg.d_model, dtype),
+    }
+
+
+def ssm_init_cache(cfg: SSMConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt: jax.Array):
+    di, ds, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, L, C); kernel w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., T) -> (..., T, T) lower-triangular pairwise cumulative sums."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD. x: (B, L, H, P); dt: (B, L, H); A: (H,) (negative);
+    Bm/Cm: (B, L, N).  Returns y (B, L, H, P) and final state (B, H, P, N)."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        # zero-pad is exact: dt=0 => decay=1 and zero state update
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                       # (B, nc, c, H)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk ("diagonal") term
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))       # (B, nc, H, c, c)
+    scores = jnp.einsum("bztn,bzsn->bzts", Cc, Bc)          # (B, nc, c, c)
+    y_diag = jnp.einsum("bzts,bzhts,bzsh,bzshp->bzthp", scores, Lmat, dtc, xc)
+
+    # chunk summary states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (B, nc, c, H)
+    states = jnp.einsum("bzsn,bzsh,bzsh,bzshp->bzhpn",
+                        Bc, decay_states, dtc, xc)          # (B, nc, H, P, N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (B, nc, H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(carry, inp):
+        st_new, dec = inp                                    # (B,H,P,N), (B,H)
+        prev = carry
+        out = prev
+        nxt = prev * dec[..., None, None] + st_new
+        return nxt, out
+
+    final, prev_states = jax.lax.scan(
+        step, init_state.astype(jnp.float32),
+        (states.swapaxes(0, 1).astype(jnp.float32), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                 # (B, nc, H, P, N)
+
+    decay_in = jnp.exp(dA_cs)                                # (B, nc, c, H)
+    y_off = jnp.einsum("bztn,bzth,bzhpn->bzthp", Cc, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(Bsz, Lp, H, P)[:, :L]
+    return y.astype(x.dtype), final
+
+
+def ssm_apply(p, cfg: SSMConfig, x: jax.Array, *, mode: str, cache=None):
+    """x: (B, L, d_model); decode has L == 1 and requires cache."""
+    B, L, _ = x.shape
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.d_state
+    zxbcdt = lin(x, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B, L, H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+
+    if mode == "decode":
+        assert cache is not None and L == 1
+        window = jnp.concatenate([cache["conv"], xBC], axis=1)       # (B, K, C)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32))
+        xc = conv_out[:, : cfg.d_inner].reshape(B, H, P)
+        Bm = conv_out[:, cfg.d_inner: cfg.d_inner + N]
+        Cm = conv_out[:, cfg.d_inner + N:]
+        dt1 = dt[:, 0]                                               # (B, H)
+        dA = jnp.exp(dt1 * A[None, :])                               # (B, H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xc.astype(jnp.float32), Bm)
+        state = cache["state"] * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+        y = y + p["D"][None, :, None] * xc.astype(jnp.float32)
+        y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+        new_cache = {"conv": window[:, 1:], "state": state}
+    else:
+        conv_out = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        xc = conv_out[..., : cfg.d_inner].reshape(B, L, H, P)
+        Bm = conv_out[..., cfg.d_inner: cfg.d_inner + N].astype(jnp.float32)
+        Cm = conv_out[..., cfg.d_inner + N:].astype(jnp.float32)
+        init_state = cache["state"] if cache is not None else None
+        y, final = ssd_scan(xc.astype(jnp.float32), dt, A, Bm, Cm, cfg.chunk,
+                            init_state)
+        y = y + p["D"][None, None, :, None] * xc.astype(y.dtype)
+        y = y.reshape(B, L, cfg.d_inner).astype(x.dtype)
+        new_cache = None
+        if cache is not None:   # prefill keeps conv tail + final state
+            tail = jnp.concatenate([cache["conv"], xBC], axis=1)[:, -(cfg.d_conv - 1):]
+            new_cache = {"conv": tail, "state": final}
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return lin(y, p["out_proj"]), new_cache

@@ -1,0 +1,2 @@
+from . import adamw, schedule
+from .adamw import AdamWConfig, OptState

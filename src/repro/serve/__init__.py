@@ -1,0 +1,2 @@
+from . import engine
+from .engine import Request, ServeEngine

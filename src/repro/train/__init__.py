@@ -1,0 +1,3 @@
+from . import train_step, trainer
+from .train_step import build_train_step, dist_context_for, make_state
+from .trainer import Trainer, TrainerConfig

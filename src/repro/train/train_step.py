@@ -1,0 +1,171 @@
+"""Jit'd / pjit'd train step construction.
+
+``build_train_step(bundle, mesh, opt_cfg)`` returns a step function compiled
+with full in/out shardings: params 2-D (FSDP x TP) sharded, optimizer states
+inheriting param specs (int8 moment states shard their flat block dim over
+the whole mesh), batch over the DP axes.  The state buffer is donated.
+
+The same builder (mesh=None) yields a plain single-device jit step for CPU
+tests and small examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import context as mctx
+from repro.optim import adamw, schedule
+
+
+def make_state(bundle, opt_cfg: adamw.AdamWConfig, rng):
+    params = bundle.init(rng)
+    opt = adamw.init(params, opt_cfg)
+    return {"params": params, "opt": opt}
+
+
+def abstract_state(bundle, opt_cfg: adamw.AdamWConfig):
+    """ShapeDtypeStruct state for the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: make_state(bundle, opt_cfg, jax.random.PRNGKey(0)))
+
+
+def state_specs(state, mesh):
+    """PartitionSpecs for the train state: params by rule; fp32 moments
+    inherit param specs; int8 moment codes/scales are last-axis blocked
+    (param_spec on the leading dims, replicated block dims) so the
+    quantized optimizer never moves data across devices."""
+    pspecs = shd.param_specs(state["params"], mesh)
+
+    all_sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+    def _ax_size(e):
+        if e is None:
+            return 1
+        if isinstance(e, tuple):
+            n = 1
+            for a in e:
+                n *= all_sizes[a]
+            return n
+        return all_sizes[e]
+
+    def q8_spec(pspec, leaf):
+        # param (..., D) -> codes (..., G, B) / scales (..., G, 1): keep the
+        # leading entries; the last param dim's sharding moves to the block-
+        # group dim G (valid when G divides - per-shard slices of D are
+        # multiples of _BLOCK across the zoo).
+        entries = list(pspec) if len(pspec) else []
+        last = entries[-1] if entries else None
+        entries = entries[:-1] if entries else []
+        G = leaf.shape[-2] if leaf.ndim >= 2 else 1
+        if last is not None and G % _ax_size(last) == 0:
+            entries = entries + [last, None]
+        entries += [None] * (leaf.ndim - len(entries))
+        return P(*entries[: leaf.ndim])
+
+    opt = state["opt"]
+    if opt.m_scale is None:
+        mspec, vspec = pspecs, pspecs
+        ms_spec = vs_spec = None
+    else:
+        mspec = jax.tree.map(q8_spec, pspecs, opt.m)
+        vspec = jax.tree.map(q8_spec, pspecs, opt.v)
+        ms_spec = jax.tree.map(q8_spec, pspecs, opt.m_scale)
+        vs_spec = jax.tree.map(q8_spec, pspecs, opt.v_scale)
+    opt_spec = adamw.OptState(step=P(), m=mspec, v=vspec,
+                              m_scale=ms_spec, v_scale=vs_spec)
+    return {"params": pspecs, "opt": opt_spec}
+
+
+def loss_and_grads(bundle, params, batch):
+    def lf(p):
+        loss, metrics = bundle.train_loss(p, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+    return loss, metrics, grads
+
+
+def make_step_fn(bundle, opt_cfg: adamw.AdamWConfig, sched, microbatch=None):
+    """The raw (un-jitted) train step; dryrun lowers it with explicit
+    shardings, build_train_step wraps it in jit."""
+
+    def step(state, batch):
+        params = state["params"]
+        if microbatch and microbatch > 1:
+            def mb(carry, sub):
+                loss, metrics, grads = loss_and_grads(bundle, params, sub)
+                acc = jax.tree.map(jnp.add, carry, grads)
+                return acc, (loss, metrics)
+
+            sub_batches = jax.tree.map(
+                lambda x: x.reshape(microbatch, x.shape[0] // microbatch,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricss) = jax.lax.scan(mb, zeros, sub_batches)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricss)
+        else:
+            loss, metrics, grads = loss_and_grads(bundle, params, batch)
+        lr_scale = sched(state["opt"].step)
+        new_params, new_opt = adamw.apply_updates(params, grads, state["opt"],
+                                                  opt_cfg, lr_scale)
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=adamw.global_norm(grads), lr_scale=lr_scale)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def build_train_step(
+    bundle,
+    opt_cfg: adamw.AdamWConfig,
+    mesh=None,
+    *,
+    lr_schedule: Callable = None,
+    microbatch: int | None = None,
+    donate: bool = True,
+):
+    """Returns (step_fn, state_sharding_tree | None).
+
+    step_fn(state, batch) -> (state, metrics).  With ``microbatch`` set, the
+    batch is split and gradients accumulate over a lax.scan (overlapping the
+    DP gradient reduction with the next microbatch's compute).
+    """
+    sched = lr_schedule or (lambda s: schedule.warmup_cosine(s))
+    step = make_step_fn(bundle, opt_cfg, sched, microbatch)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0,) if donate else ()), None
+
+    st = abstract_state(bundle, opt_cfg)
+    sspec = state_specs(st, mesh)
+    state_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    dp = shd.dp_axes(mesh)
+
+    def batch_shardings(batch_tree):
+        spec = shd.batch_spec(mesh, batch_tree)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    step_fn = jax.jit(
+        step,
+        in_shardings=(state_shardings, None),
+        out_shardings=(state_shardings, NamedSharding(mesh, P())),
+        donate_argnums=(0,) if donate else (),
+    )
+    return step_fn, state_shardings
+
+
+def dist_context_for(mesh) -> mctx.DistContext:
+    """MoE EP context matching the production mesh."""
+    dp = shd.dp_axes(mesh)
+    return mctx.DistContext(mesh=mesh, token_axes=dp + ("model",),
+                            expert_axis="model", data_axes=dp,
+                            model_axis="model")

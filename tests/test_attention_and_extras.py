@@ -1,0 +1,148 @@
+"""Extra coverage: attention path parity, MoE bucketing properties,
+corruption suite, paper-literal grid search, analytic flops model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import chunked_attention, decode_attention
+
+HYPO = dict(max_examples=8, deadline=None, derandomize=True)
+
+
+# ----------------------------------------------------- attention path parity
+def _naive_attention(q, k, v, causal=True, window=None, cap=None):
+    from repro.models.layers import softcap
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) / Dh ** 0.5
+    s = softcap(s, cap)
+    rel = jnp.arange(S)[:, None] - jnp.arange(S)[None, :]
+    msk = jnp.ones((S, S), bool)
+    if causal:
+        msk &= rel >= 0
+    if window is not None:
+        msk &= rel < window
+    s = jnp.where(msk, s, -2e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, S, H, Dh)
+
+
+@settings(**HYPO)
+@given(
+    s=st.sampled_from([32, 64]),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    window=st.sampled_from([None, 16]),
+    parallel_q=st.booleans(),
+)
+def test_chunked_attention_matches_naive(s, hkv, g, window, parallel_q):
+    B, Dh = 2, 16
+    H = hkv * g
+    keys = jax.random.split(jax.random.PRNGKey(s + hkv + g), 3)
+    q = jax.random.normal(keys[0], (B, s, H, Dh))
+    k = jax.random.normal(keys[1], (B, s, hkv, Dh))
+    v = jax.random.normal(keys[2], (B, s, hkv, Dh))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (B, s))
+    got = chunked_attention(q, k, v, pos, pos, causal=True, window=window,
+                            q_chunk=16, kv_chunk=16, parallel_q=parallel_q)
+    want = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_parallel_q_equals_scan_q():
+    """The SP-enabling batched-q path must be numerically identical to the
+    memory-lean scanned-q path (hillclimb iteration 2)."""
+    B, S, H, Dh = 2, 64, 4, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, S, H, Dh))
+    k = jax.random.normal(keys[1], (B, S, H, Dh))
+    v = jax.random.normal(keys[2], (B, S, H, Dh))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    a = chunked_attention(q, k, v, pos, pos, q_chunk=16, kv_chunk=32,
+                          parallel_q=False)
+    b = chunked_attention(q, k, v, pos, pos, q_chunk=16, kv_chunk=32,
+                          parallel_q=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# -------------------------------------------------------- MoE bucket property
+@settings(**HYPO)
+@given(
+    t=st.sampled_from([16, 64]),
+    e=st.sampled_from([4, 8]),
+    k=st.sampled_from([1, 2]),
+)
+def test_moe_bucket_roundtrip(t, e, k):
+    """Every non-dropped assignment lands in its expert's bucket and is
+    recovered exactly by the combine-side gather."""
+    from repro.models.moe import _bucket
+    key = jax.random.PRNGKey(t * e + k)
+    x = jax.random.normal(key, (t * k, 8))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (t * k,), 0, e)
+    C = max(1, int(t * k * 1.25 / e))
+    buf, slot, valid = _bucket(x, ids, e, C)
+    got = buf[ids, jnp.minimum(slot, C - 1)]
+    got = jnp.where(valid[:, None], got, x)   # dropped ones unchecked
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-6)
+    # capacity respected
+    counts = np.bincount(np.asarray(ids)[np.asarray(valid)], minlength=e)
+    assert counts.max() <= C
+
+
+# ------------------------------------------------------------- corruptions
+def test_corruptions_stay_in_range_and_differ():
+    from repro.data.corruptions import CORRUPTIONS, corrupt_batch
+    rng = np.random.default_rng(0)
+    x = rng.random((4, 16, 16, 3)).astype(np.float32)
+    for name, fn in CORRUPTIONS.items():
+        y = fn(x.astype(np.float64), 3, rng)
+        assert y.min() >= -1e-6 and y.max() <= 1 + 1e-6, name
+    y = corrupt_batch(x, rng)
+    assert y.shape == x.shape
+    assert not np.allclose(y, x)
+
+
+# -------------------------------------------------- paper-literal grid search
+def test_grid_search_matches_quantile_method():
+    from repro.core.interval import calibrate_alpha_beta, grid_search_alpha_beta
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal(50_000)
+    q = calibrate_alpha_beta(u, target_coverage=0.995)
+    g = grid_search_alpha_beta(u, target_coverage=0.995)
+    cov_q = np.mean((u >= -float(q.alpha)) & (u <= float(q.beta)))
+    cov_g = np.mean((u >= -float(g.alpha)) & (u <= float(g.beta)))
+    assert cov_q >= 0.993 and cov_g >= 0.995
+    # quantile interval is never wider than the (coarse) grid pick
+    assert float(q.alpha + q.beta) <= float(g.alpha + g.beta) + 0.3
+
+
+# --------------------------------------------------------- analytic flops
+def test_model_flops_sane():
+    from repro.configs import get_config
+    from repro.launch.model_flops import model_flops, param_counts
+    cfg = get_config("yi-6b")
+    counts = param_counts(cfg)
+    assert 5.5e9 < counts["params_total"] < 7.5e9   # "yi-6b" really ~6B
+    mf = model_flops(cfg, "train_4k")
+    assert mf["total"] > 6 * counts["active"] * 256 * 4096 * 0.99
+    # MoE: active < total
+    cfg2 = get_config("deepseek-v2-236b")
+    c2 = param_counts(cfg2)
+    assert 2.0e11 < c2["params_total"] < 2.7e11      # ~236B
+    assert c2["active"] < 0.2 * c2["params_total"]   # top-6 of 160
+
+
+def test_dryrun_skip_rules():
+    from repro.configs import get_config
+    from repro.launch.dryrun import skip_reason
+    assert skip_reason(get_config("yi-6b"), "long_500k") is not None
+    assert skip_reason(get_config("mamba2-2.7b"), "long_500k") is None
+    assert skip_reason(get_config("gemma3-12b"), "long_500k") is None
+    assert skip_reason(get_config("yi-6b"), "train_4k") is None

@@ -1,0 +1,152 @@
+"""Core PDQ library: unit + hypothesis property tests.
+
+Invariants tested:
+  * affine quantize/dequantize round-trip error is bounded by scale/2
+  * qparams_from_range represents 0 exactly and covers [m, M]
+  * the surrogate moments match empirical moments for truly-Gaussian weights
+    (the paper's i.i.d. assumption, Eqs. 8-12)
+  * I(alpha,beta) calibration achieves its target coverage on held-in data
+  * static/dynamic/pdq modes all keep quantization error bounded
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (affine, interval, qlinear, run_calibration,
+                        spec_for_mode, surrogate)
+from repro.core.policy import QuantPolicy
+
+HYPO = dict(max_examples=15, deadline=None, derandomize=True)
+
+
+@settings(**HYPO)
+@given(
+    lo=st.floats(-100.0, -0.01),
+    width=st.floats(0.1, 1000.0),
+    bits=st.sampled_from([4, 8, 16]),
+)
+def test_affine_roundtrip_error_bound(lo, width, bits):
+    m, M = lo, lo + width
+    qp = affine.qparams_from_range(jnp.float32(m), jnp.float32(M), bits)
+    x = jnp.linspace(m, M, 257)
+    err = jnp.abs(affine.fake_quant(x, qp) - x)
+    assert float(err.max()) <= float(qp.scale) * 0.5 + 1e-6
+
+
+@settings(**HYPO)
+@given(lo=st.floats(-50.0, -0.1), hi=st.floats(0.1, 50.0))
+def test_affine_zero_is_exact(lo, hi):
+    qp = affine.qparams_from_range(jnp.float32(lo), jnp.float32(hi), 8)
+    assert float(affine.fake_quant(jnp.float32(0.0), qp)) == 0.0
+
+
+@settings(**HYPO)
+@given(
+    d=st.sampled_from([64, 256]),
+    h=st.sampled_from([32, 128]),
+    mu=st.floats(-0.2, 0.2),
+    sd=st.floats(0.01, 0.3),
+)
+def test_surrogate_matches_gaussian_weights(d, h, mu, sd):
+    """Under the paper's assumption (i.i.d. Gaussian W), Eqs. 8-9 are exact
+    in expectation; empirical moments over h outputs concentrate."""
+    key = jax.random.PRNGKey(d * h)
+    W = mu + sd * jax.random.normal(key, (d, h))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, d))
+    ws = surrogate.weight_stats(W, reduce_axes=(0,), per_channel=False)
+    pred = surrogate.linear_moments(x, ws, per_channel=False)
+    emp = surrogate.empirical_moments(x @ W, per_channel=False)
+    # variance ratio within 25%; mean error small relative to sigma
+    ratio = np.asarray(pred.var / jnp.maximum(emp.var, 1e-9))
+    assert np.all(ratio > 0.6) and np.all(ratio < 1.7)
+    merr = np.asarray(jnp.abs(pred.mean - emp.mean) / jnp.sqrt(emp.var + 1e-9))
+    assert float(merr.max()) < 0.8
+
+
+def test_surrogate_conv_matches_empirical():
+    key = jax.random.PRNGKey(0)
+    k = 0.05 * jax.random.normal(key, (3, 3, 8, 32)) + 0.01
+    # non-centered inputs so channel means are signal, not noise
+    x = 0.5 + jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16, 8))
+    ws = surrogate.weight_stats(k, reduce_axes=(0, 1, 2), per_channel=True)
+    pred = surrogate.conv_moments(x, ws, (3, 3), (1, 1), "SAME", per_channel=True)
+    import jax.lax as lax
+    dn = lax.conv_dimension_numbers(x.shape, k.shape, ("NHWC", "HWIO", "NHWC"))
+    y = lax.conv_general_dilated(x, k, (1, 1), "SAME", dimension_numbers=dn)
+    emp = surrogate.empirical_moments(y, per_channel=True)
+    mcorr = np.corrcoef(np.asarray(pred.mean).ravel(), np.asarray(emp.mean).ravel())[0, 1]
+    scorr = np.corrcoef(np.asarray(pred.std).ravel(), np.asarray(emp.std).ravel())[0, 1]
+    assert mcorr > 0.8, mcorr
+    # the dispersion estimate (what sets the PDQ scale) must track reality
+    assert scorr > 0.5, scorr
+    ratio = np.asarray(pred.std).mean() / np.asarray(emp.std).mean()
+    assert 0.5 < ratio < 2.0, ratio
+
+
+@settings(**HYPO)
+@given(cov=st.sampled_from([0.99, 0.999]))
+def test_interval_calibration_hits_coverage(cov):
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal((200_000,))
+    ip = interval.calibrate_alpha_beta(u, target_coverage=cov)
+    got = np.mean((u >= -float(ip.alpha)) & (u <= float(ip.beta)))
+    assert got >= cov - 0.002
+
+
+def test_gamma_stride_reduces_positions_not_quality_much():
+    key = jax.random.PRNGKey(0)
+    W = 0.1 * jax.random.normal(key, (128, 64)) + 0.02
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 128))
+    ws = surrogate.weight_stats(W, reduce_axes=(0,), per_channel=False)
+    m1 = surrogate.linear_moments(x, ws, per_channel=False, gamma=1)
+    m8 = surrogate.linear_moments(x, ws, per_channel=False, gamma=8)
+    assert np.allclose(np.asarray(m1.var), np.asarray(m8.var), rtol=0.5)
+
+
+def _tiny_apply(params, batch, *, spec, qstate, tape=None):
+    W1, W2 = params
+    h = qlinear.dense(batch, W1, None, name="fc1", policy=spec.resolve("fc1"),
+                      state=qstate, tape=tape)
+    h = jax.nn.relu(h)
+    return qlinear.dense(h, W2, None, name="fc2", policy=spec.resolve("fc2"),
+                         state=qstate, tape=tape)
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_three_modes_bounded_error(per_channel):
+    key = jax.random.PRNGKey(0)
+    params = (0.1 * jax.random.normal(key, (64, 128)),
+              0.1 * jax.random.normal(jax.random.PRNGKey(1), (128, 32)))
+    calib = [jax.random.normal(jax.random.PRNGKey(i), (8, 64)) for i in range(4)]
+    spec = spec_for_mode("pdq", per_channel=per_channel)
+    qstate = run_calibration(_tiny_apply, params, calib, spec)
+    x = jax.random.normal(jax.random.PRNGKey(9), (16, 64))
+    ref = _tiny_apply(params, x, spec=spec_for_mode("none"), qstate={})
+    for mode in ("static", "dynamic", "pdq"):
+        out = _tiny_apply(params, x, spec=spec_for_mode(mode, per_channel=per_channel),
+                          qstate=qstate)
+        rel = float(jnp.abs(out - ref).mean() / jnp.abs(ref).mean())
+        assert rel < 0.15, f"{mode} per_channel={per_channel}: rel err {rel}"
+
+
+def test_pdq_adapts_to_input_scale_static_does_not():
+    """The paper's central claim: under input-distribution shift, the PDQ
+    scale tracks the inputs while the static scale is frozen."""
+    key = jax.random.PRNGKey(0)
+    params = (0.1 * jax.random.normal(key, (64, 128)),
+              0.1 * jax.random.normal(jax.random.PRNGKey(1), (128, 32)))
+    calib = [jax.random.normal(jax.random.PRNGKey(i), (8, 64)) for i in range(4)]
+    spec_pdq = spec_for_mode("pdq", per_channel=False)
+    qstate = run_calibration(_tiny_apply, params, calib, spec_pdq)
+    # shift: inputs 6x larger than calibration
+    x = 6.0 * jax.random.normal(jax.random.PRNGKey(9), (16, 64))
+    ref = _tiny_apply(params, x, spec=spec_for_mode("none"), qstate={})
+    errs = {}
+    for mode in ("static", "dynamic", "pdq"):
+        out = _tiny_apply(params, x, spec=spec_for_mode(mode, per_channel=False),
+                          qstate=qstate)
+        errs[mode] = float(jnp.abs(out - ref).mean() / jnp.abs(ref).mean())
+    assert errs["pdq"] < errs["static"] * 0.5, errs
+    assert errs["dynamic"] <= errs["pdq"] * 1.5, errs

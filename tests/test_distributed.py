@@ -1,0 +1,183 @@
+"""Distribution tests: sharding rules, MoE dispatch equivalence, compressed
+collectives, fault handling.  Multi-device cases run in a subprocess with
+XLA_FLAGS so the main test process keeps its single-device view."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import collectives, sharding as shd
+from repro.distributed.fault import StragglerWatchdog
+
+
+def _run_subprocess(code: str, devices: int = 8):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# -------------------------------------------------------------- spec rules
+def test_param_spec_rules():
+    assert shd.spec_for_param("blocks/0/attn/wq", jnp.zeros((8, 64, 128))) \
+        == P(None, "data", "model")
+    assert shd.spec_for_param("blocks/0/attn/wo", jnp.zeros((8, 128, 64))) \
+        == P(None, "model", "data")
+    assert shd.spec_for_param("blocks/0/ffn/we_gate", jnp.zeros((8, 16, 64, 32))) \
+        == P(None, "model", "data", None)
+    assert shd.spec_for_param("embed/embedding", jnp.zeros((1024, 64))) \
+        == P("model", "data")
+    assert shd.spec_for_param("final_norm", jnp.zeros((64,))) == P(None)
+
+
+def test_param_spec_divisibility_fallback():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    # vocab 50280 % 16 != 0 -> vocab axis dropped, d axis kept
+    spec = shd.spec_for_param("embed/embedding", jnp.zeros((50280, 2560)),
+                              FakeMesh())
+    assert spec == P(None, "data")
+
+
+def test_cache_spec_stacked_blocks():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+    caches = {"k": jnp.zeros((6, 8, 32, 2, 16)),      # stacked (blocks, B,...)
+              "state": jnp.zeros((6, 8, 4, 16, 8)),
+              "len": jnp.zeros((6, 8))}
+    specs = shd.cache_spec(FakeMesh(), caches, batch=8)
+    assert specs["k"] == P(None, ("data",), None, "model", None)
+    assert specs["state"] == P(None, ("data",), "model", None, None)
+
+
+# ------------------------------------------------------ compressed collective
+def test_grad_compression_roundtrip_accuracy():
+    g = jax.random.normal(jax.random.PRNGKey(0), (4096,)) * 0.01
+    codes, scale, meta = collectives.quantize_grad(g)
+    back = collectives.dequantize_grad(codes, scale, meta)
+    rel = float(jnp.linalg.norm(back - g) / jnp.linalg.norm(g))
+    assert rel < 0.05
+    assert codes.dtype == jnp.int8
+
+
+def test_compressed_psum_multi_device():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.collectives import compressed_psum
+        n = jax.device_count()
+        assert n == 8
+        def f(g, e):
+            return compressed_psum(g, "dp", e)
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 1024)) * 0.01
+        e = jnp.zeros((8, 1024))
+        out, err = jax.pmap(f, axis_name="dp")(g, e)
+        want = jnp.sum(g, axis=0)
+        rel = float(jnp.linalg.norm(out[0] - want) / jnp.linalg.norm(want))
+        print("REL", rel)
+        assert rel < 0.05, rel
+        # error feedback: residual magnitude bounded by one quantization step
+        assert float(jnp.abs(err).max()) <= float(jnp.abs(g).max())
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_moe_ep_matches_local_dispatch():
+    """Expert-parallel (shard_map, 4-way a2a) MoE == local bucketing MoE."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.models.moe import MoEConfig, moe_init, moe_ffn_tokens
+        cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16,
+                        capacity_factor=8.0)
+        p = moe_init(jax.random.PRNGKey(0), 32, cfg, jnp.float32)
+        routed = {k: p[k] for k in ("router", "we_gate", "we_up", "we_down")}
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        y_local, aux_local = moe_ffn_tokens(routed, x, cfg, axis_name=None)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        def f(rp, xt):
+            return moe_ffn_tokens(rp, xt, cfg, axis_name="model")
+        y_ep, aux_ep = jax.shard_map(
+            f, mesh=mesh,
+            in_specs=({"router": P(None, None), "we_gate": P("model", None, None),
+                       "we_up": P("model", None, None),
+                       "we_down": P("model", None, None)},
+                      P(("data", "model"), None)),
+            out_specs=(P(("data", "model"), None), P()),
+            check_vma=False)(routed, x)
+        err = float(jnp.abs(y_local - y_ep).max())
+        print("ERR", err)
+        assert err < 1e-4, err
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_full_train_step_on_host_mesh():
+    """The fully-sharded train step runs (not just lowers) on an 8-device
+    host mesh - DP x TP with MoE EP via shard_map."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.configs import reduced_config
+        from repro.models import build_model
+        from repro.models import context as mctx
+        from repro.optim import AdamWConfig
+        from repro.train.train_step import (build_train_step, make_state,
+                                            dist_context_for)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(data=4, model=2)
+        mctx.set_context(dist_context_for(mesh))
+        cfg = reduced_config("deepseek-v2-236b")
+        bundle = build_model(cfg)
+        opt = AdamWConfig(lr=1e-3)
+        step, shardings = build_train_step(bundle, opt, mesh)
+        state = make_state(bundle, opt, jax.random.PRNGKey(0))
+        state = jax.device_put(state, shardings)
+        batch = {"tokens": jnp.ones((8, 32), jnp.int32),
+                 "labels": jnp.ones((8, 32), jnp.int32)}
+        state, metrics = step(state, batch)
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        print("LOSS", loss)
+        assert loss == loss and loss < 20
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_elastic_reshard_between_mesh_sizes():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.distributed.fault import reshard_state
+        devs = np.array(jax.devices())
+        mesh_a = Mesh(devs.reshape(4, 2), ("data", "model"))
+        mesh_b = Mesh(devs[:4].reshape(2, 2), ("data", "model"))
+        state = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+        spec = {"w": P("data", "model")}
+        a = reshard_state(state, mesh_a, spec)
+        b = reshard_state(jax.tree.map(np.asarray, jax.device_get(a)), mesh_b, spec)
+        np.testing.assert_array_equal(np.asarray(b["w"]), state["w"])
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------- watchdog
+def test_straggler_watchdog_flags_slow_steps():
+    w = StragglerWatchdog(factor=3.0)
+    for _ in range(20):
+        w.observe(0.1)
+    assert w.observe(1.0) is True
+    assert w.flagged == 1

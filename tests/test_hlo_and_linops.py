@@ -1,0 +1,60 @@
+"""HLO scaled-cost analyzer + PDQ-int8 linop tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze
+from repro.models.linops import is_quantized, lin, quantize_param_tree, quantize_weight
+
+
+def test_analyzer_scales_scan_bodies():
+    """A scan of 10 matmuls must report ~10x one matmul's flops."""
+    w = jnp.ones((64, 64))
+
+    def one(x):
+        return x @ w
+
+    def scanned(x):
+        def body(c, _):
+            return c @ w, ()
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jnp.ones((32, 64))
+    f1 = analyze(jax.jit(one).lower(x).compile().as_text()).dot_flops
+    f10 = analyze(jax.jit(scanned).lower(x).compile().as_text()).dot_flops
+    assert f1 > 0
+    ratio = f10 / f1
+    assert 8.0 <= ratio <= 12.0, ratio
+
+
+def test_analyzer_flops_value():
+    x = jnp.ones((128, 256))
+    w = jnp.ones((256, 512))
+    f = analyze(jax.jit(lambda a, b: a @ b).lower(x, w).compile().as_text())
+    want = 2 * 128 * 256 * 512
+    assert abs(f.dot_flops - want) / want < 0.05
+
+
+def test_quantize_weight_record_and_lin():
+    key = jax.random.PRNGKey(0)
+    w = 0.1 * jax.random.normal(key, (128, 64))
+    rec = quantize_weight(w)
+    assert is_quantized(rec)
+    assert rec["q"].dtype == jnp.int8
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 128))
+    y_fp = lin(x, w)
+    y_q = lin(x, rec)
+    rel = float(jnp.abs(y_q - y_fp).mean() / jnp.abs(y_fp).mean())
+    assert rel < 0.05, rel
+
+
+def test_quantize_param_tree_selects_matrices_only():
+    params = {"attn": {"wq": jnp.ones((32, 32)), "norm": jnp.ones((32,))},
+              "embed": {"embedding": jnp.ones((100, 32))},
+              "blocks": {"we_gate": jnp.ones((4, 32, 16))}}
+    out = quantize_param_tree(params)
+    assert is_quantized(out["attn"]["wq"])
+    assert not is_quantized(out["attn"]["norm"])
+    assert not is_quantized(out["embed"]["embedding"])   # embeddings stay fp
+    assert not is_quantized(out["blocks"]["we_gate"])    # 3-D stacks stay fp

@@ -1,0 +1,190 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Shapes and dtypes are swept with hypothesis; every kernel must match ref.py
+to float32 tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.act_stats import act_stats_p
+from repro.kernels.kv_cache import decode_attend_i8kv_p
+from repro.kernels.quantize import dequantize_p, quantize_p
+from repro.kernels.w8a8_matmul import w8a8_matmul_p
+
+jax.config.update("jax_enable_x64", False)
+
+HYPO = dict(max_examples=8, deadline=None, derandomize=True)
+
+
+def _rand_i8(key, shape):
+    return jax.random.randint(key, shape, -128, 128, dtype=jnp.int32).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# w8a8 matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    m=st.sampled_from([128, 256]),
+    n=st.sampled_from([128, 384]),
+    k=st.sampled_from([128, 256]),
+    requant=st.booleans(),
+    per_channel=st.booleans(),
+)
+def test_w8a8_matmul_kernel_vs_ref(m, n, k, requant, per_channel):
+    keys = jax.random.split(jax.random.PRNGKey(m * n + k), 4)
+    x_q = _rand_i8(keys[0], (m, k))
+    w_q = _rand_i8(keys[1], (k, n))
+    s_x = jax.random.uniform(keys[2], (m, 1), minval=0.01, maxval=0.1)
+    z_x = jax.random.randint(keys[3], (m, 1), -10, 10, dtype=jnp.int32)
+    s_w = (jax.random.uniform(keys[2], (1, n), minval=0.001, maxval=0.01)
+           if per_channel else jnp.full((1, n), 0.005))
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+    s_out = jnp.full((m, 1), 0.7, jnp.float32)
+    z_out = jnp.full((m, 1), 3, jnp.int32)
+
+    got = w8a8_matmul_p(x_q, w_q, s_x, z_x, s_w, colsum, s_out, z_out,
+                        requant=requant, interpret=True)
+    want = ref.w8a8_matmul_ref(x_q, w_q, s_x, z_x, s_w,
+                               s_out if requant else None, z_out if requant else None)
+    if requant:
+        # rounding ties may differ by 1 ulp of the int grid
+        assert np.abs(np.asarray(got, np.int32) - np.asarray(want, np.int32)).max() <= 1
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_w8a8_matmul_ops_padding_and_lead_dims():
+    ops.set_impl("kernel")
+    try:
+        key = jax.random.PRNGKey(0)
+        x_q = _rand_i8(key, (2, 3, 70))            # ragged K, leading dims
+        w_q = _rand_i8(jax.random.PRNGKey(1), (70, 50))
+        y = ops.w8a8_matmul(x_q, w_q, 0.05, 2, jnp.full((50,), 0.01))
+        want = ref.w8a8_matmul_ref(
+            x_q.reshape(6, 70), w_q, jnp.full((6, 1), 0.05), jnp.full((6, 1), 2),
+            jnp.full((1, 50), 0.01))
+        np.testing.assert_allclose(y.reshape(6, 50), want, rtol=1e-5)
+    finally:
+        ops.set_impl("auto")
+
+
+# ---------------------------------------------------------------------------
+# act_stats
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    m=st.sampled_from([256, 512]),
+    k=st.sampled_from([512, 1024]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_act_stats_kernel_vs_ref(m, k, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(m + k), (m, k)).astype(dtype)
+    s1, s2 = act_stats_p(x, interpret=True)
+    w1, w2 = ref.act_stats_ref(x)
+    np.testing.assert_allclose(s1, w1, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2)
+    np.testing.assert_allclose(s2, w2, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2)
+
+
+def test_act_stats_ops_gamma_stride():
+    ops.set_impl("kernel")
+    try:
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 100, 33))
+        s1, s2 = ops.act_stats(x, gamma=4)
+        w1, w2 = ref.act_stats_ref(x[:, ::4].reshape(-1, 33))
+        np.testing.assert_allclose(s1.reshape(-1), w1, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s2.reshape(-1), w2, rtol=1e-4, atol=1e-4)
+    finally:
+        ops.set_impl("auto")
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    m=st.sampled_from([256, 300]),
+    n=st.sampled_from([256, 290]),
+    per_channel=st.booleans(),
+)
+def test_quantize_roundtrip_kernel_vs_ref(m, n, per_channel):
+    x = 4.0 * jax.random.normal(jax.random.PRNGKey(m * n), (m, n))
+    if per_channel:
+        s = jnp.linspace(0.01, 0.2, n).reshape(1, n)
+        z = jnp.zeros((1, n), jnp.int32)
+    else:
+        s = jnp.full((m, 1), 0.05)
+        z = jnp.full((m, 1), 4, jnp.int32)
+    mp, np_ = -(-m // 256) * 256, -(-n // 256) * 256
+    xp = jnp.pad(x, ((0, mp - m), (0, np_ - n)))
+    sp = jnp.pad(s, ((0, 0), (0, np_ - n)), constant_values=1.0) if per_channel \
+        else jnp.pad(s, ((0, mp - m), (0, 0)), constant_values=1.0)
+    zp = jnp.pad(z, ((0, 0), (0, np_ - n))) if per_channel \
+        else jnp.pad(z, ((0, mp - m), (0, 0)))
+    q = quantize_p(xp, sp, zp, interpret=True)[:m, :n]
+    want = ref.quantize_ref(x, s, z)
+    assert np.abs(np.asarray(q, np.int32) - np.asarray(want, np.int32)).max() <= 1
+    y = dequantize_p(jnp.pad(want, ((0, mp - m), (0, np_ - n))), sp, zp,
+                     interpret=True)[:m, :n]
+    np.testing.assert_allclose(y, ref.dequantize_ref(want, s, z), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8-KV flash decode
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    s=st.sampled_from([256, 512]),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 4]),
+    dh=st.sampled_from([64, 128]),
+    frac=st.sampled_from([0.4, 1.0]),
+)
+def test_decode_i8kv_kernel_vs_ref(s, hkv, g, dh, frac):
+    keys = jax.random.split(jax.random.PRNGKey(s + hkv * 7 + g * 13 + dh), 5)
+    H = hkv * g
+    q = jax.random.normal(keys[0], (H, dh))
+    k_q = _rand_i8(keys[1], (s, hkv, dh))
+    v_q = _rand_i8(keys[2], (s, hkv, dh))
+    k_s = jax.random.uniform(keys[3], (s, hkv), minval=0.01, maxval=0.05)
+    v_s = jax.random.uniform(keys[4], (s, hkv), minval=0.01, maxval=0.05)
+    length = jnp.int32(int(s * frac))
+
+    want = ref.decode_attend_i8kv_ref(q, k_q, v_q, k_s, v_s, length)
+    got = decode_attend_i8kv_p(
+        q.reshape(hkv, g, dh),
+        jnp.transpose(k_q, (1, 0, 2)), jnp.transpose(v_q, (1, 0, 2)),
+        jnp.transpose(k_s, (1, 0)), jnp.transpose(v_s, (1, 0)),
+        jnp.full((1, 1), length, jnp.int32), bs=128, interpret=True,
+    ).reshape(H, dh)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_i8kv_ops_batched():
+    B, S, Hkv, G, Dh = 2, 200, 2, 2, 64
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(keys[0], (B, Hkv * G, Dh))
+    k_q = _rand_i8(keys[1], (B, S, Hkv, Dh))
+    v_q = _rand_i8(keys[2], (B, S, Hkv, Dh))
+    k_s = jax.random.uniform(keys[3], (B, S, Hkv), minval=0.01, maxval=0.05)
+    v_s = jax.random.uniform(keys[4], (B, S, Hkv), minval=0.01, maxval=0.05)
+    lens = jnp.array([130, 57], jnp.int32)
+    ops.set_impl("kernel")
+    try:
+        got = ops.decode_attend_i8kv(q, k_q, v_q, k_s, v_s, lens, bs=128)
+    finally:
+        ops.set_impl("auto")
+    want = jax.vmap(ref.decode_attend_i8kv_ref)(q, k_q, v_q, k_s, v_s, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
