@@ -39,6 +39,11 @@ def act_stats_p(
     """Raw pallas call; M, K must be multiples of the block."""
     M, K = x.shape
     bm, bk = block
+    assert M % bm == 0 and K % bk == 0, (
+        f"act_stats_p requires block-multiple shapes: got x ({M}, {K}) with "
+        f"block ({bm}, {bk}) - trailing rows/cols would be silently dropped "
+        f"from the sums; pad the inputs or call repro.kernels.ops.act_stats, "
+        f"which pads for you")
     n_k = K // bk
     grid = (M // bm, n_k)
     out = pl.pallas_call(

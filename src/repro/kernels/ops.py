@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from . import ref
 from .act_stats import act_stats_p
 from .kv_cache import decode_attend_i8kv_p
+from .pdq_prologue import pdq_prologue_p
 from .quantize import dequantize_p, quantize_p
 from .w8a8_matmul import w8a8_matmul_p
 
@@ -65,11 +66,15 @@ def _norm_row(a, M, dtype):
 
 
 def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
-                colsum=None, block=(128, 128, 128)):
+                colsum=None, fp_range=None, out_dtype=jnp.float32,
+                block=(128, 128, 128)):
     """y = s_x*s_w*(x_q @ w_q - z_x*colsum); requantized int8 iff s_out given.
 
     x_q: (..., K) int8; w_q: (K, N) int8. s_x/z_x/s_out/z_out: scalar, (...)
     or (..., 1) per-row; s_w: scalar or (N,) per-channel.
+
+    ``fp_range=(lo, hi)`` (per-row, exclusive with s_out) applies the PDQ
+    interval clamp inside the epilogue and emits ``out_dtype`` directly.
     """
     lead = x_q.shape[:-1]
     K = x_q.shape[-1]
@@ -81,14 +86,22 @@ def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
     s_w2 = jnp.asarray(s_w, jnp.float32)
     s_w2 = jnp.broadcast_to(s_w2.reshape(1, -1) if s_w2.ndim else s_w2, (1, N)).reshape(1, N)
     requant = s_out is not None
+    fp_clamp = fp_range is not None
+    assert not (requant and fp_clamp), "fp_range and s_out are exclusive"
     sx = _norm_row(s_x, M, jnp.float32)
     zx = _norm_row(z_x, M, jnp.int32)
     so = _norm_row(s_out if requant else 1.0, M, jnp.float32)
     zo = _norm_row(z_out if requant else 0, M, jnp.int32)
+    lo = _norm_row(fp_range[0] if fp_clamp else 0.0, M, jnp.float32)
+    hi = _norm_row(fp_range[1] if fp_clamp else 0.0, M, jnp.float32)
 
     if not _use_kernel():
         y = ref.w8a8_matmul_ref(x2, w_q, sx, zx, s_w2,
                                 so if requant else None, zo if requant else None)
+        if fp_clamp:
+            y = jnp.clip(y, lo, hi)
+        if not requant:
+            y = y.astype(out_dtype)
         return y.reshape(*lead, N)
 
     if colsum is None:
@@ -104,9 +117,115 @@ def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
         _pad_to(sx, **pads, value=1.0), _pad_to(zx, **pads),
         _pad_to(s_w2, 1, bn, value=1.0), _pad_to(colsum, 1, bn),
         _pad_to(so, **pads, value=1.0), _pad_to(zo, **pads),
-        requant=requant, block=block, interpret=_interpret(),
+        _pad_to(lo, **pads), _pad_to(hi, **pads),
+        requant=requant, fp_clamp=fp_clamp, out_dtype=out_dtype,
+        block=block, interpret=_interpret(),
     )
     return y[:M, :N].reshape(*lead, N)
+
+
+def pdq_prologue(x, *, block=(128, 512)):
+    """Fused serving-path prologue: ONE pass over x (..., K) emits
+    (x_q int8 like x, s_x, s1, s2 each shaped (..., 1)).
+
+    Replaces the separate amax / quantize / act_stats passes of the unfused
+    path; see kernels/pdq_prologue.py for the dataflow.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    x2 = x.reshape(M, K)
+    if not _use_kernel():
+        x_q, s_x, s1, s2 = ref.pdq_prologue_ref(x2)
+    else:
+        bm, bk = block
+        bk = min(bk, max(K, 1))
+        Kp = K + (-K) % bk
+        # the kernel stages a full (bm, Kp) row block in VMEM: shrink bm
+        # for very long rows so the f32 staging stays well under VMEM.
+        while bm > 8 and bm * Kp * 4 > 8 * 1024 * 1024:
+            bm //= 2
+        xp = _pad_to(_pad_to(x2, 1, bk), 0, bm)
+        x_q, s_x, s1, s2 = pdq_prologue_p(xp, block=(bm, bk),
+                                          interpret=_interpret())
+        x_q = x_q[:M, :K]
+        s_x, s1, s2 = s_x[:M], s1[:M], s2[:M]
+    return (x_q.reshape(*lead, K), s_x.reshape(*lead, 1),
+            s1.reshape(*lead, 1), s2.reshape(*lead, 1))
+
+
+def pdq_interval(wrec, s1, s2):
+    """PDQ surrogate interval from the prologue sums (paper Eqs. 8-9 + I(a,b)).
+
+    s1/s2: (..., 1).  Returns (lo, hi, s_out, z_out) per row, where [lo, hi]
+    is widened to contain 0 and (s_out, z_out) is the affine int8 grid over
+    it.  O(M) scalar math - negligible next to the matmul.
+    """
+    mean = wrec["mu_w"] * s1
+    sigma = jnp.sqrt(jnp.maximum(wrec["var_w"] * s2, 0.0)) + 1e-8
+    lo = jnp.minimum(mean - wrec["alpha"] * sigma, 0.0)
+    hi = jnp.maximum(mean + wrec["beta"] * sigma, 0.0)
+    s_out = jnp.maximum((hi - lo) / 255.0, 1e-8)
+    z_out = -jnp.round(lo / s_out) - 128.0
+    return lo, hi, s_out, z_out
+
+
+def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
+              prologue_block=(128, 512)):
+    """The fused PDQ serving-path dense layer: one prologue + one matmul.
+
+    ``wrec`` is a weight record from ``models.linops.quantize_weight``:
+    {'q' (K, N) int8, 'scale' (N,) f32, 'colsum' (1, N) i32,
+     'mu_w', 'var_w', 'alpha', 'beta' scalars}.
+
+    out='fp'  : returns y (..., N) in ``out_dtype`` (default f32); the PDQ
+                interval is applied as a clamp inside the matmul epilogue,
+                matching the requant->dequant path to one int8 step without
+                materializing the int8 intermediate.
+    out='int8': returns (y_q (..., N) int8, s_out (..., 1) f32,
+                z_out (..., 1) i32) for consumers that stay integer.
+    """
+    assert out in ("fp", "int8"), out
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    x_q, s_x, s1, s2 = pdq_prologue(x, block=prologue_block)
+    lo, hi, s_out, z_out = pdq_interval(wrec, s1, s2)
+    if out == "int8":
+        y_q = w8a8_matmul(x_q, wrec["q"], s_x, 0, wrec["scale"],
+                          s_out, z_out.astype(jnp.int32),
+                          colsum=wrec["colsum"], block=block)
+        return y_q, s_out, z_out.astype(jnp.int32)
+    # clamp to the representable extent of the int8 grid rather than the raw
+    # interval, so fp-out matches requant->dequant at the clip boundaries.
+    lo_g = (-128.0 - z_out) * s_out
+    hi_g = (127.0 - z_out) * s_out
+    y = w8a8_matmul(x_q, wrec["q"], s_x, 0, wrec["scale"],
+                    colsum=wrec["colsum"], fp_range=(lo_g, hi_g),
+                    out_dtype=out_dtype, block=block)
+    return y
+
+
+def pdq_dense_unfused(x, wrec):
+    """The pre-fusion serving path, kept as the oracle/baseline: 3 reads of
+    x (amax / quantize / act_stats) + requant matmul + jnp dequant.
+
+    ``pdq_dense(out='fp')`` must match this to within one int8 step of the
+    predicted grid (tests/test_kernels.py); benchmarks/bench_pdq_dense.py
+    times the two against each other.  Returns (y fp32, s_out per-row).
+    """
+    x32 = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8)
+    s_x = amax / 127.0
+    x_q = jnp.clip(jnp.round(x32 / s_x[..., None]), -127, 127).astype(jnp.int8)
+    s1, s2 = act_stats(x32)
+    lo, hi, s_out, z_out = pdq_interval(wrec, s1[..., None], s2[..., None])
+    z_out = z_out.astype(jnp.int32)
+    y_q = w8a8_matmul(x_q, wrec["q"], s_x[..., None], 0, wrec["scale"],
+                      s_out, z_out, colsum=wrec["colsum"])
+    y = (y_q.astype(jnp.float32) - z_out.astype(jnp.float32)) * s_out
+    return y, s_out
 
 
 def act_stats(x, gamma: int = 1, *, block=(256, 512)):

@@ -33,6 +33,10 @@ def quantize_p(x, scale, zero_point, *, block=(256, 256), interpret=False):
     """x (M, N) float -> int8; scale/zero_point are (M,1) or (1,N)."""
     M, N = x.shape
     bm, bn = min(block[0], M), min(block[1], N)
+    assert M % bm == 0 and N % bn == 0, (
+        f"quantize_p requires block-multiple shapes: got x ({M}, {N}) with "
+        f"block ({bm}, {bn}) - trailing rows/cols would be silently dropped; "
+        f"pad the inputs or call repro.kernels.ops.quantize, which pads")
     grid = (M // bm, N // bn)
     sspec = _scale_spec(scale.shape, bm, bn)
     return pl.pallas_call(
@@ -49,6 +53,10 @@ def dequantize_p(q, scale, zero_point, *, out_dtype=jnp.float32, block=(256, 256
                  interpret=False):
     M, N = q.shape
     bm, bn = min(block[0], M), min(block[1], N)
+    assert M % bm == 0 and N % bn == 0, (
+        f"dequantize_p requires block-multiple shapes: got q ({M}, {N}) with "
+        f"block ({bm}, {bn}) - trailing rows/cols would be silently dropped; "
+        f"pad the inputs or call repro.kernels.ops.dequantize, which pads")
     grid = (M // bm, N // bn)
     sspec = _scale_spec(scale.shape, bm, bn)
     return pl.pallas_call(

@@ -33,6 +33,24 @@ def w8a8_matmul_ref(
     return jnp.clip(q, -128, 127).astype(jnp.int8)
 
 
+def pdq_prologue_ref(
+    x: jax.Array,                      # (M, K) float
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused PDQ prologue oracle: one conceptual pass over x emits the
+    symmetric int8 quantization, its per-row scale, and the surrogate sums.
+
+    Returns (x_q (M,K) int8, s_x (M,1) f32, s1 (M,1) f32, s2 (M,1) f32)
+    with s_x = max(|x|, eps)/127, s1 = sum_k x, s2 = sum_k x^2.
+    """
+    x32 = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1, keepdims=True), 1e-8)
+    s_x = amax / 127.0
+    x_q = jnp.clip(jnp.round(x32 / s_x), -127, 127).astype(jnp.int8)
+    s1 = jnp.sum(x32, axis=-1, keepdims=True)
+    s2 = jnp.sum(jnp.square(x32), axis=-1, keepdims=True)
+    return x_q, s_x, s1, s2
+
+
 def act_stats_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Fused row moments: s1 = sum_k x, s2 = sum_k x^2 for x (M, K) -> (M,), (M,)."""
     x = x.astype(jnp.float32)

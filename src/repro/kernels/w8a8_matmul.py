@@ -7,6 +7,12 @@ the fp32/bf16 output tile never round-trips through HBM.  A dynamic-quant
 epilogue cannot do this - it needs the full output materialized to find its
 range first (the paper's O(b' * h) overhead, transposed to HBM traffic).
 
+Two epilogues share the kernel (see DESIGN.md Sec. 2): ``requant`` emits
+int8 for consumers that stay integer (KV-cache writes, stacked projections);
+``fp_clamp`` emits bf16/f32 clamped to the PDQ-predicted per-row interval
+[lo, hi], so chained fp consumers (residual adds, norms) skip the
+requant -> dequant double rounding and the int8 intermediate entirely.
+
 Tiling: (bm, bn, bk) = (128, 128, 128) by default - MXU-aligned; the int32
 accumulator lives in VMEM scratch across the K grid dimension.
 
@@ -26,7 +32,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, w_ref, sx_ref, zx_ref, sw_ref, colsum_ref, sout_ref, zout_ref,
-            o_ref, acc_ref, *, n_k: int, requant: bool):
+            lo_ref, hi_ref, o_ref, acc_ref, *, n_k: int, requant: bool,
+            fp_clamp: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -47,6 +54,11 @@ def _kernel(x_ref, w_ref, sx_ref, zx_ref, sw_ref, colsum_ref, sout_ref, zout_ref
             q = jnp.round(y / sout_ref[...]) + zout_ref[...].astype(jnp.float32)
             o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
         else:
+            if fp_clamp:
+                # PDQ fp-out epilogue: the surrogate-predicted interval is
+                # applied in-register, so chained fp consumers skip the
+                # int8 requant -> dequant double rounding entirely.
+                y = jnp.clip(y, lo_ref[...], hi_ref[...])
             o_ref[...] = y.astype(o_ref.dtype)
 
 
@@ -59,20 +71,38 @@ def w8a8_matmul_p(
     colsum: jax.Array,    # (1, N) i32  (precomputed at weight-deploy time)
     s_out: jax.Array,     # (M, 1) f32  (ignored unless requant)
     z_out: jax.Array,     # (M, 1) i32
+    lo: jax.Array | None = None,   # (M, 1) f32  (fp_clamp only)
+    hi: jax.Array | None = None,   # (M, 1) f32
     *,
     requant: bool,
+    fp_clamp: bool = False,
     block: tuple[int, int, int] = (128, 128, 128),
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """Raw pallas call; all dims must already be multiples of the block."""
+    """Raw pallas call; all dims must already be multiples of the block.
+
+    Epilogue modes: ``requant=True`` collapses the int32 accumulator to int8
+    with (s_out, z_out); ``fp_clamp=True`` (requires requant=False) emits
+    ``out_dtype`` clamped to the PDQ-predicted per-row interval [lo, hi].
+    """
     M, K = x_q.shape
     _, N = w_q.shape
     bm, bn, bk = block
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (
+        f"w8a8_matmul_p requires block-multiple shapes: got x_q ({M}, {K}), "
+        f"w_q ({K}, {N}) with block ({bm}, {bn}, {bk}); pad the inputs or "
+        f"call repro.kernels.ops.w8a8_matmul, which pads for you")
+    assert not (requant and fp_clamp), "requant and fp_clamp are exclusive"
+    if lo is None:
+        lo = jnp.zeros((M, 1), jnp.float32)
+    if hi is None:
+        hi = jnp.zeros((M, 1), jnp.float32)
     n_k = K // bk
     grid = (M // bm, N // bn, n_k)
 
-    kern = functools.partial(_kernel, n_k=n_k, requant=requant)
+    kern = functools.partial(_kernel, n_k=n_k, requant=requant,
+                             fp_clamp=fp_clamp)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -85,9 +115,11 @@ def w8a8_matmul_p(
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # colsum
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s_out
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # z_out
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # lo
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # hi
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8 if requant else out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, s_x, z_x, s_w, colsum, s_out, z_out)
+    )(x_q, w_q, s_x, z_x, s_w, colsum, s_out, z_out, lo, hi)

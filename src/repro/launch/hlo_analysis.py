@@ -138,16 +138,19 @@ def _dot_flops(line: str, table: dict[str, list[int]]) -> float:
     res = 1
     for d in res_dims:
         res *= d
-    # lhs operand: first argument of dot(...); shape inline or via symbol
+    # lhs operand: first argument of dot(...); shape inline or via symbol.
+    # NB: don't split the operand list on "," first - multi-dim shapes
+    # contain commas ("f32[128,256]{1,0}"), so the first inline shape in the
+    # operand string IS the lhs shape.
     lhs_dims = None
     mo = _OPERANDS_RE.search(line)
     if mo:
-        first = mo.group(1).split(",")[0].strip()
-        ms = _SHAPE.search(first)
+        operands = mo.group(1)
+        ms = _SHAPE.search(operands)
         if ms:
             lhs_dims = [int(d) for d in ms.group(2).split(",") if d]
         else:
-            name = first.lstrip("%")
+            name = operands.split(",")[0].strip().lstrip("%")
             lhs_dims = table.get(name)
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     K = 1

@@ -42,34 +42,18 @@ def is_quantized(w) -> bool:
 
 
 def lin(x: jax.Array, w) -> jax.Array:
-    """y = x @ w, fp or PDQ-int8 depending on the weight leaf."""
+    """y = x @ w, fp or PDQ-int8 depending on the weight leaf.
+
+    The quantized path is the fused serving pipeline (DESIGN.md Sec. 2):
+    ONE prologue kernel reads x and emits (x_q, s_x, s1, s2), the surrogate
+    prices the output interval from (s1, s2) in O(rows), and ONE W8A8
+    matmul applies that interval in its fp-out epilogue - no separate
+    amax / quantize / act_stats passes and no int8 requant -> dequant
+    round-trip on the output.
+    """
     if not is_quantized(w):
         return x @ w
-
-    dt = x.dtype
-    x32 = x.astype(jnp.float32)
-    # per-token symmetric input quantization (input is already materialized -
-    # the paper's overhead concerns the *output* pre-activations)
-    amax = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8)
-    s_x = amax / 127.0
-    x_q = jnp.clip(jnp.round(x32 / s_x[..., None]), -127, 127).astype(jnp.int8)
-
-    # PDQ surrogate: predict the output range BEFORE the matmul (Eqs. 8-9 + I(a,b))
-    s1, s2 = ops.act_stats(x32)
-    mean = w["mu_w"] * s1
-    sigma = jnp.sqrt(jnp.maximum(w["var_w"] * s2, 0.0)) + 1e-8
-    lo = mean - w["alpha"] * sigma
-    hi = mean + w["beta"] * sigma
-    lo = jnp.minimum(lo, 0.0)
-    hi = jnp.maximum(hi, 0.0)
-    s_out = jnp.maximum((hi - lo) / 255.0, 1e-8)
-    z_out = (-jnp.round(lo / s_out) - 128.0).astype(jnp.int32)
-
-    y_q = ops.w8a8_matmul(x_q, w["q"], s_x[..., None], 0, w["scale"],
-                          s_out[..., None], z_out[..., None], colsum=w["colsum"])
-    y = (y_q.astype(jnp.float32) - z_out[..., None].astype(jnp.float32)) \
-        * s_out[..., None]
-    return y.astype(dt)
+    return ops.pdq_dense(x, w, out="fp", out_dtype=x.dtype)
 
 
 def quantize_param_tree(params, path_pred=None, alpha: float = 6.0, beta: float = 6.0):

@@ -108,7 +108,7 @@ def moe_ffn_tokens(
     """Expert-parallel MoE over already-flattened local tokens."""
     T, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
-    nshards = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    nshards = 1 if axis_name is None else jax.lax.psum(1, axis_name)  # static int
     E_loc = E // nshards
 
     gates, ids, aux = route(x, p["router"], cfg)
@@ -143,7 +143,7 @@ def moe_ffn_dense_masked(
     """Decode-path MoE: every shard computes its local experts over all
     tokens, masked by gates; psum over the expert axis combines."""
     E, k = cfg.n_experts, cfg.top_k
-    nshards = 1 if axis_name is None else jax.lax.axis_size(axis_name)
+    nshards = 1 if axis_name is None else jax.lax.psum(1, axis_name)  # static int
     E_loc = E // nshards
     gates, ids, aux = route(x, p["router"], cfg)
     shard = 0 if axis_name is None else jax.lax.axis_index(axis_name)

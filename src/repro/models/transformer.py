@@ -107,7 +107,7 @@ def _apply_ffn(p_ffn, cfg: ArchConfig, kind: str, h: jax.Array, mode: str):
         def f(rp, xt):
             yy, ax = moe_ffn_tokens(rp, xt, cfg.moe, axis_name=ctx.expert_axis)
             return yy, jax.lax.pmean(ax, ctx.token_axes)
-        y, aux = jax.shard_map(
+        y, aux = context.shard_map(
             f, mesh=ctx.mesh,
             in_specs=(context.moe_param_specs(routed), P(ctx.token_axes, None)),
             out_specs=(P(ctx.token_axes, None), P()),
@@ -117,7 +117,7 @@ def _apply_ffn(p_ffn, cfg: ArchConfig, kind: str, h: jax.Array, mode: str):
         def f(rp, xt):
             yy, ax = moe_ffn_dense_masked(rp, xt, cfg.moe, axis_name=ctx.expert_axis)
             return yy, jax.lax.pmean(ax, ctx.data_axes)
-        y, aux = jax.shard_map(
+        y, aux = context.shard_map(
             f, mesh=ctx.mesh,
             in_specs=(context.moe_param_specs(routed), P(ctx.data_axes, None)),
             out_specs=(P(ctx.data_axes, None), P()),

@@ -5,8 +5,10 @@ Production features:
     new requests claim freed slots without recompiling);
   * greedy or temperature sampling;
   * optional PDQ-int8 weight path (``quantize_weights=True`` replaces every
-    large projection with an int8 record; matmuls run W8A8 with the
-    surrogate-predicted requant scale - see models/linops.py);
+    large projection with an int8 record; each projection then runs the
+    fused serving pipeline - ONE prologue kernel over the activations plus
+    ONE W8A8 matmul whose fp-out epilogue applies the surrogate-predicted
+    interval, see models/linops.py and DESIGN.md Sec. 2);
   * optional int8 KV cache (cfg.quant_kv='dynamic'), the decode kernel
     dequantizes in-VMEM (kernels/kv_cache.py).
 """
@@ -50,6 +52,7 @@ class ServeEngine:
         self.lengths = np.zeros((slots,), np.int64)
         self.active: list[Request | None] = [None] * slots
         self.last_tokens = np.zeros((slots,), np.int64)
+        self.finished: list[Request] = []    # completion order, appended O(1)
         self._decode = jax.jit(self.bundle.decode_step)
 
     # ----------------------------------------------------------------- admin
@@ -104,18 +107,24 @@ class ServeEngine:
             self.last_tokens[i] = int(nxt[i])
             if len(req.generated) >= req.max_new or self.lengths[i] >= self.max_len - 1:
                 req.done = True
+                self.finished.append(req)
                 self.active[i] = None     # slot freed for the next request
         return len([r for r in self.active if r is not None])
 
     def run(self, requests: list[Request], extras=None) -> list[Request]:
-        """Drain a request list through the engine (continuous batching)."""
+        """Drain a request list through the engine (continuous batching).
+
+        Completion is tracked incrementally: ``step`` appends each finished
+        request to ``self.finished`` as its slot frees, so draining is O(1)
+        per completion instead of rescanning the whole request list (an
+        O(n^2) list-membership loop) every decode step.
+        """
         pending = list(requests)
-        done: list[Request] = []
-        while pending or any(r is not None for r in self.active):
+        n_active = sum(r is not None for r in self.active)   # pre-submitted
+        while pending or n_active:
             while pending and self._free_slot() is not None:
                 if not self.submit(pending[0], extras):
                     break
                 pending.pop(0)
-            self.step()
-            done.extend(r for r in requests if r.done and r not in done)
+            n_active = self.step()
         return requests

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
+    from _hypo_compat import given, settings, strategies as st
 
 from repro.models.attention import chunked_attention, decode_attention
 

@@ -12,7 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
+    from _hypo_compat import given, settings, strategies as st
 
 from repro.core import (affine, interval, qlinear, run_calibration,
                         spec_for_mode, surrogate)
@@ -32,7 +35,10 @@ def test_affine_roundtrip_error_bound(lo, width, bits):
     qp = affine.qparams_from_range(jnp.float32(m), jnp.float32(M), bits)
     x = jnp.linspace(m, M, 257)
     err = jnp.abs(affine.fake_quant(x, qp) - x)
-    assert float(err.max()) <= float(qp.scale) * 0.5 + 1e-6
+    # the round-trip cannot beat float32 itself: allow a few ulps at |x|max
+    # on top of the half-step bound (matters for bits=16 over wide ranges)
+    slack = 4.0 * float(np.spacing(np.float32(max(abs(m), abs(M)))))
+    assert float(err.max()) <= float(qp.scale) * 0.5 + slack + 1e-6
 
 
 @settings(**HYPO)

@@ -3,8 +3,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
 from repro.launch.hlo_analysis import analyze
 from repro.models.linops import is_quantized, lin, quantize_param_tree, quantize_weight
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    """Recursively count pallas_call eqns in a (Closed)Jaxpr."""
+    if hasattr(jaxpr, "jaxpr"):              # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    n += _count_pallas_calls(sub)
+    return n
 
 
 def test_analyzer_scales_scan_bodies():
@@ -47,6 +63,21 @@ def test_quantize_weight_record_and_lin():
     y_q = lin(x, rec)
     rel = float(jnp.abs(y_q - y_fp).mean() / jnp.abs(y_fp).mean())
     assert rel < 0.05, rel
+
+
+def test_lin_quantized_is_one_prologue_one_matmul():
+    """The fused serving path must trace to EXACTLY two kernels: the pdq
+    prologue and the W8A8 matmul - no separate amax / quantize / act_stats
+    launches and no requant->dequant pair on the output."""
+    rec = quantize_weight(0.1 * jax.random.normal(jax.random.PRNGKey(0), (128, 128)))
+    x = jnp.ones((8, 128))
+    ops.set_impl("kernel")
+    try:
+        jaxpr = jax.make_jaxpr(lambda t: lin(t, rec))(x)
+    finally:
+        ops.set_impl("auto")
+    n = _count_pallas_calls(jaxpr)
+    assert n == 2, f"expected prologue + matmul, traced {n} pallas_calls"
 
 
 def test_quantize_param_tree_selects_matrices_only():

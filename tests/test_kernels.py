@@ -7,13 +7,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
+    from _hypo_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.act_stats import act_stats_p
 from repro.kernels.kv_cache import decode_attend_i8kv_p
+from repro.kernels.pdq_prologue import pdq_prologue_p
 from repro.kernels.quantize import dequantize_p, quantize_p
 from repro.kernels.w8a8_matmul import w8a8_matmul_p
+from repro.models.linops import quantize_weight
 
 jax.config.update("jax_enable_x64", False)
 
@@ -188,3 +193,142 @@ def test_decode_i8kv_ops_batched():
         ops.set_impl("auto")
     want = jax.vmap(ref.decode_attend_i8kv_ref)(q, k_q, v_q, k_s, v_s, lens)
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused PDQ prologue + pdq_dense (one prologue + one matmul serving path)
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    m=st.sampled_from([128, 256]),
+    k=st.sampled_from([512, 1024]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_pdq_prologue_kernel_vs_ref(m, k, dtype):
+    x = 3.0 * jax.random.normal(jax.random.PRNGKey(m + k), (m, k)).astype(dtype)
+    got = pdq_prologue_p(x, block=(128, 512), interpret=True)
+    want = ref.pdq_prologue_ref(x.reshape(m, k))
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-6)   # s_x
+    # quantization may differ by 1 at exact rounding ties
+    assert np.abs(np.asarray(got[0], np.int32) - np.asarray(want[0], np.int32)).max() <= 1
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got[2], want[2], rtol=tol, atol=1e-2)    # s1
+    np.testing.assert_allclose(got[3], want[3], rtol=tol, atol=1e-2)    # s2
+
+
+def test_pdq_prologue_ops_padding_and_lead_dims():
+    """Non-multiple (M, K) + leading batch dims exercise every _pad_to branch."""
+    ops.set_impl("kernel")
+    try:
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 65, 257))
+        x_q, s_x, s1, s2 = ops.pdq_prologue(x)
+        wq, wsx, ws1, ws2 = ref.pdq_prologue_ref(x.reshape(130, 257))
+        assert x_q.shape == (2, 65, 257) and s_x.shape == (2, 65, 1)
+        assert np.abs(np.asarray(x_q, np.int32).reshape(130, 257)
+                      - np.asarray(wq, np.int32)).max() <= 1
+        np.testing.assert_allclose(s_x.reshape(130, 1), wsx, rtol=1e-5)
+        np.testing.assert_allclose(s1.reshape(130, 1), ws1, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s2.reshape(130, 1), ws2, rtol=1e-4, atol=1e-4)
+    finally:
+        ops.set_impl("auto")
+
+
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+@pytest.mark.parametrize("shape", [(6, 128, 64), (130, 257, 100)])
+def test_pdq_dense_fp_matches_unfused_requant_dequant(impl, shape):
+    """fp-out epilogue == requant->dequant to within ONE int8 step per row,
+    for both the jnp oracle and the interpreted kernels, on block-multiple
+    and ragged shapes."""
+    M, K, N = shape
+    w = 0.05 * jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    rec = quantize_weight(w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    ops.set_impl(impl)
+    try:
+        y_fused = ops.pdq_dense(x, rec, out="fp")
+        y_unfused, s_out = ops.pdq_dense_unfused(x, rec)
+    finally:
+        ops.set_impl("auto")
+    step = np.asarray(s_out).reshape(M, 1)
+    err = np.abs(np.asarray(y_fused) - np.asarray(y_unfused))
+    assert (err <= step + 1e-6).all(), float((err / step).max())
+
+
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+def test_pdq_dense_int8_out_matches_unfused(impl):
+    M, K, N = 130, 257, 100       # ragged: every _pad_to branch
+    w = 0.05 * jax.random.normal(jax.random.PRNGKey(2), (K, N))
+    rec = quantize_weight(w)
+    x = jax.random.normal(jax.random.PRNGKey(3), (M, K))
+    ops.set_impl(impl)
+    try:
+        y_q, s_out, z_out = ops.pdq_dense(x, rec, out="int8")
+        x_q, s_x, s1, s2 = ops.pdq_prologue(x)
+    finally:
+        ops.set_impl("auto")
+    assert y_q.dtype == jnp.int8 and y_q.shape == (M, N)
+    assert s_out.shape == (M, 1) and z_out.dtype == jnp.int32
+    # against the fully-unfused integer pipeline on the same quantized input
+    acc = x_q.astype(jnp.int32) @ rec["q"].astype(jnp.int32)
+    yf = s_x * rec["scale"][None, :] * acc.astype(jnp.float32)
+    want = jnp.clip(jnp.round(yf / s_out) + z_out.astype(jnp.float32), -128, 127)
+    assert np.abs(np.asarray(y_q, np.int32) - np.asarray(want, np.int32)).max() <= 1
+
+
+def test_pdq_dense_per_channel_weight_scale_roundtrip():
+    """Per-output-channel weight scales flow through both epilogues."""
+    K, N = 128, 128
+    w = jnp.concatenate([0.01 * jnp.ones((K, N // 2)),
+                         0.2 * jnp.ones((K, N // 2))], axis=1)
+    w = w * jax.random.normal(jax.random.PRNGKey(4), (K, N))
+    rec = quantize_weight(w)
+    assert rec["scale"].shape == (N,)
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, K))
+    y = ops.pdq_dense(x, rec, out="fp")
+    rel = float(jnp.abs(y - x @ w).mean() / jnp.abs(x @ w).mean())
+    assert rel < 0.05, rel
+
+
+def test_w8a8_fp_clamp_epilogue_kernel_vs_ref():
+    m, k, n = 128, 128, 128
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    x_q = _rand_i8(keys[0], (m, k))
+    w_q = _rand_i8(keys[1], (k, n))
+    s_x = jax.random.uniform(keys[2], (m, 1), minval=0.01, maxval=0.1)
+    s_w = jnp.full((1, n), 0.005)
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+    lo = jnp.full((m, 1), -1.0)
+    hi = jnp.full((m, 1), 1.5)
+    got = w8a8_matmul_p(x_q, w_q, s_x, jnp.zeros((m, 1), jnp.int32), s_w,
+                        colsum, jnp.ones((m, 1)), jnp.zeros((m, 1), jnp.int32),
+                        lo, hi, requant=False, fp_clamp=True, interpret=True)
+    want = jnp.clip(ref.w8a8_matmul_ref(x_q, w_q, s_x,
+                                        jnp.zeros((m, 1), jnp.int32), s_w),
+                    lo, hi)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# block-divisibility guards on the raw kernels
+# ---------------------------------------------------------------------------
+
+
+def test_raw_kernels_reject_non_block_multiples():
+    x = jnp.zeros((130, 300))
+    q = jnp.zeros((130, 300), jnp.int8)
+    s = jnp.ones((130, 1))
+    z = jnp.zeros((130, 1), jnp.int32)
+    with pytest.raises(AssertionError, match="block-multiple"):
+        quantize_p(x, s, z)
+    with pytest.raises(AssertionError, match="block-multiple"):
+        dequantize_p(q, s, z)
+    with pytest.raises(AssertionError, match="block-multiple"):
+        act_stats_p(x)
+    with pytest.raises(AssertionError, match="block-multiple"):
+        pdq_prologue_p(x)
+    with pytest.raises(AssertionError, match="block-multiple"):
+        w8a8_matmul_p(q, jnp.zeros((300, 100), jnp.int8), s, z,
+                      jnp.ones((1, 100)), jnp.zeros((1, 100), jnp.int32),
+                      s, z, requant=True)

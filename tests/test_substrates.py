@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
+    from _hypo_compat import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager
 from repro.checkpoint.io import load_pytree, save_pytree
