@@ -1,0 +1,57 @@
+"""Baseline comparison for the BENCH_*.json perf trajectory.
+
+``compare(current, baseline_path, keys)`` matches cells between the
+current run and a committed baseline on the given shape keys and fails
+(returns non-zero) when the GEOMEAN *speedup ratio* over the matched
+cells regressed by more than ``threshold`` (default 25%).  Speedup
+(fused/unfused wall-time ratio) is dimensionless, so the check is
+meaningful across hosts of different absolute speed, and the geomean
+absorbs the per-cell timer noise of small smoke shapes while still
+catching a systemic regression (losing the fusion shifts every cell at
+once).  Per-cell ratios are printed informationally.  Runs on different
+backends (e.g. a TPU baseline checked from a CPU CI host) are skipped
+with a note rather than failed.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+
+def compare(current: dict, baseline_path: str, keys: tuple[str, ...],
+            threshold: float = 0.25) -> int:
+    """Return 0 if the matched-cell geomean speedup is within threshold of
+    the baseline's, else 1."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    cur_backend = current.get("meta", {}).get("backend")
+    base_backend = baseline.get("meta", {}).get("backend")
+    if cur_backend != base_backend:
+        print(f"compare: SKIP - backend mismatch (current={cur_backend}, "
+              f"baseline={base_backend})")
+        return 0
+    base_by_key = {tuple(c[k] for k in keys): c for c in baseline["cells"]}
+    log_cur, log_base = 0.0, 0.0
+    matched = 0
+    for cell in current["cells"]:
+        key = tuple(cell[k] for k in keys)
+        base = base_by_key.get(key)
+        if base is None:
+            continue
+        matched += 1
+        log_cur += math.log(cell["speedup"])
+        log_base += math.log(base["speedup"])
+        print(f"compare: cell {dict(zip(keys, key))}  speedup "
+              f"{cell['speedup']:.2f}x vs baseline {base['speedup']:.2f}x")
+    if matched == 0:
+        print(f"compare: WARNING - no cells of {baseline_path} match this "
+              f"sweep; nothing checked")
+        return 0
+    geo_cur = math.exp(log_cur / matched)
+    geo_base = math.exp(log_base / matched)
+    ok = geo_cur >= geo_base * (1.0 - threshold)
+    print(f"compare: geomean speedup {geo_cur:.2f}x vs baseline "
+          f"{geo_base:.2f}x over {matched} cells -> "
+          f"{'ok' if ok else f'REGRESSED more than {threshold:.0%}'} "
+          f"({baseline_path})")
+    return 0 if ok else 1

@@ -1,0 +1,19 @@
+"""Shared wall-clock timing helper for the BENCH_* harnesses."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def median_time(fn, x, iters: int) -> float:
+    """Median wall-clock seconds per call, after compile + warmup."""
+    y = fn(x)
+    jax.block_until_ready(y)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -8,7 +8,9 @@ unfused : the pre-fusion serving path - separate amax / quantize /
 Writes ``BENCH_pdq_dense.json`` (fused/unfused wall-clock per cell plus
 environment metadata) next to this file so subsequent PRs have a perf
 trajectory to defend.  Shapes: M in {8, 64, 256} x K=N in {2048, 4096,
-8192}; ``--quick`` shrinks the sweep to a smoke test for CI.
+8192} plus the CI smoke cells; ``--quick`` shrinks the sweep to the smoke
+cells only, and ``--compare <baseline.json>`` fails on a >25% speedup
+regression against the committed JSON (see _compare.py).
 
 Dispatch follows ``ops.set_impl`` 'auto': real Pallas kernels on TPU, the
 jnp oracle elsewhere (interpret-mode Pallas is a correctness tool, not a
@@ -19,28 +21,19 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
+import sys
 
 import jax
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _compare import compare
+from _timing import median_time
 
 from repro.kernels import ops
 from repro.models.linops import quantize_weight
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                    "BENCH_pdq_dense.json")
-
-
-def _time(fn, x, iters: int) -> float:
-    """Median wall-clock seconds per call, after compile + warmup."""
-    y = fn(x)
-    jax.block_until_ready(y)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(x))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
 
 
 def bench_cell(M: int, K: int, N: int, iters: int) -> dict:
@@ -51,8 +44,8 @@ def bench_cell(M: int, K: int, N: int, iters: int) -> dict:
 
     fused = jax.jit(lambda t: ops.pdq_dense(t, rec, out="fp"))
     unfused = jax.jit(lambda t: ops.pdq_dense_unfused(t, rec)[0])
-    t_fused = _time(fused, x, iters)
-    t_unfused = _time(unfused, x, iters)
+    t_fused = median_time(fused, x, iters)
+    t_unfused = median_time(unfused, x, iters)
     return {"M": M, "K": K, "N": N,
             "fused_ms": t_fused * 1e3, "unfused_ms": t_unfused * 1e3,
             "speedup": t_unfused / t_fused}
@@ -64,21 +57,30 @@ def main() -> None:
                     help="small shapes / few iters (CI smoke)")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--out", default=OUT)
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="fail on >25%% speedup regression vs this baseline")
     args = ap.parse_args()
 
+    # ms-scale 2048 cells anchor the smoke comparison - the sub-ms cells
+    # alone are within timer noise of a shared CI runner
+    quick_spec = ([(m, kn) for kn in (512, 1024) for m in (8, 64)]
+                  + [(8, 2048), (64, 2048)])
     if args.quick:
-        ms, kns, iters = (8, 64), (256, 512), args.iters or 3
+        cells_spec, iters = quick_spec, args.iters or 9
     else:
-        ms, kns, iters = (8, 64, 256), (2048, 4096, 8192), args.iters or 5
+        # the quick cells ride along so CI smoke runs intersect the
+        # committed baseline (see --compare)
+        full = [(m, kn) for kn in (2048, 4096, 8192) for m in (8, 64, 256)]
+        cells_spec = list(dict.fromkeys(quick_spec + full))
+        iters = args.iters or 9
 
     cells = []
-    for kn in kns:
-        for m in ms:
-            cell = bench_cell(m, kn, kn, iters)
-            cells.append(cell)
-            print(f"M={m:4d} K=N={kn:5d}  fused {cell['fused_ms']:9.3f} ms  "
-                  f"unfused {cell['unfused_ms']:9.3f} ms  "
-                  f"x{cell['speedup']:.2f}")
+    for m, kn in cells_spec:
+        cell = bench_cell(m, kn, kn, iters)
+        cells.append(cell)
+        print(f"M={m:4d} K=N={kn:5d}  fused {cell['fused_ms']:9.3f} ms  "
+              f"unfused {cell['unfused_ms']:9.3f} ms  "
+              f"x{cell['speedup']:.2f}")
 
     out = {
         "meta": {
@@ -95,6 +97,8 @@ def main() -> None:
         json.dump(out, f, indent=2)
         f.write("\n")
     print(f"wrote {args.out}")
+    if args.compare:
+        sys.exit(compare(out, args.compare, keys=("M", "K", "N")))
 
 
 if __name__ == "__main__":

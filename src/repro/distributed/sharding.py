@@ -24,6 +24,7 @@ import re
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.tree_util import tree_flatten_with_path, tree_unflatten
@@ -36,15 +37,17 @@ _RULES: list[tuple[str, tuple]] = [
     (r"we_up$", ("model", "data", None)),
     (r"we_down$", ("model", None, "data")),
     (r"router$", (None, None)),
-    # column-parallel (d_model -> wide)
-    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)(/q)?$", ("data", "model")),
+    # column-parallel (d_model -> wide); grouped records live under
+    # <sibling>/group/ and keep the column-parallel layout (the N axis is
+    # the segment concatenation, every segment padded to 128 lanes)
+    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)(/group)?(/q)?$", ("data", "model")),
     # row-parallel (wide -> d_model)
     (r"(wo|w_down|out_proj|wk_b|wv_b)(/q)?$", ("model", "data")),
     # low-rank down-projections: small output, shard input dim only
-    (r"(wq_a|wkv_a)(/q)?$", ("data", None)),
+    (r"(wq_a|wkv_a)(/group)?(/q)?$", ("data", None)),
     # quantized-record auxiliaries: per-output-channel vectors
-    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)/scale$", ("model",)),
-    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)/colsum$", (None, "model")),
+    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)(/group)?/scale$", ("model",)),
+    (r"(wq|wk|wv|wq_b|w_gate|w_up|in_proj)(/group)?/colsum$", (None, "model")),
     (r"(wo|w_down|out_proj|wk_b|wv_b)/scale$", ("data",)),
     (r"(wo|w_down|out_proj|wk_b|wv_b)/colsum$", (None, "data")),
     (r"conv_w$", (None, "model")),
@@ -153,20 +156,21 @@ def cache_spec(mesh: Mesh, caches, batch: int,
             e[0] = dp
         seq_ok = (not batch_sharded) and core >= 2 and shape[1] % data_size == 0
         sp_ok = seq_over_model and core >= 2 and shape[1] % model_size == 0
-        if name in ("k", "v"):
+        if name in ("k", "v", "k_scale", "v_scale"):
+            # int8 KV caches (and their scales, which only exist quantized)
+            # are stored in kernel layout (B, Hkv, S[, Dh]); fp caches stay
+            # logical (B, S, Hkv[, Dh]).  See models/attention.init_cache.
+            kernel_layout = (name in ("k_scale", "v_scale")
+                             or leaf.dtype == jnp.int8)
+            head_ax, seq_ax = (1, 2) if kernel_layout else (2, 1)
+            seq_ok = (not batch_sharded) and shape[seq_ax] % data_size == 0
+            sp_ok = seq_over_model and shape[seq_ax] % model_size == 0
             if sp_ok:
-                e[1] = "model"                # sequence-parallel prefill
-            elif shape[2] % model_size == 0:
-                e[2] = "model"
+                e[seq_ax] = "model"           # sequence-parallel prefill
+            elif shape[head_ax] % model_size == 0:
+                e[head_ax] = "model"
             if seq_ok:
-                e[1] = "data"                 # context parallel (long_500k)
-        elif name in ("k_scale", "v_scale"):
-            if sp_ok:
-                e[1] = "model"
-            elif shape[2] % model_size == 0:
-                e[2] = "model"
-            if seq_ok:
-                e[1] = "data"
+                e[seq_ax] = "data"            # context parallel (long_500k)
         elif name in ("ckv", "krope"):
             if sp_ok:
                 e[1] = "model"

@@ -69,6 +69,10 @@ def decode_attend_i8kv_p(
     Hkv, G, Dh = q.shape
     S = k_q.shape[1]
     bs = min(bs, S)
+    assert S % bs == 0, (
+        f"decode_attend_i8kv_p requires block-multiple shapes: S ({S}) must "
+        f"be a multiple of bs ({bs}); pad the cache or call "
+        f"repro.kernels.ops.decode_attend_i8kv, which pads for you")
     n_s = S // bs
     grid = (Hkv, n_s)
     kern = functools.partial(_kernel, n_s=n_s, bs=bs, scale=1.0 / (Dh ** 0.5))

@@ -15,6 +15,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .act_stats import act_stats_p
@@ -70,11 +71,17 @@ def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
                 block=(128, 128, 128)):
     """y = s_x*s_w*(x_q @ w_q - z_x*colsum); requantized int8 iff s_out given.
 
-    x_q: (..., K) int8; w_q: (K, N) int8. s_x/z_x/s_out/z_out: scalar, (...)
-    or (..., 1) per-row; s_w: scalar or (N,) per-channel.
+    x_q: (..., K) int8; w_q: (K, N) int8. s_x/z_x: scalar, (...) or
+    (..., 1) per-row; s_w: scalar or (N,) per-channel.
 
-    ``fp_range=(lo, hi)`` (per-row, exclusive with s_out) applies the PDQ
-    interval clamp inside the epilogue and emits ``out_dtype`` directly.
+    ``fp_range=(lo, hi)`` (exclusive with s_out) applies the PDQ interval
+    clamp inside the epilogue and emits ``out_dtype`` directly.
+
+    Epilogue operands (s_out/z_out/lo/hi) accept two layouts: per-row
+    (scalar, (...) or (..., 1)) or per-(row, N-block) - shaped
+    (..., N // bn) with bn the N block - which gives each 128-lane output
+    segment of a grouped matmul its own surrogate grid (requires N to be a
+    multiple of bn; see ``pdq_dense_grouped``).
     """
     lead = x_q.shape[:-1]
     K = x_q.shape[-1]
@@ -88,14 +95,46 @@ def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
     requant = s_out is not None
     fp_clamp = fp_range is not None
     assert not (requant and fp_clamp), "fp_range and s_out are exclusive"
+    bm, bn, bk = block
+
+    def _is_per_block(a):
+        a = jnp.asarray(a)
+        return a.ndim == len(lead) + 1 and a.shape[-1] > 1
+
+    epi_in = (s_out if requant else 1.0, z_out if requant else 0,
+              fp_range[0] if fp_clamp else 0.0, fp_range[1] if fp_clamp else 0.0)
+    per_nblock = any(_is_per_block(a) for a in epi_in)
+    if per_nblock:
+        assert N % bn == 0, (
+            f"per-(row, N-block) epilogue operands require N ({N}) to be a "
+            f"multiple of the N block ({bn})")
+        nb = N // bn
+
+        def _norm_epi(a, dtype):
+            a = jnp.asarray(a, dtype)
+            if a.ndim == 0:
+                return jnp.full((M, nb), a)
+            a = a.reshape(M, -1)
+            assert a.shape[1] in (1, nb), (
+                f"epilogue operand has {a.shape[1]} columns; expected 1 "
+                f"(per-row) or {nb} (per-N-block)")
+            return jnp.broadcast_to(a, (M, nb))
+    else:
+        def _norm_epi(a, dtype):
+            return _norm_row(a, M, dtype)
+
     sx = _norm_row(s_x, M, jnp.float32)
     zx = _norm_row(z_x, M, jnp.int32)
-    so = _norm_row(s_out if requant else 1.0, M, jnp.float32)
-    zo = _norm_row(z_out if requant else 0, M, jnp.int32)
-    lo = _norm_row(fp_range[0] if fp_clamp else 0.0, M, jnp.float32)
-    hi = _norm_row(fp_range[1] if fp_clamp else 0.0, M, jnp.float32)
+    so = _norm_epi(epi_in[0], jnp.float32)
+    zo = _norm_epi(epi_in[1], jnp.int32)
+    lo = _norm_epi(epi_in[2], jnp.float32)
+    hi = _norm_epi(epi_in[3], jnp.float32)
 
     if not _use_kernel():
+        if per_nblock:
+            # expand per-block columns to per-channel (each block spans bn
+            # lanes) so the jnp oracle broadcasts them exactly.
+            so, zo, lo, hi = (jnp.repeat(a, bn, axis=-1) for a in (so, zo, lo, hi))
         y = ref.w8a8_matmul_ref(x2, w_q, sx, zx, s_w2,
                                 so if requant else None, zo if requant else None)
         if fp_clamp:
@@ -107,10 +146,8 @@ def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
     if colsum is None:
         colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
     colsum = colsum.reshape(1, N)
-    bm, bn, bk = block
     xp = _pad_to(_pad_to(x2, 0, bm), 1, bk)
     wp = _pad_to(_pad_to(w_q, 0, bk), 1, bn)
-    Mp = xp.shape[0]
     pads = dict(axis=0, mult=bm)
     y = w8a8_matmul_p(
         xp, wp,
@@ -118,8 +155,8 @@ def w8a8_matmul(x_q, w_q, s_x, z_x, s_w, s_out=None, z_out=None, *,
         _pad_to(s_w2, 1, bn, value=1.0), _pad_to(colsum, 1, bn),
         _pad_to(so, **pads, value=1.0), _pad_to(zo, **pads),
         _pad_to(lo, **pads), _pad_to(hi, **pads),
-        requant=requant, fp_clamp=fp_clamp, out_dtype=out_dtype,
-        block=block, interpret=_interpret(),
+        requant=requant, fp_clamp=fp_clamp, per_nblock=per_nblock,
+        out_dtype=out_dtype, block=block, interpret=_interpret(),
     )
     return y[:M, :N].reshape(*lead, N)
 
@@ -162,6 +199,11 @@ def pdq_interval(wrec, s1, s2):
     s1/s2: (..., 1).  Returns (lo, hi, s_out, z_out) per row, where [lo, hi]
     is widened to contain 0 and (s_out, z_out) is the affine int8 grid over
     it.  O(M) scalar math - negligible next to the matmul.
+
+    Grouped records carry (n_seg,) weight stats; the same expression then
+    broadcasts (..., 1) x (n_seg,) -> (..., n_seg), pricing every segment's
+    interval from the ONE shared (s1, s2) pair - the sharing is exact, not
+    approximate, because the moments depend only on the input row.
     """
     mean = wrec["mu_w"] * s1
     sigma = jnp.sqrt(jnp.maximum(wrec["var_w"] * s2, 0.0)) + 1e-8
@@ -205,6 +247,56 @@ def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
                     colsum=wrec["colsum"], fp_range=(lo_g, hi_g),
                     out_dtype=out_dtype, block=block)
     return y
+
+
+def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
+                      block=(128, 128, 128), prologue_block=(128, 512)):
+    """Grouped PDQ dense: ONE prologue + ONE wide W8A8 matmul for every
+    projection consuming the same input (DESIGN.md "Grouped execution").
+
+    ``grec`` is a record from ``models.linops.group_quantize_weights``:
+    sibling weights concatenated along N (each segment padded to the
+    128-lane boundary) with per-segment (n_seg,) surrogate stats and a
+    static ``segs`` layout.  The prologue's (x_q, s_x, s1, s2) serve every
+    segment; ``pdq_interval`` broadcasts to per-(row, segment) grids, which
+    the matmul applies per N-block in its epilogue.
+
+    out='fp'  : returns a tuple of per-segment outputs (..., N_i) in
+                ``out_dtype`` (default f32).
+    out='int8': returns (tuple of per-segment int8 outputs,
+                s_out (..., n_seg) f32, z_out (..., n_seg) i32).
+    """
+    assert out in ("fp", "int8"), out
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    segs = grec["segs"]
+    bm, bn, bk = block
+    assert all(p % bn == 0 for p in segs.padded), (
+        f"grouped segments are padded to 128 lanes; the N block ({bn}) must "
+        f"divide every padded extent {segs.padded}")
+    reps = np.array([p // bn for p in segs.padded])
+    nb = int(reps.sum())
+    x_q, s_x, s1, s2 = pdq_prologue(x, block=prologue_block)
+    lo, hi, s_out, z_out = pdq_interval(grec, s1, s2)      # (..., n_seg)
+
+    def blockwise(a):
+        # per-segment -> per-N-block: segment i spans padded[i]/bn blocks
+        return jnp.repeat(a, reps, axis=-1, total_repeat_length=nb)
+
+    bounds = zip(segs.offsets, segs.sizes)
+    if out == "int8":
+        y_q = w8a8_matmul(x_q, grec["q"], s_x, 0, grec["scale"],
+                          blockwise(s_out), blockwise(z_out).astype(jnp.int32),
+                          colsum=grec["colsum"], block=block)
+        ys = tuple(y_q[..., o:o + n] for o, n in bounds)
+        return ys, s_out, z_out.astype(jnp.int32)
+    lo_g = (-128.0 - z_out) * s_out
+    hi_g = (127.0 - z_out) * s_out
+    y = w8a8_matmul(x_q, grec["q"], s_x, 0, grec["scale"],
+                    colsum=grec["colsum"],
+                    fp_range=(blockwise(lo_g), blockwise(hi_g)),
+                    out_dtype=out_dtype, block=block)
+    return tuple(y[..., o:o + n] for o, n in bounds)
 
 
 def pdq_dense_unfused(x, wrec):
@@ -295,31 +387,43 @@ def dequantize(q, scale, zero_point, *, per_channel: bool = False, out_dtype=jnp
 
 
 def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256):
-    """Batched flash-decode over an int8 KV cache.
+    """Batched flash-decode over an int8 KV cache in KERNEL layout.
 
-    q: (B, H, Dh) f32; k_q/v_q: (B, S, Hkv, Dh) int8;
-    k_scale/v_scale: (B, S, Hkv) f32; length: (B,) int32.
+    q: (B, H, Dh) f32; k_q/v_q: (B, Hkv, S, Dh) int8;
+    k_scale/v_scale: (B, Hkv, S) f32; length: (B,) int32.
     Returns (B, H, Dh) f32.
+
+    The cache is head-major so the per-step decode path does no layout
+    work: ``models.attention.init_cache`` allocates it this way (S rounded
+    up to a 128 multiple) and ``_cache_write`` scatters new tokens straight
+    into kernel layout.  With S % block == 0 the ``_pad_to`` calls below
+    are trace-time no-ops; only ragged direct callers pay a one-off batched
+    pad (outside the vmapped per-token path, not per decode step).
     """
     B, H, Dh = q.shape
-    S, Hkv = k_q.shape[1], k_q.shape[2]
+    Hkv, S = k_q.shape[1], k_q.shape[2]
     G = H // Hkv
 
     if not _use_kernel():
-        return jax.vmap(ref.decode_attend_i8kv_ref)(q, k_q, v_q, k_scale, v_scale, length)
+        # jnp oracle keeps the logical (S, Hkv, ...) layout
+        k_l = jnp.transpose(k_q, (0, 2, 1, 3))
+        v_l = jnp.transpose(v_q, (0, 2, 1, 3))
+        ks_l = jnp.transpose(k_scale, (0, 2, 1))
+        vs_l = jnp.transpose(v_scale, (0, 2, 1))
+        return jax.vmap(ref.decode_attend_i8kv_ref)(q, k_l, v_l, ks_l, vs_l, length)
+
+    # prefer a scan block that divides S (true whenever the cache came from
+    # init_cache, which rounds S to a 128 multiple) over padding per call
+    bss = min(bs, S)
+    while bss > 32 and S % bss:
+        bss //= 2
+    k_q = _pad_to(k_q, 2, bss)
+    v_q = _pad_to(v_q, 2, bss)
+    k_scale = _pad_to(k_scale, 2, bss, value=1.0)
+    v_scale = _pad_to(v_scale, 2, bss, value=1.0)
 
     def one(q1, k1, v1, ks1, vs1, len1):
-        qh = q1.reshape(Hkv, G, Dh)
-        k_t = jnp.transpose(k1, (1, 0, 2))      # (Hkv, S, Dh)
-        v_t = jnp.transpose(v1, (1, 0, 2))
-        ks_t = jnp.transpose(ks1, (1, 0))        # (Hkv, S)
-        vs_t = jnp.transpose(vs1, (1, 0))
-        bss = min(bs, S)
-        k_t = _pad_to(k_t, 1, bss)
-        v_t = _pad_to(v_t, 1, bss)
-        ks_t = _pad_to(ks_t, 1, bss, value=1.0)
-        vs_t = _pad_to(vs_t, 1, bss, value=1.0)
-        o = decode_attend_i8kv_p(qh, k_t, v_t, ks_t, vs_t,
+        o = decode_attend_i8kv_p(q1.reshape(Hkv, G, Dh), k1, v1, ks1, vs1,
                                  len1.reshape(1, 1).astype(jnp.int32),
                                  bs=bss, interpret=_interpret())
         return o.reshape(H, Dh)

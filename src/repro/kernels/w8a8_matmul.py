@@ -13,6 +13,13 @@ int8 for consumers that stay integer (KV-cache writes, stacked projections);
 [lo, hi], so chained fp consumers (residual adds, norms) skip the
 requant -> dequant double rounding and the int8 intermediate entirely.
 
+Grouped execution (DESIGN.md "Grouped execution"): with ``per_nblock=True``
+the epilogue operands (s_out, z_out, lo, hi) are shaped (M, N/bn) and
+indexed by the N-grid coordinate, so each 128-lane output block carries its
+own surrogate interval.  Sibling projections concatenated along N (each
+segment padded to the block boundary) then run as ONE wide matmul off ONE
+prologue while every segment keeps its own PDQ grid.
+
 Tiling: (bm, bn, bk) = (128, 128, 128) by default - MXU-aligned; the int32
 accumulator lives in VMEM scratch across the K grid dimension.
 
@@ -76,6 +83,7 @@ def w8a8_matmul_p(
     *,
     requant: bool,
     fp_clamp: bool = False,
+    per_nblock: bool = False,
     block: tuple[int, int, int] = (128, 128, 128),
     interpret: bool = False,
     out_dtype=jnp.float32,
@@ -85,6 +93,11 @@ def w8a8_matmul_p(
     Epilogue modes: ``requant=True`` collapses the int32 accumulator to int8
     with (s_out, z_out); ``fp_clamp=True`` (requires requant=False) emits
     ``out_dtype`` clamped to the PDQ-predicted per-row interval [lo, hi].
+
+    ``per_nblock=True`` makes the epilogue interval per-(row, N-block):
+    s_out/z_out/lo/hi must then be shaped (M, N/bn) and are indexed by the
+    N-grid coordinate, giving every 128-lane output segment its own
+    surrogate grid (the grouped-projection path).
     """
     M, K = x_q.shape
     _, N = w_q.shape
@@ -95,9 +108,15 @@ def w8a8_matmul_p(
         f"call repro.kernels.ops.w8a8_matmul, which pads for you")
     assert not (requant and fp_clamp), "requant and fp_clamp are exclusive"
     if lo is None:
-        lo = jnp.zeros((M, 1), jnp.float32)
+        lo = jnp.zeros((M, 1 if not per_nblock else N // bn), jnp.float32)
     if hi is None:
-        hi = jnp.zeros((M, 1), jnp.float32)
+        hi = jnp.zeros((M, 1 if not per_nblock else N // bn), jnp.float32)
+    epi_cols = N // bn if per_nblock else 1
+    for name, op in (("s_out", s_out), ("z_out", z_out), ("lo", lo), ("hi", hi)):
+        assert op.shape == (M, epi_cols), (
+            f"{name} must be (M, {epi_cols}) with per_nblock={per_nblock}, "
+            f"got {op.shape}")
+    epi_idx = (lambda i, j, k: (i, j)) if per_nblock else (lambda i, j, k: (i, 0))
     n_k = K // bk
     grid = (M // bm, N // bn, n_k)
 
@@ -113,10 +132,10 @@ def w8a8_matmul_p(
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # z_x
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # s_w
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # colsum
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s_out
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # z_out
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # lo
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # hi
+            pl.BlockSpec((bm, 1), epi_idx),                   # s_out
+            pl.BlockSpec((bm, 1), epi_idx),                   # z_out
+            pl.BlockSpec((bm, 1), epi_idx),                   # lo
+            pl.BlockSpec((bm, 1), epi_idx),                   # hi
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8 if requant else out_dtype),

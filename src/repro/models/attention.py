@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from .layers import apply_rope, dense_init, rms_norm, softcap
-from .linops import lin
+from .linops import lin, lin_grouped
 
 NEG = -2.0e30
 
@@ -201,10 +201,16 @@ def init_cache(dims: AttnDims, batch: int, max_len: int, dtype) -> dict[str, Any
         "len": jnp.zeros((batch,), jnp.int32),
     }
     if dims.quant_kv != "none":
-        cache["k"] = jnp.zeros((batch, S, Hkv, Dh), jnp.int8)
-        cache["v"] = jnp.zeros((batch, S, Hkv, Dh), jnp.int8)
-        cache["k_scale"] = jnp.ones((batch, S, Hkv), jnp.float32)
-        cache["v_scale"] = jnp.ones((batch, S, Hkv), jnp.float32)
+        # int8 caches live in KERNEL layout (B, Hkv, S, Dh) with S rounded
+        # up to a 128 multiple: the flash-decode kernel then streams tiles
+        # with zero per-step transposes/pads (ops.decode_attend_i8kv).  The
+        # padded tail is never written (slots index the logical S from
+        # cache['pos']) and always masked (offs >= length).
+        Sp = S + (-S) % 128
+        cache["k"] = jnp.zeros((batch, Hkv, Sp, Dh), jnp.int8)
+        cache["v"] = jnp.zeros((batch, Hkv, Sp, Dh), jnp.int8)
+        cache["k_scale"] = jnp.ones((batch, Hkv, Sp), jnp.float32)
+        cache["v_scale"] = jnp.ones((batch, Hkv, Sp), jnp.float32)
     else:
         cache["k"] = jnp.zeros((batch, S, Hkv, Dh), dtype)
         cache["v"] = jnp.zeros((batch, S, Hkv, Dh), dtype)
@@ -226,16 +232,19 @@ def _quant_kv_token(k_new, v_new):
 def _cache_write(cache, k_new, v_new, positions, quant: str):
     """Write S_new tokens at ring positions (pos % W for windows)."""
     B, S_new = positions.shape
-    W = cache["k"].shape[1]
+    W = cache["pos"].shape[1]              # logical length (int8 caches pad S)
     slots = positions % W
     bidx = jnp.arange(B)[:, None]
     if quant != "none":
         kq, ks, vq, vs = _quant_kv_token(k_new, v_new)
         cache = dict(cache)
-        cache["k"] = cache["k"].at[bidx, slots].set(kq)
-        cache["v"] = cache["v"].at[bidx, slots].set(vq)
-        cache["k_scale"] = cache["k_scale"].at[bidx, slots].set(ks)
-        cache["v_scale"] = cache["v_scale"].at[bidx, slots].set(vs)
+        # kernel-layout cache (B, Hkv, Sp, Dh): advanced indexing brings
+        # the (B, S_new) gather dims to the front, so the (B, S_new, Hkv,
+        # Dh) update lands without any transpose.
+        cache["k"] = cache["k"].at[bidx, :, slots].set(kq)
+        cache["v"] = cache["v"].at[bidx, :, slots].set(vq)
+        cache["k_scale"] = cache["k_scale"].at[bidx, :, slots].set(ks)
+        cache["v_scale"] = cache["v_scale"].at[bidx, :, slots].set(vs)
     else:
         cache = dict(cache)
         cache["k"] = cache["k"].at[bidx, slots].set(k_new.astype(cache["k"].dtype))
@@ -247,8 +256,12 @@ def _cache_write(cache, k_new, v_new, positions, quant: str):
 
 def _cache_kv_float(cache, dtype):
     if "k_scale" in cache:
+        S = cache["pos"].shape[1]
         k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
         v = cache["v"].astype(jnp.float32) * cache["v_scale"][..., None]
+        # kernel layout (B, Hkv, Sp, Dh) -> logical (B, S, Hkv, Dh)
+        k = jnp.transpose(k, (0, 2, 1, 3))[:, :S]
+        v = jnp.transpose(v, (0, 2, 1, 3))[:, :S]
         return k.astype(dtype), v.astype(dtype)
     return cache["k"], cache["v"]
 
@@ -265,9 +278,12 @@ def gqa_apply(
 ):
     B, S, d = x.shape
     H, Hkv, Dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
-    q = lin(x, p["wq"]).reshape(B, S, H, Dh)
-    k = lin(x, p["wk"]).reshape(B, S, Hkv, Dh)
-    v = lin(x, p["wv"]).reshape(B, S, Hkv, Dh)
+    # Q/K/V consume the same normed input: quantized params run ONE
+    # prologue + ONE wide W8A8 matmul for the triple (linops.lin_grouped)
+    q, k, v = lin_grouped(x, (p["wq"], p["wk"], p["wv"]))
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
     q = apply_rope(q, positions, dims.rope_theta)
     k = apply_rope(k, positions, dims.rope_theta)
 
@@ -326,9 +342,10 @@ def cross_memory(p, dims: AttnDims, memory):
     """Precompute cross-attention K/V from encoder output (B, Sm, d)."""
     B, Sm, _ = memory.shape
     Hkv, Dh = dims.n_kv_heads, dims.head_dim
-    k = lin(memory, p["wk"]).reshape(B, Sm, Hkv, Dh)
-    v = lin(memory, p["wv"]).reshape(B, Sm, Hkv, Dh)
-    return k, v
+    # wk/wv share the encoder memory input (wq reads the decoder stream, so
+    # cross params group only this pair - see linops.CROSS_SIBLING_SETS)
+    k, v = lin_grouped(memory, (p["wk"], p["wv"]))
+    return k.reshape(B, Sm, Hkv, Dh), v.reshape(B, Sm, Hkv, Dh)
 
 
 # ---------------------------------------------------------------------------
@@ -375,11 +392,12 @@ def mla_init_cache(m: MLADims, batch: int, max_len: int, dtype):
 def _mla_qkv(p, m: MLADims, x, positions):
     B, S, _ = x.shape
     H = m.n_heads
-    q = lin(rms_norm(lin(x, p["wq_a"]), p["q_norm"]), p["wq_b"])
+    # the two input-side low-rank projections share x -> one grouped call
+    qa, kv = lin_grouped(x, (p["wq_a"], p["wkv_a"]))
+    q = lin(rms_norm(qa, p["q_norm"]), p["wq_b"])
     q = q.reshape(B, S, H, m.qk_nope + m.qk_rope)
     q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope:]
     q_rope = apply_rope(q_rope, positions, m.rope_theta)
-    kv = lin(x, p["wkv_a"])
     ckv = rms_norm(kv[..., : m.kv_lora], p["kv_norm"])
     krope = apply_rope(kv[..., None, m.kv_lora:], positions, m.rope_theta)[..., 0, :]
     return q_nope, q_rope, ckv, krope

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .linops import lin
+from .linops import lin, lin_grouped
 
 
 def uniform_init(key, shape, scale, dtype):
@@ -78,8 +78,10 @@ def mlp_init(key, d_model, d_ff, dtype):
 
 
 def mlp_apply(p, x):
-    h = jax.nn.silu(lin(x, p["w_gate"])) * lin(x, p["w_up"])
-    return lin(h, p["w_down"])
+    # gate/up consume the same normed input: quantized params run ONE
+    # prologue + ONE wide W8A8 matmul for the pair (linops.lin_grouped)
+    g, u = lin_grouped(x, (p["w_gate"], p["w_up"]))
+    return lin(jax.nn.silu(g) * u, p["w_down"])
 
 
 # ---------------------------------------------------------------------------

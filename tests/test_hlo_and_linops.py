@@ -5,7 +5,9 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.launch.hlo_analysis import analyze
-from repro.models.linops import is_quantized, lin, quantize_param_tree, quantize_weight
+from repro.models.linops import (group_quantize_weights, is_quantized, lin,
+                                 lin_grouped, quantize_param_tree,
+                                 quantize_weight)
 
 
 def _count_pallas_calls(jaxpr) -> int:
@@ -89,3 +91,97 @@ def test_quantize_param_tree_selects_matrices_only():
     assert not is_quantized(out["attn"]["norm"])
     assert not is_quantized(out["embed"]["embedding"])   # embeddings stay fp
     assert not is_quantized(out["blocks"]["we_gate"])    # 3-D stacks stay fp
+
+
+def test_quantize_param_tree_groups_sibling_sets():
+    """wq/wk/wv (and w_gate/w_up) collapse to ONE grouped record; each
+    sibling key holds a segment view so the tree structure is unchanged."""
+    key = jax.random.PRNGKey(0)
+    d = 128
+
+    def w(i, n):
+        return 0.1 * jax.random.normal(jax.random.fold_in(key, i), (d, n))
+
+    params = {"attn": {"wq": w(0, 128), "wk": w(1, 64), "wv": w(2, 64),
+                       "wo": w(3, d)},
+              "ffn": {"w_gate": w(4, 256), "w_up": w(5, 256),
+                      "w_down": jnp.transpose(w(6, 256))},
+              "cross": {"wq": w(7, 128), "wk": w(8, 64), "wv": w(9, 64),
+                        "wo": w(10, d)}}
+    out = quantize_param_tree(params)
+    # siblings share one group record, in declaration order
+    for k in ("wq", "wk", "wv"):
+        assert is_quantized(out["attn"][k]) and "group" in out["attn"][k]
+    segs = out["attn"]["wq"]["group"]["segs"]
+    assert segs.sizes == (128, 64, 64)
+    assert all(out["attn"][k]["group"]["segs"] == segs
+               for k in ("wq", "wk", "wv"))
+    assert [out["attn"][k]["seg"].index for k in ("wq", "wk", "wv")] == [0, 1, 2]
+    # non-sibling leaves stay per-projection records
+    assert "q" in out["attn"]["wo"] and "q" in out["ffn"]["w_down"]
+    assert out["ffn"]["w_gate"]["group"]["segs"].sizes == (256, 256)
+    # cross-attention: wk/wv read the encoder memory, wq the decoder stream
+    assert out["cross"]["wk"]["group"]["segs"].sizes == (64, 64)
+    assert "q" in out["cross"]["wq"]
+    # different layers' groups are never interchangeable
+    assert out["attn"]["wq"]["group"]["segs"] != out["ffn"]["w_gate"]["group"]["segs"]
+    # a segment view still answers plain lin(), matching the ungrouped record
+    x = jax.random.normal(jax.random.fold_in(key, 42), (4, d))
+    y_view = lin(x, out["attn"]["wk"])
+    y_rec = lin(x, quantize_weight(params["attn"]["wk"]))
+    np.testing.assert_allclose(np.asarray(y_view), np.asarray(y_rec),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lin_grouped_falls_back_per_projection():
+    """Any unquantized / ungrouped member routes through per-projection lin
+    with identical numerics."""
+    key = jax.random.PRNGKey(1)
+    w1 = 0.1 * jax.random.normal(key, (64, 32))
+    w2 = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (4, 64))
+    # fp weights: exact fallback
+    y1, y2 = lin_grouped(x, (w1, w2))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(x @ w1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(x @ w2), rtol=1e-6)
+    # mixed quantized/fp: still per-projection
+    r1 = quantize_weight(w1)
+    y1q, y2f = lin_grouped(x, (r1, w2))
+    np.testing.assert_allclose(np.asarray(y1q), np.asarray(lin(x, r1)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y2f), np.asarray(x @ w2), rtol=1e-6)
+
+
+def test_quantized_gqa_decode_block_is_eight_kernels():
+    """A full quantized GQA decode block (attn norm -> QKV -> attend -> wo,
+    ffn norm -> gate/up -> down) must trace to EXACTLY 8 pallas_calls: one
+    prologue + one wide matmul for each of the grouped QKV triple and the
+    gate/up pair, plus the two per-projection pairs (wo, w_down).  A
+    regression to per-projection dispatch (3 + 2 separate lin calls) would
+    trace 14."""
+    from repro.models.attention import AttnDims, gqa_apply, gqa_init, init_cache
+    from repro.models.layers import mlp_apply, mlp_init, rms_norm
+
+    dims = AttnDims(d_model=256, n_heads=4, n_kv_heads=2, head_dim=64)
+    key = jax.random.PRNGKey(0)
+    params = {"attn": gqa_init(key, dims, jnp.float32),
+              "attn_norm": jnp.zeros((256,)),
+              "ffn_norm": jnp.zeros((256,)),
+              "ffn": mlp_init(jax.random.fold_in(key, 1), 256, 512, jnp.float32)}
+    qp = quantize_param_tree(params)
+    cache = init_cache(dims, 8, 64, jnp.float32)
+
+    def block(p, h, cache, positions):
+        a, cache = gqa_apply(p["attn"], dims, rms_norm(h, p["attn_norm"]),
+                             positions, mode="decode", cache=cache)
+        h = h + a
+        return h + mlp_apply(p["ffn"], rms_norm(h, p["ffn_norm"])), cache
+
+    h = jnp.ones((8, 1, 256))
+    pos = jnp.zeros((8, 1), jnp.int32)
+    ops.set_impl("kernel")
+    try:
+        jaxpr = jax.make_jaxpr(block)(qp, h, cache, pos)
+    finally:
+        ops.set_impl("auto")
+    n = _count_pallas_calls(jaxpr)
+    assert n == 8, f"expected 8 pallas_calls per quantized decode block, got {n}"

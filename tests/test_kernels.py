@@ -18,7 +18,7 @@ from repro.kernels.kv_cache import decode_attend_i8kv_p
 from repro.kernels.pdq_prologue import pdq_prologue_p
 from repro.kernels.quantize import dequantize_p, quantize_p
 from repro.kernels.w8a8_matmul import w8a8_matmul_p
-from repro.models.linops import quantize_weight
+from repro.models.linops import group_quantize_weights, quantize_weight
 
 jax.config.update("jax_enable_x64", False)
 
@@ -177,21 +177,26 @@ def test_decode_i8kv_kernel_vs_ref(s, hkv, g, dh, frac):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
-def test_decode_i8kv_ops_batched():
-    B, S, Hkv, G, Dh = 2, 200, 2, 2, 64
+@pytest.mark.parametrize("s", [200, 256])   # ragged (padded per call) + aligned
+def test_decode_i8kv_ops_batched(s):
+    """ops takes the cache in KERNEL layout (B, Hkv, S, Dh); the oracle
+    keeps the logical (S, Hkv) layout."""
+    B, Hkv, G, Dh = 2, 2, 2, 64
     keys = jax.random.split(jax.random.PRNGKey(0), 5)
     q = jax.random.normal(keys[0], (B, Hkv * G, Dh))
-    k_q = _rand_i8(keys[1], (B, S, Hkv, Dh))
-    v_q = _rand_i8(keys[2], (B, S, Hkv, Dh))
-    k_s = jax.random.uniform(keys[3], (B, S, Hkv), minval=0.01, maxval=0.05)
-    v_s = jax.random.uniform(keys[4], (B, S, Hkv), minval=0.01, maxval=0.05)
+    k_q = _rand_i8(keys[1], (B, Hkv, s, Dh))
+    v_q = _rand_i8(keys[2], (B, Hkv, s, Dh))
+    k_s = jax.random.uniform(keys[3], (B, Hkv, s), minval=0.01, maxval=0.05)
+    v_s = jax.random.uniform(keys[4], (B, Hkv, s), minval=0.01, maxval=0.05)
     lens = jnp.array([130, 57], jnp.int32)
     ops.set_impl("kernel")
     try:
         got = ops.decode_attend_i8kv(q, k_q, v_q, k_s, v_s, lens, bs=128)
     finally:
         ops.set_impl("auto")
-    want = jax.vmap(ref.decode_attend_i8kv_ref)(q, k_q, v_q, k_s, v_s, lens)
+    want = jax.vmap(ref.decode_attend_i8kv_ref)(
+        q, jnp.transpose(k_q, (0, 2, 1, 3)), jnp.transpose(v_q, (0, 2, 1, 3)),
+        jnp.transpose(k_s, (0, 2, 1)), jnp.transpose(v_s, (0, 2, 1)), lens)
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
@@ -311,6 +316,98 @@ def test_w8a8_fp_clamp_epilogue_kernel_vs_ref():
 
 
 # ---------------------------------------------------------------------------
+# grouped projections: per-(row, N-block) epilogue + pdq_dense_grouped
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["requant", "fp_clamp"])
+def test_w8a8_per_nblock_epilogue_kernel_vs_ref(mode):
+    """per_nblock=True: each 128-lane output block applies its own
+    (s_out, z_out) / [lo, hi] - the grouped-matmul epilogue contract."""
+    m, k, n = 128, 128, 384                 # 3 N-blocks
+    nb = n // 128
+    keys = jax.random.split(jax.random.PRNGKey(11), 6)
+    x_q = _rand_i8(keys[0], (m, k))
+    w_q = _rand_i8(keys[1], (k, n))
+    s_x = jax.random.uniform(keys[2], (m, 1), minval=0.01, maxval=0.1)
+    z_x = jnp.zeros((m, 1), jnp.int32)
+    s_w = jnp.full((1, n), 0.005)
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+    s_out = jax.random.uniform(keys[3], (m, nb), minval=0.3, maxval=0.9)
+    z_out = jax.random.randint(keys[4], (m, nb), -5, 5, dtype=jnp.int32)
+    lo = -jax.random.uniform(keys[5], (m, nb), minval=0.5, maxval=2.0)
+    hi = -1.5 * lo
+    requant = mode == "requant"
+    got = w8a8_matmul_p(x_q, w_q, s_x, z_x, s_w, colsum, s_out, z_out,
+                        lo, hi, requant=requant, fp_clamp=not requant,
+                        per_nblock=True, interpret=True)
+    y_fp = ref.w8a8_matmul_ref(x_q, w_q, s_x, z_x, s_w)
+    expand = lambda a: jnp.repeat(a, 128, axis=-1)     # block -> channel
+    if requant:
+        want = jnp.clip(jnp.round(y_fp / expand(s_out)) + expand(z_out),
+                        -128, 127)
+        assert np.abs(np.asarray(got, np.int32) - np.asarray(want, np.int32)).max() <= 1
+    else:
+        want = jnp.clip(y_fp, expand(lo), expand(hi))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**HYPO)
+@given(
+    m=st.sampled_from([8, 130]),
+    k=st.sampled_from([256, 257]),
+    sizes=st.sampled_from([(64, 96), (128, 100, 200), (32, 32, 32)]),
+    impl=st.sampled_from(["ref", "kernel"]),
+)
+def test_pdq_dense_grouped_segments_match_per_projection(m, k, sizes, impl):
+    """Property (acceptance): every grouped output segment matches the
+    per-projection pdq_dense result to within one int8 step of that
+    segment's predicted grid - the shared (s1, s2) moments depend only on
+    the input, so the grouped interval math is exact, not approximate."""
+    key = jax.random.PRNGKey(m * k + sum(sizes))
+    ws = [0.05 * jax.random.normal(jax.random.fold_in(key, i), (k, n))
+          for i, n in enumerate(sizes)]
+    x = jax.random.normal(jax.random.fold_in(key, 99), (m, k))
+    grec = group_quantize_weights(ws)
+    ops.set_impl(impl)
+    try:
+        ys = ops.pdq_dense_grouped(x, grec, out="fp")
+        _, _, s1, s2 = ops.pdq_prologue(x)
+        for i, w in enumerate(ws):
+            rec = quantize_weight(w)
+            y_ind = ops.pdq_dense(x, rec, out="fp")
+            _, _, s_out, _ = ops.pdq_interval(rec, s1, s2)
+            err = np.abs(np.asarray(ys[i]) - np.asarray(y_ind))
+            step = np.asarray(s_out)
+            assert (err <= step + 1e-6).all(), (i, float((err / step).max()))
+    finally:
+        ops.set_impl("auto")
+
+
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+def test_pdq_dense_grouped_int8_out(impl):
+    """Grouped int8 epilogue: per-segment grids applied per N-block."""
+    key = jax.random.PRNGKey(21)
+    sizes = (100, 64)
+    ws = [0.05 * jax.random.normal(jax.random.fold_in(key, i), (256, n))
+          for i, n in enumerate(sizes)]
+    x = jax.random.normal(jax.random.fold_in(key, 9), (16, 256))
+    grec = group_quantize_weights(ws)
+    ops.set_impl(impl)
+    try:
+        ys, s_out, z_out = ops.pdq_dense_grouped(x, grec, out="int8")
+        for i, w in enumerate(ws):
+            rec = quantize_weight(w)
+            y_ind, s_ind, z_ind = ops.pdq_dense(x, rec, out="int8")
+            np.testing.assert_allclose(s_out[..., i:i + 1], s_ind, rtol=1e-6)
+            assert np.abs(np.asarray(ys[i], np.int32)
+                          - np.asarray(y_ind, np.int32)).max() <= 1
+    finally:
+        ops.set_impl("auto")
+    assert s_out.shape == (16, 2) and z_out.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
 # block-divisibility guards on the raw kernels
 # ---------------------------------------------------------------------------
 
@@ -332,3 +429,9 @@ def test_raw_kernels_reject_non_block_multiples():
         w8a8_matmul_p(q, jnp.zeros((300, 100), jnp.int8), s, z,
                       jnp.ones((1, 100)), jnp.zeros((1, 100), jnp.int32),
                       s, z, requant=True)
+    with pytest.raises(AssertionError, match="block-multiple"):
+        decode_attend_i8kv_p(jnp.zeros((2, 2, 64)),
+                             jnp.zeros((2, 200, 64), jnp.int8),
+                             jnp.zeros((2, 200, 64), jnp.int8),
+                             jnp.ones((2, 200)), jnp.ones((2, 200)),
+                             jnp.ones((1, 1), jnp.int32), bs=128)
