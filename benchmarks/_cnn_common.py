@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import run_calibration, spec_for_mode
-from repro.models.cnn import (CNNConfig, cnn_apply, evaluate, make_gratings,
+from repro.models.cnn import (CNNConfig, cnn_apply, make_gratings,
                               train_cnn)
 
 ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")

@@ -1,0 +1,124 @@
+"""Bucketed batched prefill vs. per-request prefill ingest timing.
+
+bucketed : ServeEngine's admission scheduler - prompts right-padded to a
+           static bucket set, ONE multi-slot prefill_many per same-bucket
+           group, one fused cache_scatter into the pooled cache; at most
+           len(buckets) prefill executables per engine lifetime.
+legacy   : the pre-PR-3 path - one batch-of-1 prefill per request at the
+           EXACT prompt length, so XLA compiles a fresh executable per
+           distinct length and the PDQ pipeline runs at batch 1.
+
+Each cell serves a mixed-length workload end to end (max_new=1 completes
+at prefill, so the wall-clock is pure ingest) on a FRESH engine, compile
+time included -
+recompiles per prompt length are precisely the serving cost the bucket
+design removes, so they belong in the measurement.  ``speedup`` is
+ingest-throughput bucketed/legacy (prompt tokens per second).
+
+Writes ``BENCH_serve.json`` next to this file; ``--quick`` runs the CI
+smoke cells only and ``--compare <baseline.json>`` fails on a >25% geomean
+speedup regression (see _compare.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _compare import compare
+
+from repro.configs import reduced_config
+from repro.serve import Request, ServeEngine
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "BENCH_serve.json")
+ARCH = "stablelm-1.6b"
+
+
+def _workload(cfg, requests: int, max_prompt: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(2, max_prompt + 1, requests)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                    max_new=1) for i, L in enumerate(lens)], int(lens.sum())
+
+
+def bench_cell(cfg, params, requests: int, slots: int, max_prompt: int) -> dict:
+    buckets = (8, 16, 32, 64)
+    out = {"requests": requests, "slots": slots, "max_prompt": max_prompt}
+    for tag, batched in (("bucketed", True), ("legacy", False)):
+        reqs, prompt_tokens = _workload(cfg, requests, max_prompt)
+        eng = ServeEngine(cfg, params, slots=slots,
+                          max_len=max(buckets) + 8, buckets=buckets,
+                          batch_prefill=batched)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        out[f"{tag}_s"] = dt
+        out[f"{tag}_tok_s"] = prompt_tokens / dt
+        out[f"{tag}_prefill_compiles"] = eng.stats["prefill_compiles"]
+    # _compare.py convention: 'speedup' is the dimensionless trajectory pin
+    out["speedup"] = out["legacy_s"] / out["bucketed_s"]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small cells / CI smoke")
+    ap.add_argument("--out", default=OUT)
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="fail on >25%% speedup regression vs this baseline")
+    args = ap.parse_args()
+
+    cfg = reduced_config(ARCH)
+    from repro.models import build_model
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    # (requests, slots, max_prompt); quick cells ride in the full sweep so
+    # CI smoke runs intersect the committed baseline (see --compare)
+    quick_spec = [(12, 4, 32), (8, 4, 16)]
+    if args.quick:
+        cells_spec = quick_spec
+    else:
+        cells_spec = list(dict.fromkeys(
+            quick_spec + [(24, 4, 32), (24, 8, 64), (48, 8, 64)]))
+
+    cells = []
+    for requests, slots, max_prompt in cells_spec:
+        cell = bench_cell(cfg, params, requests, slots, max_prompt)
+        cells.append(cell)
+        print(f"requests={requests:3d} slots={slots} max_prompt={max_prompt:3d}  "
+              f"bucketed {cell['bucketed_s']:6.2f}s "
+              f"({cell['bucketed_prefill_compiles']} compiles)  "
+              f"legacy {cell['legacy_s']:6.2f}s "
+              f"({cell['legacy_prefill_compiles']} compiles)  "
+              f"x{cell['speedup']:.2f}")
+
+    out = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+            "arch": ARCH,
+            "jax": jax.__version__,
+            "quick": bool(args.quick),
+        },
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if args.compare:
+        sys.exit(compare(out, args.compare,
+                         keys=("requests", "slots", "max_prompt")))
+
+
+if __name__ == "__main__":
+    main()

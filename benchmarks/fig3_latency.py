@@ -16,7 +16,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import surrogate, weight_stats
 

@@ -43,7 +43,6 @@ def run_tables(n_eval: int = 384) -> dict:
             results[domain][task] = row
 
         # surrogate fidelity: correlation of predicted vs empirical moments
-        import jax
         from repro.core.surrogate import empirical_moments
         tape = {}
         spec = as_observe(spec_for_mode("pdq", per_channel=True))

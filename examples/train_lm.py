@@ -7,9 +7,7 @@ few hundred steps" target - sized for a real accelerator.
     PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
 """
 import argparse
-import dataclasses
 
-from repro.configs import get_config
 from repro.data import DataConfig
 from repro.models import build_model
 from repro.models.config import ArchConfig

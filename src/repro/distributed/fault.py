@@ -14,7 +14,7 @@ from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 
 def reshard_state(state: Any, target_mesh: Mesh, spec_tree: Any) -> Any:

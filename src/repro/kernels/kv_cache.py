@@ -1,4 +1,7 @@
-"""Pallas TPU kernel: flash-decode attention over an int8-quantized KV cache.
+"""Pallas TPU kernels for the serving KV-cache pool: flash-decode attention
+over an int8-quantized cache, and the batched slot scatter-write the
+bucketed prefill scheduler uses to land a whole prefill batch into the
+pooled cache in one launch.
 
 Beyond-paper extension (DESIGN.md Sec. 2): the KV cache is stored int8 with
 PDQ-predicted per-token-per-head scales, halving (vs bf16) the decode
@@ -96,3 +99,66 @@ def decode_attend_i8kv_p(
         ],
         interpret=interpret,
     )(length, q, k_q, v_q, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
+# Pooled-cache slot scatter (bucketed batched prefill)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_kernel(map_ref, dst_ref, src_ref, out_ref):
+    b = pl.program_id(0)
+    take = map_ref[b] >= 0
+
+    @pl.when(take)
+    def _take():
+        out_ref[...] = src_ref[...]
+
+    @pl.when(jnp.logical_not(take))
+    def _keep():
+        out_ref[...] = dst_ref[...]
+
+
+def cache_scatter_p(
+    src_map: jax.Array,  # (B,) int32: source row per dst row, or -1 = keep
+    dst: jax.Array,      # (B, R) any dtype (int8 kernel-layout KV included)
+    src: jax.Array,      # (Bs, R) same dtype
+    *,
+    br: int = 8192,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[b] = src[src_map[b]] if src_map[b] >= 0 else dst[b] (bit-exact).
+
+    One launch scatters a whole prefill batch of cache rows into the pooled
+    serving cache.  ``src_map`` is scalar-prefetched so the src BlockSpec
+    index map can chase it (clamped to row 0 for passthrough rows - the
+    block is still streamed, but the kernel writes the dst copy instead).
+    Grid (B, R/br); rows are blocked along R so arbitrarily large KV leaves
+    never exceed VMEM.
+    """
+    B, R = dst.shape
+    assert src.ndim == 2 and src.shape[1] == R and src.dtype == dst.dtype
+    assert R % 128 == 0, (
+        f"cache_scatter_p requires the flattened row extent R ({R}) to be a "
+        f"128-lane multiple; pad the row (ops.cache_scatter_rows does)")
+    # largest 128-multiple divisor of R that is <= br (R % 128 == 0, so the
+    # scan always terminates at br == 128)
+    br = max(min(br, R) - min(br, R) % 128, 128)
+    while R % br:
+        br -= 128
+    grid = (B, R // br)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br), lambda b, r, m: (b, r)),
+            pl.BlockSpec((1, br), lambda b, r, m: (jnp.maximum(m[b], 0), r)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda b, r, m: (b, r)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, R), dst.dtype),
+        interpret=interpret,
+    )(src_map.astype(jnp.int32), dst, src)

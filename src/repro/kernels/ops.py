@@ -11,7 +11,6 @@ kernel's block multiples.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ import numpy as np
 
 from . import ref
 from .act_stats import act_stats_p
-from .kv_cache import decode_attend_i8kv_p
+from .kv_cache import cache_scatter_p, decode_attend_i8kv_p
 from .pdq_prologue import pdq_prologue_p
 from .quantize import dequantize_p, quantize_p
 from .w8a8_matmul import w8a8_matmul_p
@@ -429,3 +428,38 @@ def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256):
         return o.reshape(H, Dh)
 
     return jax.vmap(one)(q, k_q, v_q, k_scale, v_scale, length)
+
+
+def cache_scatter_rows(dst, src, src_map, *, batch_axis: int = 0):
+    """Batched cache-row scatter: out row s = src[src_map[s]] when
+    src_map[s] >= 0, else dst[s] kept bit-exactly.  Any dtype (the int8
+    kernel-layout KV leaves included) and any trailing shape.
+
+    ``batch_axis=1`` handles stacked per-block cache leaves (n, B, ...):
+    the stack is folded into the row axis and src_map is expanded per
+    stack entry, so the kernel still sees a flat (rows, R) copy problem
+    with no transposes.
+    """
+    src_map = jnp.asarray(src_map, jnp.int32)
+    if batch_axis == 1:
+        n, B = dst.shape[0], dst.shape[1]
+        Bs = src.shape[1]
+        m = jnp.where(src_map[None, :] >= 0,
+                      src_map[None, :] + Bs * jnp.arange(n)[:, None],
+                      -1).reshape(n * B)
+        out = cache_scatter_rows(dst.reshape((n * B,) + dst.shape[2:]),
+                                 src.reshape((n * Bs,) + src.shape[2:]), m)
+        return out.reshape(dst.shape)
+    assert batch_axis == 0, batch_axis
+    B = dst.shape[0]
+    R = 1
+    for d in dst.shape[1:]:
+        R *= d
+    if not _use_kernel():
+        take = jnp.take(src, jnp.clip(src_map, 0, src.shape[0] - 1), axis=0)
+        keep = (src_map >= 0).reshape((B,) + (1,) * (dst.ndim - 1))
+        return jnp.where(keep, take, dst)
+    d2 = _pad_to(dst.reshape(B, R), 1, 128)
+    s2 = _pad_to(src.reshape(src.shape[0], R), 1, 128)
+    out = cache_scatter_p(src_map, d2, s2, interpret=_interpret())
+    return out[:, :R].reshape(dst.shape)

@@ -24,8 +24,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ALL_ARCHS, get_config
@@ -35,8 +33,8 @@ from repro.models import SHAPES, build_model
 from repro.models import context as mctx
 from repro.optim import AdamWConfig
 from repro.launch import hlo_analysis
-from repro.train.train_step import (abstract_state, build_train_step,
-                                    dist_context_for, state_specs)
+from repro.train.train_step import (abstract_state, dist_context_for,
+                                    state_specs)
 
 ART_DIR = os.path.normpath(os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "..", "..", "..",

@@ -1,7 +1,9 @@
-"""Serving driver: batched continuous-batching engine with the PDQ-int8 path.
+"""Serving driver: bucketed batched prefill + continuous batching with the
+PDQ-int8 path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-        --requests 8 --max-new 16 [--int8] [--int8-kv]
+        --requests 8 --max-new 16 [--int8] [--int8-kv] \
+        [--buckets 32,64,128] [--legacy-prefill]
 """
 from __future__ import annotations
 
@@ -28,6 +30,13 @@ def main(argv=None):
     ap.add_argument("--int8", action="store_true", help="PDQ int8 weights")
     ap.add_argument("--int8-kv", action="store_true", help="int8 KV cache")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="max prompt length (lengths are drawn in [1, this])")
+    ap.add_argument("--buckets", default="32,64,128,256",
+                    help="comma-separated prefill length buckets")
+    ap.add_argument("--legacy-prefill", action="store_true",
+                    help="per-request prefill baseline (recompiles per "
+                         "distinct prompt length)")
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -38,16 +47,23 @@ def main(argv=None):
 
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                       quantize_weights=args.int8,
-                      temperature=args.temperature)
+                      temperature=args.temperature,
+                      buckets=tuple(int(b) for b in args.buckets.split(",")),
+                      batch_prefill=not args.legacy_prefill)
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 8),
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(1, args.prompt_len + 1))),
                     max_new=args.max_new) for i in range(args.requests)]
     t0 = time.perf_counter()
     eng.run(reqs)
     dt = time.perf_counter() - t0
     total_new = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s) int8={args.int8} int8_kv={args.int8_kv}")
+          f"({total_new / dt:.1f} tok/s) int8={args.int8} int8_kv={args.int8_kv} "
+          f"prefill={'legacy' if args.legacy_prefill else 'bucketed'}")
+    print("  buckets:", eng.buckets)
+    print("  stats:  ", dict(eng.stats))
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.generated}")
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
 
 from repro.configs import ALL_ARCHS, get_config, reduced_config
 from repro.data import DataConfig

@@ -18,6 +18,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+
 from .config import ArchConfig
 from .layers import chunked_xent_loss
 from .transformer import _dtype, lm_apply, lm_init, lm_init_caches, lm_logits
@@ -59,6 +61,8 @@ class ModelBundle:
     input_specs: Callable[[str], dict[str, Any]]
     cache_slice: Callable[..., Any] = None
     cache_merge: Callable[..., Any] = None
+    prefill_many: Callable[..., Any] = None
+    cache_scatter: Callable[..., Any] = None
 
 
 def build_model(cfg: ArchConfig) -> ModelBundle:
@@ -100,6 +104,38 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
         logits = lm_logits(params, cfg, h[:, -1:])[:, 0]
         return logits, caches
 
+    def prefill_many(params, batch, caches, seq_lens):
+        """Batched bucketed prefill over right-padded prompts.
+
+        batch['tokens']: (B, L) int32 where row b holds seq_lens[b] real
+        tokens followed by padding up to the bucket length L.  ``caches``
+        is a fresh B-row cache pool; every row is fully (re)written -
+        pad entries are redirected onto the row's last real token (see
+        attention._clamp_padded / ssm_apply), so the resulting rows are
+        bit-identical to B independent unpadded prefills (MoE excepted:
+        pad rows consume router capacity, exact only while
+        capacity_factor absorbs them - DESIGN.md Sec. 4).  Returns
+        (logits (B, vocab) of each row's LAST REAL token, caches); land
+        the rows into the serving pool with ``cache_scatter``.
+
+        Because L is the only shape that varies across workloads, an
+        engine lifetime compiles at most len(buckets) executables of this
+        function - the per-request path recompiled per distinct prompt
+        length instead.
+        """
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        P = _patch_count(cfg)
+        pos = jnp.broadcast_to(jnp.arange(P + S_text)[None], (B, P + S_text))
+        tot = seq_lens.astype(jnp.int32) + P      # valid prefix incl patches
+        h, caches, _ = lm_apply(
+            params, cfg, tokens=tokens, positions=pos, mode="prefill",
+            caches=caches, frames=batch.get("frames"),
+            patches=batch.get("patches"), seq_lens=tot)
+        h_last = h[jnp.arange(B), jnp.maximum(tot - 1, 0)][:, None]
+        logits = lm_logits(params, cfg, h_last)[:, 0]
+        return logits, caches
+
     def decode_step(params, caches, tokens, positions):
         """tokens: (B, 1); positions: (B, 1) absolute positions."""
         h, caches, _ = lm_apply(params, cfg, tokens=tokens, positions=positions,
@@ -124,6 +160,23 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
             "tail": jax.tree.map(lambda c, s: c.at[lo:lo + s.shape[0]].set(s),
                                  caches["tail"], sub["tail"]),
             "blocks": jax.tree.map(lambda c, s: c.at[:, lo:lo + s.shape[1]].set(s),
+                                   caches["blocks"], sub["blocks"]),
+        }
+
+    def cache_scatter(caches, sub, src_map):
+        """Pool slot s takes sub batch row src_map[s]; src_map[s] == -1
+        keeps the pooled slot bit-exactly.  One fused scatter per leaf
+        (kernels/kv_cache.cache_scatter_p on TPU) lands an entire bucketed
+        prefill batch at once, replacing the per-request slice/merge loop.
+        src_map shape: (pool_slots,) int32, values in [-1, sub_batch).
+        """
+        scat = kernel_ops.cache_scatter_rows
+        return {
+            "head": jax.tree.map(lambda c, s: scat(c, s, src_map),
+                                 caches["head"], sub["head"]),
+            "tail": jax.tree.map(lambda c, s: scat(c, s, src_map),
+                                 caches["tail"], sub["tail"]),
+            "blocks": jax.tree.map(lambda c, s: scat(c, s, src_map, batch_axis=1),
                                    caches["blocks"], sub["blocks"]),
         }
 
@@ -168,4 +221,5 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
     return ModelBundle(cfg=cfg, init=init, train_loss=train_loss,
                        prefill=prefill, decode_step=decode_step,
                        init_caches=init_caches, input_specs=input_specs,
-                       cache_slice=cache_slice, cache_merge=cache_merge)
+                       cache_slice=cache_slice, cache_merge=cache_merge,
+                       prefill_many=prefill_many, cache_scatter=cache_scatter)

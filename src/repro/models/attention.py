@@ -254,6 +254,32 @@ def _cache_write(cache, k_new, v_new, positions, quant: str):
     return cache
 
 
+def _clamp_padded(vals, positions, seq_lens):
+    """Redirect right-pad rows of a prefill write onto the row's LAST REAL
+    token.
+
+    ``seq_lens[b]`` counts the valid leading entries of row b; entries at
+    sequence index >= seq_lens[b] are bucket padding.  Rewriting both the
+    VALUES and the POSITIONS of pad entries to those of index seq_lens[b]-1
+    makes every duplicate scatter slot carry identical data, so the write
+    stays deterministic (XLA scatter order is unspecified for duplicate
+    indices) and the cache ends up bit-identical to an unpadded prefill:
+    pad tokens never exist in it.  Returns (clamped_vals, clamped_pos).
+    """
+    B, S = positions.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (B, S), 1)
+    valid = idx < seq_lens[:, None]
+    last = jnp.maximum(seq_lens - 1, 0)                    # (B,)
+    bidx = jnp.arange(B)
+    out = []
+    for v in vals:
+        v_last = v[bidx, last][:, None]                    # (B, 1, ...)
+        mask = valid.reshape(valid.shape + (1,) * (v.ndim - 2))
+        out.append(jnp.where(mask, v, v_last))
+    pos = jnp.where(valid, positions, positions[bidx, last][:, None])
+    return out, pos
+
+
 def _cache_kv_float(cache, dtype):
     if "k_scale" in cache:
         S = cache["pos"].shape[1]
@@ -275,6 +301,7 @@ def gqa_apply(
     mode: str,                        # 'train' | 'prefill' | 'decode'
     cache: dict | None = None,
     causal: bool = True,
+    seq_lens: jax.Array | None = None,   # (B,) valid prefix per right-padded row
 ):
     B, S, d = x.shape
     H, Hkv, Dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
@@ -294,7 +321,14 @@ def gqa_apply(
 
     assert cache is not None
     if mode == "prefill":
-        cache = _cache_write(cache, k, v, positions, dims.quant_kv)
+        if seq_lens is None:
+            cache = _cache_write(cache, k, v, positions, dims.quant_kv)
+        else:
+            # bucketed prefill: pads attend nothing (causal mask, pad
+            # positions exceed every real q position) but must not WRITE -
+            # clamp their k/v/positions onto the last real token instead.
+            (kc, vc), pos_c = _clamp_padded((k, v), positions, seq_lens)
+            cache = _cache_write(cache, kc, vc, pos_c, dims.quant_kv)
         o = chunked_attention(q, k, v, positions, positions, causal=causal,
                               window=dims.window, attn_softcap=dims.attn_softcap,
                               parallel_q=True)
@@ -403,7 +437,8 @@ def _mla_qkv(p, m: MLADims, x, positions):
     return q_nope, q_rope, ckv, krope
 
 
-def mla_apply(p, m: MLADims, x, positions, *, mode: str, cache=None):
+def mla_apply(p, m: MLADims, x, positions, *, mode: str, cache=None,
+              seq_lens=None):
     B, S, _ = x.shape
     H = m.n_heads
     q_nope, q_rope, ckv, krope = _mla_qkv(p, m, x, positions)
@@ -419,12 +454,16 @@ def mla_apply(p, m: MLADims, x, positions, *, mode: str, cache=None):
         y = lin(o.reshape(B, S, H * m.v_head), p["wo"])
         if mode == "train":
             return y, None
+        ckv_c, krope_c, pos_c = ckv, krope, positions
+        if seq_lens is not None:   # bucketed prefill: no pad entries (see _clamp_padded)
+            (ckv_c, krope_c), pos_c = _clamp_padded((ckv, krope), positions,
+                                                    seq_lens)
         bidx = jnp.arange(B)[:, None]
         cache = dict(cache)
-        cache["ckv"] = cache["ckv"].at[bidx, positions].set(ckv.astype(cache["ckv"].dtype))
-        cache["krope"] = cache["krope"].at[bidx, positions].set(krope.astype(cache["krope"].dtype))
-        cache["pos"] = cache["pos"].at[bidx, positions].set(positions)
-        cache["len"] = jnp.maximum(cache["len"], positions[:, -1] + 1)
+        cache["ckv"] = cache["ckv"].at[bidx, pos_c].set(ckv_c.astype(cache["ckv"].dtype))
+        cache["krope"] = cache["krope"].at[bidx, pos_c].set(krope_c.astype(cache["krope"].dtype))
+        cache["pos"] = cache["pos"].at[bidx, pos_c].set(pos_c)
+        cache["len"] = jnp.maximum(cache["len"], pos_c[:, -1] + 1)
         return y, cache
 
     # decode (absorbed): attention runs entirely in the compressed space.

@@ -14,7 +14,6 @@ high accuracy in a few hundred Adam steps on CPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

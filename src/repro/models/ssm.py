@@ -147,8 +147,17 @@ def ssd_scan(x, dt, A, Bm, Cm, chunk: int, init_state=None):
     return y.astype(x.dtype), final
 
 
-def ssm_apply(p, cfg: SSMConfig, x: jax.Array, *, mode: str, cache=None):
-    """x: (B, L, d_model); decode has L == 1 and requires cache."""
+def ssm_apply(p, cfg: SSMConfig, x: jax.Array, *, mode: str, cache=None,
+              seq_lens=None):
+    """x: (B, L, d_model); decode has L == 1 and requires cache.
+
+    ``seq_lens`` (B,) marks right-padded prefill rows: entries at index >=
+    seq_lens[b] are bucket padding.  Zeroing their dt makes the recurrence
+    skip them exactly (decay exp(0)=1, zero state update - the same
+    property ssd_scan's internal chunk padding relies on), and the conv
+    cache tail is gathered at each row's true end instead of the padded
+    one, so decode continues from a state bit-identical to an unpadded
+    prefill."""
     B, L, _ = x.shape
     H, P, N = cfg.n_heads, cfg.head_dim, cfg.d_state
     zxbcdt = lin(x, p["in_proj"])
@@ -178,6 +187,9 @@ def ssm_apply(p, cfg: SSMConfig, x: jax.Array, *, mode: str, cache=None):
         xc = conv_out[..., : cfg.d_inner].reshape(B, L, H, P)
         Bm = conv_out[..., cfg.d_inner: cfg.d_inner + N].astype(jnp.float32)
         Cm = conv_out[..., cfg.d_inner + N:].astype(jnp.float32)
+        if seq_lens is not None:
+            valid = jnp.arange(L)[None, :] < seq_lens[:, None]
+            dt = jnp.where(valid[..., None], dt, 0.0)      # dt: (B, L, H)
         init_state = cache["state"] if cache is not None else None
         y, final = ssd_scan(xc.astype(jnp.float32), dt, A, Bm, Cm, cfg.chunk,
                             init_state)
@@ -185,7 +197,14 @@ def ssm_apply(p, cfg: SSMConfig, x: jax.Array, *, mode: str, cache=None):
         y = y.reshape(B, L, cfg.d_inner).astype(x.dtype)
         new_cache = None
         if cache is not None:   # prefill keeps conv tail + final state
-            tail = jnp.concatenate([cache["conv"], xBC], axis=1)[:, -(cfg.d_conv - 1):]
+            window = jnp.concatenate([cache["conv"], xBC], axis=1)
+            if seq_lens is None:
+                tail = window[:, -(cfg.d_conv - 1):]
+            else:
+                # last d_conv-1 REAL inputs end at window index
+                # (d_conv-1) + seq_len - 1, i.e. start at index seq_len
+                idx = seq_lens[:, None] + jnp.arange(cfg.d_conv - 1)[None, :]
+                tail = window[jnp.arange(B)[:, None], idx]
             new_cache = {"conv": tail, "state": final}
 
     y = rms_norm(y * jax.nn.silu(z), p["norm"])

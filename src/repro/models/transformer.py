@@ -7,7 +7,6 @@ Caches are threaded through the scan as xs/ys.  ``mode`` is one of
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -21,7 +20,6 @@ from .attention import (AttnDims, gqa_apply, gqa_init, init_cache, mla_apply,
                         mla_init, mla_init_cache)
 from .config import ArchConfig
 from .layers import embed_init, mlp_apply, mlp_init, rms_norm, softcap
-from .linops import lin
 from .moe import moe_ffn_dense_masked, moe_ffn_tokens, moe_init
 from .ssm import ssm_apply, ssm_init, ssm_init_cache
 
@@ -133,21 +131,23 @@ def _apply_ffn(p_ffn, cfg: ArchConfig, kind: str, h: jax.Array, mode: str):
 
 
 def layer_apply(p, cfg: ArchConfig, kind: str, h, positions, *, mode: str,
-                cache=None, memory=None, causal: bool = True):
-    """Returns (h, new_cache, aux)."""
+                cache=None, memory=None, causal: bool = True, seq_lens=None):
+    """Returns (h, new_cache, aux).  ``seq_lens`` (B,) marks the valid
+    prefix of right-padded bucketed-prefill rows (None = no padding)."""
     eps = cfg.norm_eps
     if kind == "mamba":
         y, new_cache = ssm_apply(p["ssm"], cfg.ssm, rms_norm(h, p["norm"], eps),
-                                 mode=mode, cache=cache)
+                                 mode=mode, cache=cache, seq_lens=seq_lens)
         return h + y, new_cache, jnp.float32(0.0)
 
     xin = rms_norm(h, p["attn_norm"], eps)
     if cfg.mla is not None and kind in ("global", "global_dense"):
         a, new_cache = mla_apply(p["attn"], _mla_dims(cfg), xin, positions,
-                                 mode=mode, cache=cache)
+                                 mode=mode, cache=cache, seq_lens=seq_lens)
     else:
         a, new_cache = gqa_apply(p["attn"], _attn_dims(cfg, kind), xin, positions,
-                                 mode=mode, cache=cache, causal=causal)
+                                 mode=mode, cache=cache, causal=causal,
+                                 seq_lens=seq_lens)
     a = checkpoint_name(a, "attn_out")
     h = h + a
 
@@ -252,12 +252,14 @@ def _encoder_apply(params, cfg: ArchConfig, frames: jax.Array):
 
 
 def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
-             caches=None, frames=None, patches=None):
+             caches=None, frames=None, patches=None, seq_lens=None):
     """Returns (h_final, new_caches, aux_sum).
 
     tokens: (B, S) int32 (text); patches: (B, Pimg, d) stub embeddings
     prepended to the sequence (VLM); frames: (B, Sm, d) encoder input
-    (encdec family).
+    (encdec family); seq_lens: (B,) valid-prefix lengths (in full-sequence
+    index space, patches included) when rows are right-padded to a bucket
+    length - pad entries then never reach any cache or recurrent state.
     """
     dtype = _dtype(cfg)
     from .layers import embed_apply
@@ -279,7 +281,8 @@ def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
     for i, kind in enumerate(cfg.head):
         c = caches["head"][i] if caches else None
         h, nc, aux = layer_apply(params["head"][i], cfg, kind, h, positions,
-                                 mode=mode, cache=c, memory=memory)
+                                 mode=mode, cache=c, memory=memory,
+                                 seq_lens=seq_lens)
         new_caches["head"].append(nc)
         aux_total += aux
 
@@ -294,7 +297,7 @@ def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
             cj = block_c[j] if block_c is not None else None
             hh, ncj, aux = layer_apply(pj, cfg, kind if kind != "shared" else "global",
                                        hh, positions, mode=mode, cache=cj,
-                                       memory=memory)
+                                       memory=memory, seq_lens=seq_lens)
             ncs.append(ncj if ncj is not None else ())
             aux_acc = aux_acc + aux
         return (hh, aux_acc), tuple(ncs)
@@ -314,7 +317,8 @@ def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
     for i, kind in enumerate(cfg.tail):
         c = caches["tail"][i] if caches else None
         h, nc, aux = layer_apply(params["tail"][i], cfg, kind, h, positions,
-                                 mode=mode, cache=c, memory=memory)
+                                 mode=mode, cache=c, memory=memory,
+                                 seq_lens=seq_lens)
         new_caches["tail"].append(nc)
         aux_total += aux
 

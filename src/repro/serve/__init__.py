@@ -1,2 +1,2 @@
 from . import engine
-from .engine import Request, ServeEngine
+from .engine import DEFAULT_BUCKETS, Request, ServeEngine

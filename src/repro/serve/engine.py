@@ -1,19 +1,34 @@
-"""Batched serving engine: continuous batching over fixed cache slots.
+"""Batched serving engine: bucketed batched prefill + continuous batching.
 
 Production features:
   * fixed-slot KV cache pool with per-slot lengths (continuous batching -
     new requests claim freed slots without recompiling);
+  * bucketed, batched prefill: prompts are right-padded to a small static
+    set of length buckets, so an engine lifetime compiles at most
+    ``len(buckets)`` prefill executables (the per-request path recompiled
+    per distinct prompt length), and every admission round prefills ALL
+    admissible same-bucket requests in ONE ``bundle.prefill_many`` call -
+    the grouped PDQ prologue/matmul pipeline then runs at real batch sizes
+    during prefill too.  The finished rows land in the pooled cache via one
+    fused ``bundle.cache_scatter`` (kernels/kv_cache.cache_scatter_p);
+  * an explicit admission scheduler: a deque-based pending queue, bucket-
+    grouped admits in FIFO order, a free-slot deque (no O(slots) rescans
+    per admission), and per-step accounting in ``engine.stats``;
   * greedy or temperature sampling;
-  * optional PDQ-int8 weight path (``quantize_weights=True`` replaces every
-    large projection with an int8 record; each projection then runs the
-    fused serving pipeline - ONE prologue kernel over the activations plus
-    ONE W8A8 matmul whose fp-out epilogue applies the surrogate-predicted
-    interval, see models/linops.py and DESIGN.md Sec. 2);
-  * optional int8 KV cache (cfg.quant_kv='dynamic'), the decode kernel
-    dequantizes in-VMEM (kernels/kv_cache.py).
+  * optional PDQ-int8 weight path (``quantize_weights=True``; see
+    models/linops.py and DESIGN.md Sec. 2) and optional int8 KV cache
+    (cfg.quant_kv='dynamic', kernels/kv_cache.py).
+
+Padding never leaks: pad tokens are masked out of attention by causality,
+skipped exactly by the SSM recurrence (dt=0), and their cache writes are
+redirected onto the row's last real token (models/attention._clamp_padded),
+so a bucketed prefill is bit-identical to an unpadded one.  Sole caveat:
+MoE routing, where pad/dummy rows consume expert capacity - exact only
+while capacity_factor absorbs them (DESIGN.md Sec. 4).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any
 
@@ -23,6 +38,8 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.linops import quantize_param_tree
+
+DEFAULT_BUCKETS = (32, 64, 128, 256)
 
 
 @dataclasses.dataclass
@@ -37,7 +54,9 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  quantize_weights: bool = False, temperature: float = 0.0,
-                 rng: jax.Array | None = None):
+                 rng: jax.Array | None = None,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 batch_prefill: bool = True):
         self.cfg = cfg
         self.bundle = build_model(cfg)
         self.params = (quantize_param_tree(params) if quantize_weights
@@ -48,40 +67,201 @@ class ServeEngine:
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         mem_len = 8 if cfg.family == "encdec" else 0
         self.mem_len = mem_len
+        self.patch_tokens = (cfg.frontend_tokens if cfg.frontend == "vision"
+                             else 0)
         self.caches = self.bundle.init_caches(slots, max_len, mem_len)
         self.lengths = np.zeros((slots,), np.int64)
         self.active: list[Request | None] = [None] * slots
         self.last_tokens = np.zeros((slots,), np.int64)
         self.finished: list[Request] = []    # completion order, appended O(1)
-        self._decode = jax.jit(self.bundle.decode_step)
+        self.batch_prefill = batch_prefill
+        # clamp buckets so prompt + patches + the first decode token always
+        # fit the cache (a prompt filling the cache exactly would ring-wrap
+        # the first decode write onto slot 0), dedupe and sort ascending;
+        # _bucket() picks the smallest bucket >= prompt len.  The capacity
+        # limit always rides as the last bucket, so any prompt the legacy
+        # per-request path served safely is still servable (at most one
+        # extra executable).
+        limit = max_len - self.patch_tokens - 1
+        if limit <= 0:
+            raise ValueError(
+                f"max_len ({max_len}) leaves no room for a prompt: need "
+                f"patch_tokens ({self.patch_tokens}) + prompt + 1 decode slot")
+        self.buckets = tuple(sorted({min(int(b), limit) for b in buckets
+                                     if int(b) > 0} | {limit}))
+        # admission scheduler state: FIFO pending queue + free-slot pool
+        # (both deques: O(1) admit, no rescans of self.active per admission)
+        self.pending: collections.deque[Request] = collections.deque()
+        self._free: collections.deque[int] = collections.deque(range(slots))
+        self.stats: dict[str, int] = {
+            "prefill_compiles": 0,     # distinct prefill executables traced
+            "decode_compiles": 0,
+            "prefill_batches": 0,      # prefill launches (bucketed: one per
+                                       # bucket group; legacy: one per request)
+            "prefill_requests": 0,     # requests admitted through prefill
+            "prefill_tokens": 0,       # real prompt tokens prefetched
+            "prefill_padded_tokens": 0,  # tokens actually executed (pads incl)
+            "decode_steps": 0,
+            "decode_tokens": 0,
+            "completed": 0,
+        }
+        # one spare cache pool fed to every prefill_many call: prefill is
+        # functional, so the same zero pool is reused forever and the
+        # written rows are landed into self.caches by cache_scatter.
+        if batch_prefill:
+            self._prefill_pool = self.bundle.init_caches(slots, max_len,
+                                                         mem_len)
+        else:
+            # legacy path: a single zero row - a new request must prefill
+            # from an EMPTY cache row, not the freed slot's stale one (the
+            # int8 decode kernel masks by cache['len'], and _cache_write
+            # keeps max(stale_len, new_len), so stale tokens would attend)
+            self._fresh_row = self.bundle.init_caches(1, max_len, mem_len)
+        self._decode = self._traced_jit(self.bundle.decode_step,
+                                        "decode_compiles")
+        self._prefill_one = self._traced_jit(self.bundle.prefill,
+                                             "prefill_compiles")
+        self._prefill_many = self._traced_jit(self.bundle.prefill_many,
+                                              "prefill_compiles")
+        # the pooled cache is rebound to the scatter result immediately, so
+        # donate it: the update lands in place instead of copying the whole
+        # pool per admission (no-op off-TPU, where donation is unsupported)
+        self._scatter = jax.jit(self.bundle.cache_scatter, donate_argnums=(0,))
+
+    def _traced_jit(self, fn, counter: str):
+        """jit(fn) that bumps ``stats[counter]`` once per (re)trace - i.e.
+        once per compiled executable, the quantity the bucket design caps."""
+        stats = self.stats
+
+        def wrapped(*args):
+            stats[counter] += 1      # trace-time side effect
+            return fn(*args)
+
+        return jax.jit(wrapped)
 
     # ----------------------------------------------------------------- admin
-    def _free_slot(self) -> int | None:
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
+    def _bucket(self, prompt_len: int) -> int:
+        if prompt_len <= 0:
+            raise ValueError("empty prompt: nothing to prefill")
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(
+            f"prompt of {prompt_len} tokens exceeds the largest prefill "
+            f"bucket {self.buckets[-1]} (max_len={self.max_len}, "
+            f"patch_tokens={self.patch_tokens})")
 
     def submit(self, req: Request, extras: dict[str, Any] | None = None) -> bool:
-        """Prefill the request into a free slot; False if engine is full."""
-        slot = self._free_slot()
-        if slot is None:
+        """Admit the request into a free slot now; False if engine is full.
+
+        On the bucketed path this may opportunistically co-admit queued
+        same-bucket requests into the same prefill launch.
+        """
+        if not self._free:
+            return False
+        if not self.batch_prefill:
+            return self._submit_one(req, extras)
+        self._bucket(len(req.prompt))    # validate before touching the queue
+        self.pending.appendleft(req)
+        self._admit(extras)
+        return True
+
+    def _submit_one(self, req: Request, extras) -> bool:
+        """Legacy per-request prefill (benchmark baseline): slice one slot,
+        prefill a batch of 1 at the EXACT prompt length (so XLA compiles a
+        fresh executable per distinct length), merge back."""
+        if not self._free:
             return False
         S = len(req.prompt)
-        # per-slot prefill (batch of 1) into the pooled cache
-        sub_caches = self.bundle.cache_slice(self.caches, slot, slot + 1)
-        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        self._bucket(S)       # same cache-capacity guard as the bucketed path
+        slot = self._free.popleft()
+        sub_caches = self._fresh_row      # zero row, never mutated (pure fns)
+        batch = {"tokens": jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)}
         if extras:
             batch.update(extras)
-        logits, sub_caches = self.bundle.prefill(self.params, batch, sub_caches)
+        logits, sub_caches = self._prefill_one(self.params, batch, sub_caches)
         self.caches = self.bundle.cache_merge(self.caches, sub_caches, slot)
         tok = self._sample(logits)[0]
-        req.generated.append(int(tok))
-        self.active[slot] = req
-        P = self.cfg.frontend_tokens if self.cfg.frontend == "vision" else 0
-        self.lengths[slot] = S + P
-        self.last_tokens[slot] = int(tok)
+        self._activate(slot, req, S, int(tok))
+        self.stats["prefill_batches"] += 1
+        self.stats["prefill_requests"] += 1
+        self.stats["prefill_tokens"] += S
+        self.stats["prefill_padded_tokens"] += S
         return True
+
+    def _activate(self, slot: int, req: Request, prompt_len: int, tok: int):
+        req.generated.append(tok)
+        if len(req.generated) >= req.max_new:
+            # prefill already produced the full budget: complete without
+            # ever occupying a decode slot (max_new=1 = pure ingest)
+            req.done = True
+            self.finished.append(req)
+            self._free.append(slot)
+            self.stats["completed"] += 1
+            return
+        self.active[slot] = req
+        self.lengths[slot] = prompt_len + self.patch_tokens
+        self.last_tokens[slot] = tok
+
+    def _admit(self, extras=None) -> int:
+        """Bucket-grouped admission: ONE pass over the pending queue assigns
+        the first len(free) requests (FIFO) to per-bucket groups, then each
+        group prefills in ONE batched call (groups launch in first-arrival
+        order).  O(pending) per admission call, not per batch.  Returns the
+        number of requests admitted."""
+        free = len(self._free)
+        groups: dict[int, list[Request]] = {}
+        order: list[int] = []
+        admitted = 0
+        while self.pending and admitted < free:   # consumes a queue prefix
+            r = self.pending.popleft()
+            b = self._bucket(len(r.prompt))
+            if b not in groups:
+                groups[b] = []
+                order.append(b)
+            groups[b].append(r)
+            admitted += 1
+        for b in order:
+            self._prefill_batch(groups[b], b, extras)
+        return admitted
+
+    def _prefill_batch(self, reqs: list[Request], bucket: int, extras=None):
+        """ONE multi-slot prefill: right-pad the prompts to ``bucket``, run
+        prefill_many over a fixed batch of ``slots`` rows (rows beyond
+        len(reqs) are dummies the scatter drops), then land the rows into
+        the pooled cache with one cache_scatter."""
+        Bp = self.slots
+        n = len(reqs)
+        assert 0 < n <= len(self._free)
+        tokens = np.zeros((Bp, bucket), np.int32)
+        seq_lens = np.ones((Bp,), np.int32)          # dummy rows: 1 token
+        for i, r in enumerate(reqs):
+            S = len(r.prompt)
+            tokens[i, :S] = r.prompt
+            seq_lens[i] = S
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extras:
+            # extras are shared across requests (seed semantics): broadcast
+            # their leading batch dim across the prefill rows
+            batch.update(jax.tree.map(
+                lambda a: jnp.broadcast_to(jnp.asarray(a)[:1],
+                                           (Bp,) + jnp.asarray(a).shape[1:]),
+                dict(extras)))
+        logits, sub = self._prefill_many(self.params, batch,
+                                         self._prefill_pool,
+                                         jnp.asarray(seq_lens))
+        src_map = np.full((self.slots,), -1, np.int32)
+        slots_taken = [self._free.popleft() for _ in range(n)]
+        for i, slot in enumerate(slots_taken):
+            src_map[slot] = i
+        self.caches = self._scatter(self.caches, sub, jnp.asarray(src_map))
+        nxt = self._sample(logits)                   # (Bp,), dummies ignored
+        for i, (slot, r) in enumerate(zip(slots_taken, reqs)):
+            self._activate(slot, r, int(seq_lens[i]), int(nxt[i]))
+        self.stats["prefill_batches"] += 1
+        self.stats["prefill_requests"] += n
+        self.stats["prefill_tokens"] += int(seq_lens[:n].sum())
+        self.stats["prefill_padded_tokens"] += Bp * bucket
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
         if self.temperature <= 0.0:
@@ -100,6 +280,8 @@ class ServeEngine:
         logits, self.caches = self._decode(self.params, self.caches, tokens,
                                            positions)
         nxt = self._sample(logits)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(live)
         for i in live:
             req = self.active[i]
             req.generated.append(int(nxt[i]))
@@ -108,23 +290,29 @@ class ServeEngine:
             if len(req.generated) >= req.max_new or self.lengths[i] >= self.max_len - 1:
                 req.done = True
                 self.finished.append(req)
-                self.active[i] = None     # slot freed for the next request
+                self.active[i] = None
+                self._free.append(i)     # slot freed for the next admission
+                self.stats["completed"] += 1
         return len([r for r in self.active if r is not None])
 
     def run(self, requests: list[Request], extras=None) -> list[Request]:
         """Drain a request list through the engine (continuous batching).
 
-        Completion is tracked incrementally: ``step`` appends each finished
-        request to ``self.finished`` as its slot frees, so draining is O(1)
-        per completion instead of rescanning the whole request list (an
-        O(n^2) list-membership loop) every decode step.
+        Admission is bucket-grouped and batched (``_admit``); completion is
+        tracked incrementally: ``step`` appends each finished request to
+        ``self.finished`` as its slot frees, so draining is O(1) per
+        completion instead of rescanning the whole request list every
+        decode step.
         """
-        pending = list(requests)
+        for r in requests:               # validate upfront: an oversized
+            self._bucket(len(r.prompt))  # prompt must not dequeue peers
+        self.pending.extend(requests)
         n_active = sum(r is not None for r in self.active)   # pre-submitted
-        while pending or n_active:
-            while pending and self._free_slot() is not None:
-                if not self.submit(pending[0], extras):
-                    break
-                pending.pop(0)
+        while self.pending or n_active:
+            if self.batch_prefill:
+                self._admit(extras)
+            else:
+                while self.pending and self._free:
+                    self._submit_one(self.pending.popleft(), extras)
             n_active = self.step()
         return requests

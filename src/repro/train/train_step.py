@@ -10,8 +10,7 @@ tests and small examples.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -147,7 +146,6 @@ def build_train_step(
     sspec = state_specs(st, mesh)
     state_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
                                    is_leaf=lambda x: isinstance(x, P))
-    dp = shd.dp_axes(mesh)
 
     def batch_shardings(batch_tree):
         spec = shd.batch_spec(mesh, batch_tree)

@@ -1,0 +1,11 @@
+"""Pytest bootstrap: bare ``pytest`` does not prepend the cwd to sys.path
+(``python -m pytest`` does), so make the repo root importable for
+cross-test helpers (e.g. tests.test_hlo_and_linops._count_pallas_calls)
+and ``src`` importable so PYTHONPATH=src is optional."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -3,13 +3,12 @@ corruption suite, paper-literal grid search, analytic flops model."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
     from _hypo_compat import given, settings, strategies as st
 
-from repro.models.attention import chunked_attention, decode_attention
+from repro.models.attention import chunked_attention
 
 HYPO = dict(max_examples=8, deadline=None, derandomize=True)
 

@@ -19,7 +19,6 @@ except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
 
 from repro.core import (affine, interval, qlinear, run_calibration,
                         spec_for_mode, surrogate)
-from repro.core.policy import QuantPolicy
 
 HYPO = dict(max_examples=15, deadline=None, derandomize=True)
 

@@ -8,8 +8,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import collectives, sharding as shd

@@ -5,9 +5,8 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.launch.hlo_analysis import analyze
-from repro.models.linops import (group_quantize_weights, is_quantized, lin,
-                                 lin_grouped, quantize_param_tree,
-                                 quantize_weight)
+from repro.models.linops import (is_quantized, lin, lin_grouped,
+                                 quantize_param_tree, quantize_weight)
 
 
 def _count_pallas_calls(jaxpr) -> int:

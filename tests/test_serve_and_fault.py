@@ -2,7 +2,6 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

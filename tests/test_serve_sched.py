@@ -1,0 +1,338 @@
+"""Bucketed batched prefill scheduler + cache pool plumbing tests.
+
+Pins the PR-3 contract: a mixed-length workload compiles at most
+len(buckets) prefill executables, batched prefill still rides the grouped
+8-kernel PDQ path, bucket padding never leaks into attention or any cache,
+and cache_slice/cache_merge/cache_scatter round-trip bit-exactly for fp
+and int8 kernel-layout KV caches.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.kernels import ops
+from repro.models import build_model
+from repro.serve import Request, ServeEngine
+
+MIXED_LENS = [3, 5, 8, 9, 12, 16, 17, 23, 30, 4, 11, 27]   # 12 requests
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced_config("stablelm-1.6b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _requests(cfg, lens, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                    max_new=max_new) for i, L in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# compilation-count pin (the tentpole's reason to exist)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_length_workload_compiles_at_most_len_buckets(small_model):
+    cfg, m, params = small_model
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32))
+    reqs = _requests(cfg, MIXED_LENS)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 4 for r in reqs)
+    assert eng.stats["prefill_compiles"] <= len(eng.buckets), eng.stats
+    assert eng.stats["decode_compiles"] == 1, eng.stats
+    # admission actually batched: far fewer launches than requests
+    assert eng.stats["prefill_batches"] < len(reqs), eng.stats
+    assert eng.stats["prefill_requests"] == len(reqs)
+    assert eng.stats["prefill_tokens"] == sum(MIXED_LENS)
+
+
+def test_bucketed_outputs_match_per_request_prefill_exactly(small_model):
+    """Bucket padding must never leak: the bucketed engine's greedy outputs
+    are bit-identical to the legacy per-request-prefill engine's (pads are
+    causally masked in attention, skipped exactly by the SSM recurrence,
+    and their cache writes redirected onto the last real token)."""
+    cfg, m, params = small_model
+    outs = {}
+    for tag, batched in (("bucketed", True), ("legacy", False)):
+        eng = ServeEngine(cfg, params, slots=4, max_len=64,
+                          buckets=(8, 16, 32), batch_prefill=batched)
+        reqs = _requests(cfg, MIXED_LENS, max_new=6)
+        eng.run(reqs)
+        outs[tag] = [tuple(r.generated) for r in reqs]
+    assert outs["bucketed"] == outs["legacy"]
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "deepseek-v2-236b",
+                                  "seamless-m4t-medium", "phi-3-vision-4.2b"])
+def test_bucketed_matches_legacy_other_families(arch):
+    """SSM recurrent state, MLA compressed cache, encdec cross-K/V leaves
+    and the vision patch-offset arithmetic all survive bucketing."""
+    cfg = reduced_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.asarray(
+            0.01 * rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "vision":
+        extras["patches"] = jnp.asarray(
+            0.01 * rng.standard_normal((1, cfg.frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    outs = {}
+    for tag, batched in (("bucketed", True), ("legacy", False)):
+        eng = ServeEngine(cfg, params, slots=2, max_len=48,
+                          buckets=(8, 16), batch_prefill=batched)
+        reqs = _requests(cfg, [3, 7, 11, 16], max_new=4)
+        eng.run(reqs, extras=extras or None)
+        outs[tag] = [tuple(r.generated) for r in reqs]
+    assert outs["bucketed"] == outs["legacy"]
+
+
+def test_prefill_many_matches_prefill_bitwise(small_model):
+    """Bundle-level: one padded prefill_many call == N unpadded prefill
+    calls, for the logits AND every cache leaf (bit-exact)."""
+    cfg, m, params = small_model
+    rng = np.random.default_rng(1)
+    lens = [5, 9, 16]
+    B, L, max_len = len(lens), 16, 32
+    prompts = [rng.integers(0, cfg.vocab, s).astype(np.int32) for s in lens]
+    toks = np.zeros((B, L), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    logits_b, caches_b = m.prefill_many(
+        params, {"tokens": jnp.asarray(toks)}, m.init_caches(B, max_len, 0),
+        jnp.asarray(lens, jnp.int32))
+    caches_l = m.init_caches(B, max_len, 0)
+    logits_l = []
+    for i, p in enumerate(prompts):
+        sub = m.cache_slice(caches_l, i, i + 1)
+        lg, sub = m.prefill(params, {"tokens": jnp.asarray(p[None])}, sub)
+        caches_l = m.cache_merge(caches_l, sub, i)
+        logits_l.append(lg[0])
+    np.testing.assert_array_equal(np.asarray(logits_b),
+                                  np.asarray(jnp.stack(logits_l)))
+    for a, b in zip(jax.tree.leaves(caches_b), jax.tree.leaves(caches_l)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pad_tokens_never_attended(small_model):
+    """Changing the CONTENT of pad positions must not change anything: same
+    prompts padded with zeros vs. padded with random junk give identical
+    logits and caches."""
+    cfg, m, params = small_model
+    rng = np.random.default_rng(2)
+    lens = [4, 7]
+    B, L = 2, 16
+    prompts = [rng.integers(0, cfg.vocab, s).astype(np.int32) for s in lens]
+    outs = []
+    for fill in (0, 1):
+        toks = (np.zeros((B, L), np.int32) if fill == 0
+                else rng.integers(0, cfg.vocab, (B, L)).astype(np.int32))
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+        lg, caches = m.prefill_many(
+            params, {"tokens": jnp.asarray(toks)}, m.init_caches(B, 32, 0),
+            jnp.asarray(lens, jnp.int32))
+        outs.append((lg, caches))
+    np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(outs[1][0]))
+    for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# grouped-kernel pin: batched prefill rides the PR-2 pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_gqa_batched_prefill_block_is_eight_kernels():
+    """A quantized GQA block under BATCHED PADDED prefill must trace to the
+    same 8 pallas_calls as decode (grouped QKV pair + wo pair + grouped
+    gate/up pair + w_down pair): bucketing must not push any projection
+    off the grouped one-prologue-one-matmul path."""
+    from repro.models.attention import AttnDims, gqa_apply, gqa_init, init_cache
+    from repro.models.layers import mlp_apply, mlp_init, rms_norm
+    from repro.models.linops import quantize_param_tree
+    from tests.test_hlo_and_linops import _count_pallas_calls
+
+    dims = AttnDims(d_model=256, n_heads=4, n_kv_heads=2, head_dim=64)
+    key = jax.random.PRNGKey(0)
+    params = {"attn": gqa_init(key, dims, jnp.float32),
+              "attn_norm": jnp.zeros((256,)),
+              "ffn_norm": jnp.zeros((256,)),
+              "ffn": mlp_init(jax.random.fold_in(key, 1), 256, 512, jnp.float32)}
+    qp = quantize_param_tree(params)
+    cache = init_cache(dims, 8, 64, jnp.float32)
+
+    def block(p, h, cache, positions, seq_lens):
+        a, cache = gqa_apply(p["attn"], dims, rms_norm(h, p["attn_norm"]),
+                             positions, mode="prefill", cache=cache,
+                             seq_lens=seq_lens)
+        h = h + a
+        return h + mlp_apply(p["ffn"], rms_norm(h, p["ffn_norm"])), cache
+
+    h = jnp.ones((8, 16, 256))                       # batch of padded rows
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (8, 16)).astype(jnp.int32)
+    seq_lens = jnp.asarray([3, 5, 7, 16, 9, 11, 2, 13], jnp.int32)
+    ops.set_impl("kernel")
+    try:
+        jaxpr = jax.make_jaxpr(block)(qp, h, cache, pos, seq_lens)
+    finally:
+        ops.set_impl("auto")
+    n = _count_pallas_calls(jaxpr)
+    assert n == 8, f"expected 8 pallas_calls per quantized prefill block, got {n}"
+
+
+# ---------------------------------------------------------------------------
+# cache round-trips (fp and int8 kernel-layout caches)
+# ---------------------------------------------------------------------------
+
+
+def _filled_like(tree, seed):
+    leaves, treedef = jax.tree.flatten(tree)
+    rng = np.random.default_rng(seed)
+    return jax.tree.unflatten(
+        treedef, [jnp.asarray(rng.integers(-100, 100, l.shape), l.dtype)
+                  for l in leaves])
+
+
+@pytest.mark.parametrize("quant_kv", ["none", "dynamic"])
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+def test_cache_scatter_roundtrip_bit_exact(quant_kv, impl):
+    """cache_scatter lands selected sub rows and keeps every untouched slot
+    bit-exact, across fp and int8 kernel-layout KV leaves and both the jnp
+    reference and the Pallas kernel (interpret mode off-TPU)."""
+    cfg = dataclasses.replace(reduced_config("gemma2-2b"), quant_kv=quant_kv)
+    m = build_model(cfg)
+    pool = _filled_like(m.init_caches(4, 32, 0), 1)
+    sub = _filled_like(m.init_caches(4, 32, 0), 2)
+    src_map = jnp.asarray([-1, 2, -1, 0], jnp.int32)
+    ops.set_impl(impl)
+    try:
+        out = m.cache_scatter(pool, sub, src_map)
+    finally:
+        ops.set_impl("auto")
+
+    def rows(leaf, pool_leaf):
+        # head/tail leaves: batch axis 0; stacked block leaves: axis 1
+        ax = 0 if leaf.shape[0] == 4 else 1
+        return (lambda i: jnp.take(leaf, i, axis=ax),
+                lambda i: jnp.take(pool_leaf, i, axis=ax))
+
+    for o, p, s in zip(jax.tree.leaves(out), jax.tree.leaves(pool),
+                       jax.tree.leaves(sub)):
+        get_o, get_p = rows(o, p)
+        get_s, _ = rows(s, s)
+        for slot, src in enumerate([-1, 2, -1, 0]):
+            want = get_p(slot) if src < 0 else get_s(src)
+            np.testing.assert_array_equal(np.asarray(get_o(slot)),
+                                          np.asarray(want))
+
+
+@pytest.mark.parametrize("quant_kv", ["none", "dynamic"])
+def test_cache_slice_merge_roundtrip_bit_exact(quant_kv):
+    """cache_merge(cache_slice(...)) is the identity and never perturbs the
+    other slots, for fp and int8 kernel-layout caches."""
+    cfg = dataclasses.replace(reduced_config("gemma2-2b"), quant_kv=quant_kv)
+    m = build_model(cfg)
+    pool = _filled_like(m.init_caches(3, 32, 0), 3)
+    sub = m.cache_slice(pool, 1, 2)
+    out = m.cache_merge(pool, sub, 1)
+    for o, p in zip(jax.tree.leaves(out), jax.tree.leaves(pool)):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(p))
+
+
+def test_int8_kv_slot_reuse_does_not_attend_stale_tokens(small_model):
+    """Regression: a freed slot's cache row must be reset before reuse.
+    With int8 KV the decode kernel masks by cache['len'] alone, and
+    _cache_write keeps max(stale_len, new_len), so a SHORTER request
+    reusing a slot would attend the previous occupant's tokens if the
+    engine prefillled into the stale row.  Both paths must match a fresh
+    single-request engine exactly."""
+    cfg, _, _ = small_model
+    cfg = dataclasses.replace(cfg, quant_kv="dynamic")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    long_req, short_req = _requests(cfg, [20, 4], max_new=6, seed=9)
+    truth = ServeEngine(cfg, params, slots=1, max_len=64, buckets=(8, 32))
+    ref = _requests(cfg, [4], max_new=6, seed=9)[0]
+    ref.prompt = short_req.prompt.copy()
+    truth.run([ref])                                  # fresh engine = oracle
+    for batched in (True, False):
+        eng = ServeEngine(cfg, params, slots=1, max_len=64, buckets=(8, 32),
+                          batch_prefill=batched)
+        a, b = _requests(cfg, [20, 4], max_new=6, seed=9)
+        eng.run([a, b])                               # b reuses a's slot
+        assert tuple(b.generated) == tuple(ref.generated), (
+            batched, b.generated, ref.generated)
+
+
+def test_int8_kv_bucketed_decode_stays_masked(small_model):
+    """int8 KV cache + bucketed prefill: the decode kernel's length mask
+    must exclude bucket pad positions (cache['len'] == true length)."""
+    cfg, _, _ = small_model
+    cfg = dataclasses.replace(cfg, quant_kv="dynamic")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    outs = {}
+    for tag, batched in (("bucketed", True), ("legacy", False)):
+        eng = ServeEngine(cfg, params, slots=2, max_len=64,
+                          buckets=(8, 16), batch_prefill=batched)
+        reqs = _requests(cfg, [3, 7, 12, 15], max_new=4, seed=5)
+        eng.run(reqs)
+        outs[tag] = [tuple(r.generated) for r in reqs]
+    assert outs["bucketed"] == outs["legacy"]
+
+
+# ---------------------------------------------------------------------------
+# scheduler behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_submit_admits_immediately_and_reports_full(small_model):
+    cfg, m, params = small_model
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16, 32))
+    reqs = _requests(cfg, [4, 6, 9], max_new=64)   # long-running
+    assert eng.submit(reqs[0])
+    assert eng.submit(reqs[1])
+    assert not eng.submit(reqs[2])                 # both slots busy
+    eng.run([reqs[2]])
+    assert all(r.done for r in reqs)
+
+
+def test_cache_capacity_always_rides_as_last_bucket(small_model):
+    """Any prompt the legacy per-request path served safely stays
+    servable: the capacity limit (max_len minus one decode slot) is
+    appended to the bucket set, so a prompt above the largest configured
+    bucket still admits (one extra executable)."""
+    cfg, m, params = small_model
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16))
+    assert eng.buckets == (8, 16, 63)
+    reqs = _requests(cfg, [20, 40, 63])
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+
+
+def test_oversized_prompt_is_rejected_before_dequeuing(small_model):
+    """A prompt beyond cache capacity raises up front, WITHOUT dequeuing
+    (and thereby losing) admissible peers."""
+    cfg, m, params = small_model
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16))
+    ok = _requests(cfg, [5])[0]
+    bad = _requests(cfg, [64])[0]          # would fill the cache exactly
+    with pytest.raises(ValueError, match="exceeds the largest prefill bucket"):
+        eng.run([ok, bad])
+    assert not eng.pending                 # queue untouched by the rejection
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.run([Request(uid=9, prompt=np.zeros((0,), np.int32))])
+    eng.run([ok])                          # peer is still servable
+    assert ok.done

@@ -1,6 +1,5 @@
 """Substrate tests: data determinism, checkpointing, optimizer, schedules."""
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp
