@@ -1,4 +1,7 @@
-"""Bucketed batched prefill vs. per-request prefill ingest timing.
+"""Bucketed batched prefill vs. per-request prefill ingest timing, plus
+the mesh-distributed data-parallel ingest scaling sweep.
+
+Single-device mode (default, BENCH_serve.json):
 
 bucketed : ServeEngine's admission scheduler - prompts right-padded to a
            static bucket set, ONE multi-slot prefill_many per same-bucket
@@ -15,16 +18,29 @@ recompiles per prompt length are precisely the serving cost the bucket
 design removes, so they belong in the measurement.  ``speedup`` is
 ingest-throughput bucketed/legacy (prompt tokens per second).
 
-Writes ``BENCH_serve.json`` next to this file; ``--quick`` runs the CI
-smoke cells only and ``--compare <baseline.json>`` fails on a >25% geomean
-speedup regression (see _compare.py).
+Mesh mode (``--mesh DxM``, BENCH_serve_sharded.json): ShardedServeEngine
+ingest throughput at data=1 vs data=D (model axis and per-replica batch
+fixed), STEADY-STATE - each engine is warmed on a small workload first so
+the measurement isolates the data-parallel scaling, not compile time.
+``speedup`` is the tok/s ratio data=D over data=1.  On CPU the required
+virtual devices are forced automatically (env set before jax imports).
+
+Writes the JSON next to this file; ``--quick`` runs the CI smoke cells
+only and ``--compare <baseline.json>`` fails on a >25% geomean speedup
+regression (see _compare.py).
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import sys
+
+
+from repro.launch.mesh import bootstrap_mesh_env
+
+bootstrap_mesh_env(sys.argv)
+
+import argparse
+import json
 import time
 
 import jax
@@ -34,10 +50,13 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from _compare import compare
 
 from repro.configs import reduced_config
-from repro.serve import Request, ServeEngine
+from repro.launch.mesh import make_serve_mesh, parse_mesh
+from repro.serve import Request, ServeEngine, ShardedServeEngine
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                    "BENCH_serve.json")
+OUT_SHARDED = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "BENCH_serve_sharded.json")
 ARCH = "stablelm-1.6b"
 
 
@@ -68,18 +87,127 @@ def bench_cell(cfg, params, requests: int, slots: int, max_prompt: int) -> dict:
     return out
 
 
+def _mesh_workload(cfg, requests: int, lo: int, hi: int, seed: int = 0):
+    """Uniform-bucket prompts (lo, hi]: one prefill executable per engine."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(lo + 1, hi + 1, requests)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                    max_new=1) for i, L in enumerate(lens)], int(lens.sum())
+
+
+def bench_mesh_cell(cfg, params, *, data_hi: int, model: int, spr: int,
+                    max_prompt: int, requests: int) -> dict:
+    """Data-parallel ingest scaling at fixed model size and fixed
+    per-replica pool shape (``spr`` slots each): the same
+    ``requests``-request workload through a data=1 and a data=data_hi
+    engine.
+
+    The GATED quantity (``speedup``) is per-round ingest capacity, read
+    from ``engine.stats``: real prompt tokens landed per admission round
+    (= per SPMD prefill launch + cache scatter).  It is what the
+    coordinator design controls - one round must fill every replica's
+    free slots, so capacity scales ~data x; a routing/assignment
+    regression (replicas left idle, extra rounds) shows up immediately,
+    and the measure is deterministic, which a CI gate needs.
+
+    Wall-clock tok/s for both engines is RECORDED alongside
+    (``d*_tok_s``) but not gated: on the 2-core CI hosts this tree
+    targets, all virtual devices share the same two cores, so the wall
+    ratio measures host core saturation (observed anywhere between ~1x
+    and ~2.5x run-to-run), not replica concurrency.  On hardware with >=
+    ``data`` cores/chips the wall ratio tracks the capacity ratio.
+    """
+    buckets = (max_prompt,)
+    lo = max_prompt // 2
+    out = {"requests": requests, "spr": spr, "max_prompt": max_prompt,
+           "model": model, "data_hi": data_hi}
+    per_round = {}
+    for data in (1, data_hi):
+        mesh = make_serve_mesh(data, model)
+        eng = ShardedServeEngine(cfg, params, mesh=mesh,
+                                 slots_per_replica=spr,
+                                 max_len=max_prompt + 32, buckets=buckets)
+        warm, _ = _mesh_workload(cfg, data * spr, lo, max_prompt, seed=7)
+        eng.run(warm)                              # compile + warm the pools
+        base_batches = eng.stats["prefill_batches"]
+        base_tokens = eng.stats["prefill_tokens"]
+        reqs, prompt_tokens = _mesh_workload(cfg, requests, lo, max_prompt)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        jax.block_until_ready(eng.caches)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        rounds = eng.stats["prefill_batches"] - base_batches
+        tokens = eng.stats["prefill_tokens"] - base_tokens
+        tag = f"d{data}"
+        out[f"{tag}_tok_s"] = prompt_tokens / dt
+        out[f"{tag}_rounds"] = rounds
+        per_round[data] = tokens / rounds
+        out[f"{tag}_tokens_per_round"] = per_round[data]
+    out["speedup"] = per_round[data_hi] / per_round[1]
+    return out
+
+
+def run_mesh_sweep(args, cfg, params) -> dict:
+    data, model = parse_mesh(args.mesh)
+    # (spr, max_prompt, requests); the quick cell rides in the full sweep
+    # so CI smoke runs intersect the committed baseline
+    quick_spec = [(8, 256, 64)]
+    cells_spec = quick_spec if args.quick else list(dict.fromkeys(
+        quick_spec + [(4, 256, 64), (8, 128, 64)]))
+    cells = []
+    for spr, max_prompt, requests in cells_spec:
+        cell = bench_mesh_cell(cfg, params, data_hi=data, model=model,
+                               spr=spr, max_prompt=max_prompt,
+                               requests=requests)
+        cells.append(cell)
+        print(f"spr={spr} max_prompt={max_prompt:3d} model={model} "
+              f"requests={requests:3d}  "
+              f"d1 {cell['d1_tok_s']:8.0f} tok/s ({cell['d1_rounds']} rounds)"
+              f"  d{data} {cell[f'd{data}_tok_s']:8.0f} tok/s "
+              f"({cell[f'd{data}_rounds']} rounds)  "
+              f"capacity x{cell['speedup']:.2f}")
+    return {"cells": cells,
+            "keys": ("requests", "spr", "max_prompt", "model", "data_hi")}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="small cells / CI smoke")
-    ap.add_argument("--out", default=OUT)
+    ap.add_argument("--out", default=None)
     ap.add_argument("--compare", default=None, metavar="BASELINE.json",
                     help="fail on >25%% speedup regression vs this baseline")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="data-parallel ingest scaling sweep on a DxM mesh "
+                         "(ShardedServeEngine; data=1 vs data=D)")
     args = ap.parse_args()
 
     cfg = reduced_config(ARCH)
     from repro.models import build_model
     params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    if args.mesh:
+        sweep = run_mesh_sweep(args, cfg, params)
+        out = {
+            "meta": {
+                "backend": jax.default_backend(),
+                "device": str(jax.devices()[0]),
+                "arch": ARCH,
+                "jax": jax.__version__,
+                "mesh": args.mesh,
+                "quick": bool(args.quick),
+            },
+            "cells": sweep["cells"],
+        }
+        out_path = args.out or OUT_SHARDED
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out_path}")
+        if args.compare:
+            sys.exit(compare(out, args.compare, keys=sweep["keys"]))
+        return
 
     # (requests, slots, max_prompt); quick cells ride in the full sweep so
     # CI smoke runs intersect the committed baseline (see --compare)
@@ -111,10 +239,11 @@ def main() -> None:
         },
         "cells": cells,
     }
-    with open(args.out, "w") as f:
+    out_path = args.out or OUT
+    with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")
-    print(f"wrote {args.out}")
+    print(f"wrote {out_path}")
     if args.compare:
         sys.exit(compare(out, args.compare,
                          keys=("requests", "slots", "max_prompt")))

@@ -99,6 +99,29 @@ def named(mesh: Mesh, tree_of_specs):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def serve_pool_specs(caches) -> Any:
+    """shard_map PartitionSpecs for a ServeEngine cache pool: the slot axis
+    shards over 'data' (one contiguous block of slots per data-parallel
+    replica), everything else stays replica-local.
+
+    Head/tail leaves carry slots on axis 0; lax.scan-stacked block leaves
+    on axis 1 (the same layout contract as ``models/api.cache_slice``).
+    Heads/features are NOT sharded here: inside the shard_map body each
+    replica runs the single-device program on its slot block, and the
+    'model' axis splits the PDQ/fp projection columns instead
+    (kernels/ops.tp_shard), which keeps the quantized epilogue math exact.
+    """
+    def head(c):
+        return P(*(("data",) + (None,) * (c.ndim - 1)))
+
+    def block(c):
+        return P(None, "data", *((None,) * (c.ndim - 2)))
+
+    return {"head": jax.tree.map(head, caches["head"]),
+            "tail": jax.tree.map(head, caches["tail"]),
+            "blocks": jax.tree.map(block, caches["blocks"])}
+
+
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

@@ -11,6 +11,7 @@ kernel's block multiples.
 """
 from __future__ import annotations
 
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,46 @@ def _use_kernel() -> bool:
     if _IMPL == "kernel":
         return True
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Tensor parallelism (serving): column-split + all-gather epilogue
+# ---------------------------------------------------------------------------
+#
+# Inside a shard_map body the sharded serving engine activates ``tp_shard``:
+# every PDQ / fp projection then computes only its device's N-columns and
+# all-gathers the result, so the matmul FLOPs (and on TPU the weight
+# streaming) split over the mesh axis while the numerics stay bit-exact -
+# each output column runs the identical full-K reduction and the identical
+# per-row epilogue it runs on one device, and the tiled all-gather merely
+# concatenates the column blocks in axis order.  The PDQ prologue is
+# intentionally NOT split: its (x_q, s_x, s1, s2) depend on the whole input
+# row, are O(K) to compute, and every shard needs them - recomputing
+# locally is cheaper than a broadcast.
+
+_TP: tuple[str, int] | None = None     # (mesh axis name, axis size)
+
+
+@contextlib.contextmanager
+def tp_shard(axis_name: str, size: int):
+    """Enable N-column tensor parallelism over ``axis_name`` while tracing
+    (valid only inside a shard_map body that binds the axis).  size == 1 is
+    a no-op."""
+    global _TP
+    prev = _TP
+    _TP = (axis_name, int(size)) if int(size) > 1 else None
+    try:
+        yield
+    finally:
+        _TP = prev
+
+
+def tp_ctx() -> tuple[str, int] | None:
+    return _TP
+
+
+def _tp_cols(a, n_local: int, idx, axis: int):
+    return jax.lax.dynamic_slice_in_dim(a, idx * n_local, n_local, axis)
 
 
 def _interpret() -> bool:
@@ -242,6 +283,18 @@ def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
     # interval, so fp-out matches requant->dequant at the clip boundaries.
     lo_g = (-128.0 - z_out) * s_out
     hi_g = (127.0 - z_out) * s_out
+    N = wrec["q"].shape[1]
+    if _TP is not None and N % _TP[1] == 0:
+        # column-TP: this shard's N-slice only (the interval is per-row, so
+        # the epilogue operands need no slicing), then all-gather columns.
+        ax, T = _TP
+        idx = jax.lax.axis_index(ax)
+        Nl = N // T
+        y = w8a8_matmul(x_q, _tp_cols(wrec["q"], Nl, idx, 1), s_x, 0,
+                        _tp_cols(wrec["scale"], Nl, idx, 0),
+                        colsum=_tp_cols(wrec["colsum"], Nl, idx, 1),
+                        fp_range=(lo_g, hi_g), out_dtype=out_dtype, block=block)
+        return jax.lax.all_gather(y, ax, axis=y.ndim - 1, tiled=True)
     y = w8a8_matmul(x_q, wrec["q"], s_x, 0, wrec["scale"],
                     colsum=wrec["colsum"], fp_range=(lo_g, hi_g),
                     out_dtype=out_dtype, block=block)
@@ -291,6 +344,22 @@ def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
         return ys, s_out, z_out.astype(jnp.int32)
     lo_g = (-128.0 - z_out) * s_out
     hi_g = (127.0 - z_out) * s_out
+    if _TP is not None and nb % _TP[1] == 0:
+        # the N-segments (and their per-(row, N-block) epilogue grids) split
+        # along the TP axis in whole 128-lane blocks; the tiled all-gather
+        # reassembles the full concatenation before the segment split.
+        ax, T = _TP
+        idx = jax.lax.axis_index(ax)
+        nb_l, Nl = nb // T, segs.total // T
+        lo_b, hi_b = blockwise(lo_g), blockwise(hi_g)
+        y = w8a8_matmul(x_q, _tp_cols(grec["q"], Nl, idx, 1), s_x, 0,
+                        _tp_cols(grec["scale"], Nl, idx, 0),
+                        colsum=_tp_cols(grec["colsum"], Nl, idx, 1),
+                        fp_range=(_tp_cols(lo_b, nb_l, idx, lo_b.ndim - 1),
+                                  _tp_cols(hi_b, nb_l, idx, hi_b.ndim - 1)),
+                        out_dtype=out_dtype, block=block)
+        y = jax.lax.all_gather(y, ax, axis=y.ndim - 1, tiled=True)
+        return tuple(y[..., o:o + n] for o, n in bounds)
     y = w8a8_matmul(x_q, grec["q"], s_x, 0, grec["scale"],
                     colsum=grec["colsum"],
                     fp_range=(blockwise(lo_g), blockwise(hi_g)),

@@ -6,6 +6,8 @@ sees the real device count).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import numpy as np
 
@@ -35,6 +37,60 @@ def make_host_mesh(data: int | None = None, model: int | None = None):
     elif model is None:
         model = n // data
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """'4x2' -> (data=4, model=2)."""
+    try:
+        data, model = (int(p) for p in spec.lower().split("x"))
+    except ValueError as e:
+        raise ValueError(f"--mesh expects DxM (e.g. 4x2), got {spec!r}") from e
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be positive, got {spec!r}")
+    return data, model
+
+
+def mesh_arg(argv) -> str | None:
+    """The value of --mesh DxM / --mesh=DxM in argv, else None (scanned
+    by hand: this runs BEFORE argparse so the device count can be sized
+    first)."""
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def bootstrap_mesh_env(argv) -> None:
+    """Force D*M virtual host devices for a --mesh run on a CPU host.
+
+    Importing this module does not initialize the jax backend, so
+    XLA_FLAGS set here still takes effect - call before the first device
+    query (launch/serve.py and benchmarks/bench_serve.py call it at
+    module import, before anything touches jax.devices())."""
+    spec = mesh_arg(argv)
+    if spec is not None:
+        data, model = parse_mesh(spec)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{data * model}").strip()
+
+
+def make_serve_mesh(data: int, model: int):
+    """('data', 'model') mesh over the first data*model devices (the
+    virtual-device CPU path exposes more than the mesh needs)."""
+    n = data * model
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"mesh {data}x{model} needs {n} devices, found "
+            f"{len(jax.devices())}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:n]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
 
 
 def mesh_info(mesh) -> dict:

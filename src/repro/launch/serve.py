@@ -1,11 +1,25 @@
 """Serving driver: bucketed batched prefill + continuous batching with the
-PDQ-int8 path.
+PDQ-int8 path, single-device or mesh-distributed.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --requests 8 --max-new 16 [--int8] [--int8-kv] \
-        [--buckets 32,64,128] [--legacy-prefill]
+        [--buckets 32,64,128] [--legacy-prefill] [--chunked-prefill] \
+        [--mesh 4x2] [--slots-per-replica 2]
+
+``--mesh DxM`` serves over a ('data', 'model') device mesh
+(ShardedServeEngine: slots data-parallel across D replicas, projection
+columns tensor-parallel across M shards).  On a CPU host the driver forces
+enough virtual devices automatically - this line must run before jax
+imports, hence the early environ bootstrap below.
 """
 from __future__ import annotations
+
+import sys
+
+
+from repro.launch.mesh import bootstrap_mesh_env
+
+bootstrap_mesh_env(sys.argv)
 
 import argparse
 import dataclasses
@@ -15,8 +29,9 @@ import jax
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, reduced_config
+from repro.launch.mesh import make_serve_mesh, parse_mesh
 from repro.models import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, ShardedServeEngine
 
 
 def main(argv=None):
@@ -37,6 +52,15 @@ def main(argv=None):
     ap.add_argument("--legacy-prefill", action="store_true",
                     help="per-request prefill baseline (recompiles per "
                          "distinct prompt length)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="split prompts beyond the largest bucket into "
+                         "bucket-sized chunks instead of rejecting them")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve over a data x model device mesh "
+                         "(ShardedServeEngine)")
+    ap.add_argument("--slots-per-replica", type=int, default=None,
+                    help="cache slots per data-parallel replica "
+                         "(default: --slots)")
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -45,11 +69,28 @@ def main(argv=None):
     bundle = build_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
 
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                      quantize_weights=args.int8,
-                      temperature=args.temperature,
-                      buckets=tuple(int(b) for b in args.buckets.split(",")),
-                      batch_prefill=not args.legacy_prefill)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    if args.mesh:
+        if args.legacy_prefill:
+            raise SystemExit("--legacy-prefill is single-device only")
+        data, model = parse_mesh(args.mesh)
+        mesh = make_serve_mesh(data, model)
+        spr = args.slots_per_replica or args.slots
+        eng = ShardedServeEngine(cfg, params, mesh=mesh,
+                                 slots_per_replica=spr,
+                                 max_len=args.max_len,
+                                 quantize_weights=args.int8,
+                                 temperature=args.temperature,
+                                 buckets=buckets,
+                                 chunked_prefill=args.chunked_prefill)
+        mode = f"sharded {data}x{model} ({spr} slots/replica)"
+    else:
+        eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                          quantize_weights=args.int8,
+                          temperature=args.temperature, buckets=buckets,
+                          batch_prefill=not args.legacy_prefill,
+                          chunked_prefill=args.chunked_prefill)
+        mode = "legacy" if args.legacy_prefill else "bucketed"
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -61,9 +102,14 @@ def main(argv=None):
     total_new = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s) int8={args.int8} int8_kv={args.int8_kv} "
-          f"prefill={'legacy' if args.legacy_prefill else 'bucketed'}")
+          f"prefill={mode}")
     print("  buckets:", eng.buckets)
-    print("  stats:  ", dict(eng.stats))
+    print("  stats:  ", {k: v for k, v in eng.stats.items()
+                         if not k.startswith("replica_")})
+    for r, (adm, occ) in enumerate(zip(eng.stats["replica_admits"],
+                                       eng.stats["replica_occupancy"])):
+        print(f"  replica {r}: admits={adm} occupied={occ}/"
+              f"{eng.slots_per_replica}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.generated}")
 

@@ -63,6 +63,7 @@ class ModelBundle:
     cache_merge: Callable[..., Any] = None
     prefill_many: Callable[..., Any] = None
     cache_scatter: Callable[..., Any] = None
+    prefill_chunk: Callable[..., Any] = None
 
 
 def build_model(cfg: ArchConfig) -> ModelBundle:
@@ -111,10 +112,10 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
         tokens followed by padding up to the bucket length L.  ``caches``
         is a fresh B-row cache pool; every row is fully (re)written -
         pad entries are redirected onto the row's last real token (see
-        attention._clamp_padded / ssm_apply), so the resulting rows are
-        bit-identical to B independent unpadded prefills (MoE excepted:
-        pad rows consume router capacity, exact only while
-        capacity_factor absorbs them - DESIGN.md Sec. 4).  Returns
+        attention._clamp_padded / ssm_apply) and masked out of MoE
+        routing (moe.route token_mask, so they claim no expert-capacity
+        slot - DESIGN.md Sec. 4), making the resulting rows bit-identical
+        to B independent unpadded prefills.  Returns
         (logits (B, vocab) of each row's LAST REAL token, caches); land
         the rows into the serving pool with ``cache_scatter``.
 
@@ -133,6 +134,33 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
             caches=caches, frames=batch.get("frames"),
             patches=batch.get("patches"), seq_lens=tot)
         h_last = h[jnp.arange(B), jnp.maximum(tot - 1, 0)][:, None]
+        logits = lm_logits(params, cfg, h_last)[:, 0]
+        return logits, caches
+
+    def prefill_chunk(params, batch, caches, seq_lens, start_lens):
+        """Continue a chunked prefill: row b of ``caches`` already holds
+        ``start_lens[b]`` landed tokens; this call appends the next chunk
+        (``seq_lens[b]`` real tokens, right-padded to the chunk bucket) and
+        attends the whole cache buffer, so queries see both the landed
+        prefix and the chunk.  Returns (logits of each row's last real
+        token, caches) - the final chunk's logits seed decoding exactly as
+        ``prefill_many``'s do.  Text-only families: the vision patch
+        prepend and the encdec encoder pass assume a single whole-prompt
+        prefill.
+        """
+        if cfg.frontend == "vision" or cfg.family == "encdec":
+            raise NotImplementedError(
+                f"chunked prefill supports text-only families, not "
+                f"frontend={cfg.frontend!r} / family={cfg.family!r}")
+        tokens = batch["tokens"]
+        B, L = tokens.shape
+        start = start_lens.astype(jnp.int32)
+        pos = start[:, None] + jnp.arange(L, dtype=jnp.int32)[None]
+        sl = seq_lens.astype(jnp.int32)
+        h, caches, _ = lm_apply(
+            params, cfg, tokens=tokens, positions=pos, mode="prefill",
+            caches=caches, seq_lens=sl, chunked=True)
+        h_last = h[jnp.arange(B), jnp.maximum(sl - 1, 0)][:, None]
         logits = lm_logits(params, cfg, h_last)[:, 0]
         return logits, caches
 
@@ -222,4 +250,5 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
                        prefill=prefill, decode_step=decode_step,
                        init_caches=init_caches, input_specs=input_specs,
                        cache_slice=cache_slice, cache_merge=cache_merge,
-                       prefill_many=prefill_many, cache_scatter=cache_scatter)
+                       prefill_many=prefill_many, cache_scatter=cache_scatter,
+                       prefill_chunk=prefill_chunk)

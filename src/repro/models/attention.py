@@ -292,6 +292,13 @@ def _cache_kv_float(cache, dtype):
     return cache["k"], cache["v"]
 
 
+def _valid_k_pos(cache_pos: jax.Array) -> jax.Array:
+    """Cache slot positions with empty slots (-1) pushed beyond every real
+    query position, so the causal mask of ``chunked_attention`` (which has
+    no explicit validity mask) excludes them: rel = q_pos - 2^30 < 0."""
+    return jnp.where(cache_pos >= 0, cache_pos, jnp.int32(2 ** 30))
+
+
 def gqa_apply(
     p,
     dims: AttnDims,
@@ -302,6 +309,7 @@ def gqa_apply(
     cache: dict | None = None,
     causal: bool = True,
     seq_lens: jax.Array | None = None,   # (B,) valid prefix per right-padded row
+    chunked: bool = False,            # continuation chunk: attend the cache
 ):
     B, S, d = x.shape
     H, Hkv, Dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
@@ -320,6 +328,33 @@ def gqa_apply(
         return lin(o.reshape(B, S, H * Dh), p["wo"]), None
 
     assert cache is not None
+    if mode == "prefill" and chunked:
+        # chunked-prefill continuation: the cache row already holds earlier
+        # chunks.  Attend the PRE-write cache (the landed prefix) plus this
+        # chunk's own k/v, concatenated - causal over absolute positions,
+        # empty slots pushed out of causal range - and only then write the
+        # chunk.  The order matters for sliding-window layers, whose ring
+        # cache holds exactly the last W positions: writing first would
+        # evict keys still inside earlier in-chunk queries' windows.
+        # Appending the chunk after the cache slots inserts only
+        # exactly-zero (masked) terms into the softmax sums, so fp-cache
+        # numerics match an unpadded prefill; an int8 KV cache contributes
+        # its dequantized prefix (the same values decode would see) -
+        # approximate, documented.
+        assert seq_lens is not None
+        kf, vf = _cache_kv_float(cache, x.dtype)
+        k_all = jnp.concatenate([kf, k.astype(kf.dtype)], axis=1)
+        v_all = jnp.concatenate([vf, v.astype(vf.dtype)], axis=1)
+        pos_all = jnp.concatenate([_valid_k_pos(cache["pos"]), positions],
+                                  axis=1)
+        o = chunked_attention(q, k_all, v_all, positions, pos_all,
+                              causal=causal, window=dims.window,
+                              attn_softcap=dims.attn_softcap,
+                              q_chunk=S, kv_chunk=k_all.shape[1],
+                              parallel_q=True)
+        (kc, vc), pos_c = _clamp_padded((k, v), positions, seq_lens)
+        cache = _cache_write(cache, kc, vc, pos_c, dims.quant_kv)
+        return lin(o.reshape(B, S, H * Dh), p["wo"]), cache
     if mode == "prefill":
         if seq_lens is None:
             cache = _cache_write(cache, k, v, positions, dims.quant_kv)
@@ -438,10 +473,39 @@ def _mla_qkv(p, m: MLADims, x, positions):
 
 
 def mla_apply(p, m: MLADims, x, positions, *, mode: str, cache=None,
-              seq_lens=None):
+              seq_lens=None, chunked: bool = False):
     B, S, _ = x.shape
     H = m.n_heads
     q_nope, q_rope, ckv, krope = _mla_qkv(p, m, x, positions)
+
+    if mode == "prefill" and chunked:
+        # chunked-prefill continuation: land this chunk's compressed stream
+        # in the cache, then run the EXPANDED attention path against the
+        # whole buffer - wk_b/wv_b re-expand the stored ckv, which holds
+        # exactly the values an unchunked prefill computed, so the per-head
+        # k/v match the unchunked path (the absorbed decode formulation
+        # would associate the matmuls differently).
+        assert cache is not None and seq_lens is not None
+        (ckv_c, krope_c), pos_c = _clamp_padded((ckv, krope), positions,
+                                                seq_lens)
+        bidx = jnp.arange(B)[:, None]
+        cache = dict(cache)
+        cache["ckv"] = cache["ckv"].at[bidx, pos_c].set(
+            ckv_c.astype(cache["ckv"].dtype))
+        cache["krope"] = cache["krope"].at[bidx, pos_c].set(
+            krope_c.astype(cache["krope"].dtype))
+        cache["pos"] = cache["pos"].at[bidx, pos_c].set(pos_c)
+        cache["len"] = jnp.maximum(cache["len"], pos_c[:, -1] + 1)
+        Sb = cache["ckv"].shape[1]
+        k_nope = lin(cache["ckv"], p["wk_b"]).reshape(B, Sb, H, m.qk_nope)
+        v = lin(cache["ckv"], p["wv_b"]).reshape(B, Sb, H, m.v_head)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(cache["krope"][:, :, None],
+                                      (B, Sb, H, m.qk_rope))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        o = chunked_attention(q, k, v, positions, _valid_k_pos(cache["pos"]),
+                              causal=True, q_chunk=S, kv_chunk=Sb)
+        return lin(o.reshape(B, S, H * m.v_head), p["wo"]), cache
 
     if mode in ("train", "prefill"):
         # expanded path: materialize per-head k/v from the compressed stream

@@ -3,6 +3,13 @@
 Model functions are pure; distribution is communicated via this module-level
 context set by the launcher / train-step builder before tracing.  When no
 context is set (unit tests, CPU smoke runs) every layer runs its local path.
+
+Two independent contexts exist: ``DistContext`` (training/prefill MoE
+dispatch over an ambient mesh, set via ``set_context``/``use_context``)
+and the serving-TP context (``tp_shard``, re-exported from
+``kernels/ops``: column-splits PDQ/fp projections inside a shard_map
+body; see serve/sharded.py).  The sharded serve engine deliberately runs
+with ``DistContext`` unset so MoE stays replica-local.
 """
 from __future__ import annotations
 
@@ -12,6 +19,8 @@ from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from repro.kernels.ops import tp_ctx, tp_shard  # noqa: F401  (re-export)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):

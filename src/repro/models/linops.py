@@ -208,6 +208,21 @@ def lin(x: jax.Array, w) -> jax.Array:
     should use ``lin_grouped``).
     """
     if not is_quantized(w):
+        tp = ops.tp_ctx()
+        if (tp is not None and getattr(w, "ndim", 0) == 2
+                and w.shape[1] % tp[1] == 0):
+            # serving TP (inside a shard_map body): this shard's N-columns
+            # only, then a tiled all-gather.  Each column sums the same
+            # full-K products; XLA may tile the narrower fp matmul
+            # differently (reduction-order ulps - the int8 path in
+            # kernels/ops is the bit-exact one), which greedy parity
+            # absorbs (see kernels/ops.tp_shard).
+            ax, size = tp
+            n_loc = w.shape[1] // size
+            w_loc = jax.lax.dynamic_slice_in_dim(
+                w, jax.lax.axis_index(ax) * n_loc, n_loc, 1)
+            y = x @ w_loc
+            return jax.lax.all_gather(y, ax, axis=y.ndim - 1, tiled=True)
         return x @ w
     if is_segment_view(w):
         w = segment_record(w)

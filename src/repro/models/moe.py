@@ -61,15 +61,27 @@ def moe_init(key, d_model: int, cfg: MoEConfig, dtype):
     return p
 
 
-def route(x: jax.Array, wr: jax.Array, cfg: MoEConfig):
-    """x: (T, d) -> gates (T, k), ids (T, k), aux load-balance loss."""
+def route(x: jax.Array, wr: jax.Array, cfg: MoEConfig,
+          token_mask: jax.Array | None = None):
+    """x: (T, d) -> gates (T, k), ids (T, k), aux load-balance loss.
+
+    ``token_mask`` (T,) bool marks REAL tokens; masked (pad) tokens are
+    routed nowhere: their gates are zeroed and their expert ids set to the
+    out-of-range sentinel E, so they neither claim a capacity slot in
+    ``_bucket`` (E is dropped as out-of-bounds) nor match any local expert
+    in the dense-masked decode path.  This is the DESIGN.md Sec. 4 fix:
+    bucketed-prefill pad tokens must not consume router capacity.
+    """
+    E = wr.shape[1]
     logits = (x.astype(jnp.float32) @ wr)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, ids = jax.lax.top_k(probs, cfg.top_k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
     gates = gates * cfg.router_scale
+    if token_mask is not None:
+        gates = jnp.where(token_mask[:, None], gates, 0.0)
+        ids = jnp.where(token_mask[:, None], ids, E)
     # switch-style aux: E * sum_e f_e * p_e
-    E = wr.shape[1]
     density = jnp.mean(jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32), axis=0)
     mean_prob = jnp.mean(probs, axis=0)
     aux = E * jnp.sum(density * mean_prob)
@@ -104,6 +116,7 @@ def moe_ffn_tokens(
     cfg: MoEConfig,
     *,
     axis_name: str | None = None,   # expert-parallel mesh axis ('model')
+    token_mask: jax.Array | None = None,   # (T_local,) True = real token
 ) -> tuple[jax.Array, jax.Array]:
     """Expert-parallel MoE over already-flattened local tokens."""
     T, d = x.shape
@@ -111,7 +124,7 @@ def moe_ffn_tokens(
     nshards = 1 if axis_name is None else jax.lax.psum(1, axis_name)  # static int
     E_loc = E // nshards
 
-    gates, ids, aux = route(x, p["router"], cfg)
+    gates, ids, aux = route(x, p["router"], cfg, token_mask)
     flat_ids = ids.reshape(-1)                              # (T*k,)
     xk = jnp.repeat(x, k, axis=0)                           # (T*k, d)
     C = max(1, int(T * k * cfg.capacity_factor / E + 0.999))
@@ -139,13 +152,14 @@ def moe_ffn_dense_masked(
     cfg: MoEConfig,
     *,
     axis_name: str | None = None,
+    token_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode-path MoE: every shard computes its local experts over all
     tokens, masked by gates; psum over the expert axis combines."""
     E, k = cfg.n_experts, cfg.top_k
     nshards = 1 if axis_name is None else jax.lax.psum(1, axis_name)  # static int
     E_loc = E // nshards
-    gates, ids, aux = route(x, p["router"], cfg)
+    gates, ids, aux = route(x, p["router"], cfg, token_mask)
     shard = 0 if axis_name is None else jax.lax.axis_index(axis_name)
     e_offset = shard * E_loc
 

@@ -72,10 +72,18 @@ def _split_proj(cfg: SSMConfig, zxbcdt: jax.Array):
     return z, xBC, dt
 
 
-def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """Depthwise causal conv over (B, L, C); kernel w: (K, C)."""
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over (B, L, C); kernel w: (K, C).
+
+    ``prev`` (B, K-1, C) supplies the left context - the conv-cache tail of
+    the preceding chunk during chunked prefill (a fresh cache's zeros make
+    this identical to plain zero padding)."""
     K = w.shape[0]
-    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    if prev is None:
+        pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([prev.astype(xBC.dtype), xBC], axis=1)
     out = sum(pad[:, i: i + xBC.shape[1]] * w[i] for i in range(K))
     return jax.nn.silu(out + b)
 
@@ -183,7 +191,13 @@ def ssm_apply(p, cfg: SSMConfig, x: jax.Array, *, mode: str, cache=None,
         y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
         new_cache = {"conv": window[:, 1:], "state": state}
     else:
-        conv_out = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        # prefill: the conv left-context and the scan's initial state both
+        # come from the cache when one is threaded (zeros on a fresh row,
+        # i.e. identical to the uncached path; the landed tail/state of the
+        # previous chunk during chunked prefill - continuation is exact
+        # because the recurrence carries the full SSM state).
+        conv_out = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                prev=cache["conv"] if cache is not None else None)
         xc = conv_out[..., : cfg.d_inner].reshape(B, L, H, P)
         Bm = conv_out[..., cfg.d_inner: cfg.d_inner + N].astype(jnp.float32)
         Cm = conv_out[..., cfg.d_inner + N:].astype(jnp.float32)

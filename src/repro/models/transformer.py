@@ -89,38 +89,54 @@ def layer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype,
     return c
 
 
-def _apply_ffn(p_ffn, cfg: ArchConfig, kind: str, h: jax.Array, mode: str):
-    """Returns (y, aux)."""
+def _apply_ffn(p_ffn, cfg: ArchConfig, kind: str, h: jax.Array, mode: str,
+               seq_lens=None):
+    """Returns (y, aux).  ``seq_lens`` (B,) marks the valid prefix of
+    right-padded bucketed-prefill rows: pad tokens are masked out of MoE
+    routing so they cannot claim expert capacity (DESIGN.md Sec. 4)."""
     if not _is_moe(cfg, kind):
         return mlp_apply(p_ffn, h), jnp.float32(0.0)
     B, S, d = h.shape
     x2 = h.reshape(B * S, d)
+    mask = None
+    if seq_lens is not None:
+        mask = (jax.lax.broadcasted_iota(jnp.int32, (B, S), 1)
+                < seq_lens[:, None]).reshape(B * S)
     ctx = context.get_context()
     routed = {k: p_ffn[k] for k in ("router", "we_gate", "we_up", "we_down")}
     use_ep = ctx is not None and mode in ("train", "prefill")
     if ctx is None:
         fn = moe_ffn_tokens if mode in ("train", "prefill") else moe_ffn_dense_masked
-        y, aux = fn(routed, x2, cfg.moe, axis_name=None)
+        y, aux = fn(routed, x2, cfg.moe, axis_name=None, token_mask=mask)
     elif use_ep:
-        def f(rp, xt):
-            yy, ax = moe_ffn_tokens(rp, xt, cfg.moe, axis_name=ctx.expert_axis)
+        def f(rp, xt, mt):
+            yy, ax = moe_ffn_tokens(rp, xt, cfg.moe, axis_name=ctx.expert_axis,
+                                    token_mask=mt)
             return yy, jax.lax.pmean(ax, ctx.token_axes)
+        if mask is None:
+            mask = jnp.ones((B * S,), bool)
         y, aux = context.shard_map(
             f, mesh=ctx.mesh,
-            in_specs=(context.moe_param_specs(routed), P(ctx.token_axes, None)),
+            in_specs=(context.moe_param_specs(routed), P(ctx.token_axes, None),
+                      P(ctx.token_axes)),
             out_specs=(P(ctx.token_axes, None), P()),
             check_vma=False,
-        )(routed, x2)
+        )(routed, x2, mask)
     else:
-        def f(rp, xt):
-            yy, ax = moe_ffn_dense_masked(rp, xt, cfg.moe, axis_name=ctx.expert_axis)
+        def f(rp, xt, mt):
+            yy, ax = moe_ffn_dense_masked(rp, xt, cfg.moe,
+                                          axis_name=ctx.expert_axis,
+                                          token_mask=mt)
             return yy, jax.lax.pmean(ax, ctx.data_axes)
+        if mask is None:
+            mask = jnp.ones((B * S,), bool)
         y, aux = context.shard_map(
             f, mesh=ctx.mesh,
-            in_specs=(context.moe_param_specs(routed), P(ctx.data_axes, None)),
+            in_specs=(context.moe_param_specs(routed), P(ctx.data_axes, None),
+                      P(ctx.data_axes)),
             out_specs=(P(ctx.data_axes, None), P()),
             check_vma=False,
-        )(routed, x2)
+        )(routed, x2, mask)
     y = checkpoint_name(y, "moe_out")
     y = y.reshape(B, S, d)
     if cfg.moe.n_shared:
@@ -131,9 +147,12 @@ def _apply_ffn(p_ffn, cfg: ArchConfig, kind: str, h: jax.Array, mode: str):
 
 
 def layer_apply(p, cfg: ArchConfig, kind: str, h, positions, *, mode: str,
-                cache=None, memory=None, causal: bool = True, seq_lens=None):
+                cache=None, memory=None, causal: bool = True, seq_lens=None,
+                chunked: bool = False):
     """Returns (h, new_cache, aux).  ``seq_lens`` (B,) marks the valid
-    prefix of right-padded bucketed-prefill rows (None = no padding)."""
+    prefix of right-padded bucketed-prefill rows (None = no padding);
+    ``chunked`` marks a chunked-prefill continuation (the cache rows
+    already hold earlier chunks, which attention must see)."""
     eps = cfg.norm_eps
     if kind == "mamba":
         y, new_cache = ssm_apply(p["ssm"], cfg.ssm, rms_norm(h, p["norm"], eps),
@@ -143,11 +162,12 @@ def layer_apply(p, cfg: ArchConfig, kind: str, h, positions, *, mode: str,
     xin = rms_norm(h, p["attn_norm"], eps)
     if cfg.mla is not None and kind in ("global", "global_dense"):
         a, new_cache = mla_apply(p["attn"], _mla_dims(cfg), xin, positions,
-                                 mode=mode, cache=cache, seq_lens=seq_lens)
+                                 mode=mode, cache=cache, seq_lens=seq_lens,
+                                 chunked=chunked)
     else:
         a, new_cache = gqa_apply(p["attn"], _attn_dims(cfg, kind), xin, positions,
                                  mode=mode, cache=cache, causal=causal,
-                                 seq_lens=seq_lens)
+                                 seq_lens=seq_lens, chunked=chunked)
     a = checkpoint_name(a, "attn_out")
     h = h + a
 
@@ -167,7 +187,8 @@ def layer_apply(p, cfg: ArchConfig, kind: str, h, positions, *, mode: str,
         c = cross_apply(p["cross"], dims, rms_norm(h, p["cross_norm"], eps), mem_kv)
         h = h + c
 
-    f, aux = _apply_ffn(p["ffn"], cfg, kind, rms_norm(h, p["ffn_norm"], eps), mode)
+    f, aux = _apply_ffn(p["ffn"], cfg, kind, rms_norm(h, p["ffn_norm"], eps),
+                        mode, seq_lens=seq_lens if mode == "prefill" else None)
     return h + f, new_cache, aux
 
 
@@ -252,7 +273,8 @@ def _encoder_apply(params, cfg: ArchConfig, frames: jax.Array):
 
 
 def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
-             caches=None, frames=None, patches=None, seq_lens=None):
+             caches=None, frames=None, patches=None, seq_lens=None,
+             chunked: bool = False):
     """Returns (h_final, new_caches, aux_sum).
 
     tokens: (B, S) int32 (text); patches: (B, Pimg, d) stub embeddings
@@ -260,6 +282,9 @@ def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
     (encdec family); seq_lens: (B,) valid-prefix lengths (in full-sequence
     index space, patches included) when rows are right-padded to a bucket
     length - pad entries then never reach any cache or recurrent state.
+    ``chunked`` marks a chunked-prefill continuation: ``positions`` are
+    then absolute (offset by the tokens already landed in ``caches``) and
+    attention runs against the cache buffer (see serve/engine.py).
     """
     dtype = _dtype(cfg)
     from .layers import embed_apply
@@ -282,7 +307,7 @@ def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
         c = caches["head"][i] if caches else None
         h, nc, aux = layer_apply(params["head"][i], cfg, kind, h, positions,
                                  mode=mode, cache=c, memory=memory,
-                                 seq_lens=seq_lens)
+                                 seq_lens=seq_lens, chunked=chunked)
         new_caches["head"].append(nc)
         aux_total += aux
 
@@ -297,7 +322,8 @@ def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
             cj = block_c[j] if block_c is not None else None
             hh, ncj, aux = layer_apply(pj, cfg, kind if kind != "shared" else "global",
                                        hh, positions, mode=mode, cache=cj,
-                                       memory=memory, seq_lens=seq_lens)
+                                       memory=memory, seq_lens=seq_lens,
+                                       chunked=chunked)
             ncs.append(ncj if ncj is not None else ())
             aux_acc = aux_acc + aux
         return (hh, aux_acc), tuple(ncs)
@@ -318,7 +344,7 @@ def lm_apply(params, cfg: ArchConfig, *, tokens=None, positions, mode: str,
         c = caches["tail"][i] if caches else None
         h, nc, aux = layer_apply(params["tail"][i], cfg, kind, h, positions,
                                  mode=mode, cache=c, memory=memory,
-                                 seq_lens=seq_lens)
+                                 seq_lens=seq_lens, chunked=chunked)
         new_caches["tail"].append(nc)
         aux_total += aux
 

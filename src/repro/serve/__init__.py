@@ -1,2 +1,3 @@
 from . import engine
 from .engine import DEFAULT_BUCKETS, Request, ServeEngine
+from .sharded import ShardedServeEngine

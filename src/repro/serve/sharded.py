@@ -1,0 +1,129 @@
+"""Mesh-distributed serving: data+tensor-parallel ``ShardedServeEngine``.
+
+The engine extends the single-device ``ServeEngine`` scheduler core to a
+jax device mesh with axes ``('data', 'model')``:
+
+  * **data axis - replicas.**  The pooled KV/conv/SSM cache's slot axis is
+    sharded over 'data' (``distributed/sharding.serve_pool_specs``): each
+    of the ``data`` replicas owns a contiguous block of
+    ``slots_per_replica`` cache rows.  ``prefill_many``, ``prefill_chunk``,
+    ``cache_scatter`` and the decode step run as ONE shard_map-ed SPMD
+    program spanning every replica - inside the body each replica executes
+    the single-device program on its own slot block, so replica numerics
+    match the single-device engine computing that block.  One qualifier:
+    MoE expert capacity is sized from the LOCAL token count (spr rows, not
+    the pool), so under a capacity_factor tight enough to drop tokens the
+    drops can differ from a pool-wide batch - the same caveat class as
+    batch-size-dependent capacity on one device (DESIGN.md Sec. 4);
+    parity is exact while capacity absorbs the routing, which the default
+    factors guarantee.
+  * **model axis - tensor parallelism.**  Inside the shard_map body,
+    ``kernels/ops.tp_shard`` column-splits every PDQ / fp projection over
+    'model': the PDQ prologue's per-row scales (and surrogate moments) are
+    computed locally on each shard (they are O(K) per row and every shard
+    needs them), each shard runs the grouped W8A8 matmul over its N-column
+    block with its slice of the per-(row, N-block) interval epilogue, and
+    a tiled all-gather reassembles the columns.  Every output column is
+    the identical full-K int8 accumulation + epilogue the single-device
+    kernel runs, so quantized numerics stay bit-exact.
+  * **coordinator.**  Admission stays a host-side singleton (the scheduler
+    core): one pending queue, bucket-grouped FIFO admits, and per-bucket
+    routing of admits to the least-loaded replicas (``_assign``).  One
+    admission round = one SPMD prefill launch that lands every replica's
+    admits at once; replicas with fewer admits carry dummy rows the
+    scatter drops.  ``src_map`` is replica-local by the scheduler-core
+    convention, so the per-replica scatter blocks resolve correctly.
+
+CPU CI exercises the whole engine on a virtual mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
+tests/test_serve_sharded.py).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import serve_pool_specs
+from repro.kernels import ops
+from repro.models.context import shard_map
+
+from .engine import DEFAULT_BUCKETS, ServeEngine
+
+
+class ShardedServeEngine(ServeEngine):
+    """ServeEngine over a ('data', 'model') mesh.
+
+    ``slots_per_replica`` rows per data-parallel replica (total pool =
+    ``data * slots_per_replica`` slots); params are replicated over the
+    mesh and tensor-parallel execution splits projection columns over
+    'model' at trace time, so one weight buffer layout serves any mesh
+    shape.
+    """
+
+    def __init__(self, cfg, params, *, mesh, slots_per_replica: int = 4,
+                 max_len: int = 256, quantize_weights: bool = False,
+                 temperature: float = 0.0, rng: jax.Array | None = None,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 chunked_prefill: bool = False):
+        assert {"data", "model"} <= set(mesh.axis_names), mesh.axis_names
+        self.mesh = mesh
+        self.data_size = int(mesh.shape["data"])
+        self.model_size = int(mesh.shape["model"])
+        super().__init__(cfg, params, slots=self.data_size * slots_per_replica,
+                         max_len=max_len, quantize_weights=quantize_weights,
+                         temperature=temperature, rng=rng, buckets=buckets,
+                         batch_prefill=True, chunked_prefill=chunked_prefill,
+                         n_replicas=self.data_size)
+
+    # ------------------------------------------------------- device programs
+    def _sharded(self, fn, in_specs, out_specs):
+        """shard_map(fn) over the mesh with TP active inside the body."""
+        T = self.model_size
+
+        def body(*args):
+            with ops.tp_shard("model", T):
+                return fn(*args)
+
+        return shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    def _traced_sharded_jit(self, fn, counter: str, in_specs, out_specs,
+                            donate: tuple[int, ...] = ()):
+        stats = self.stats
+        mapped = self._sharded(fn, in_specs, out_specs)
+
+        def wrapped(*args):
+            if counter:
+                stats[counter] += 1      # trace-time side effect
+            return mapped(*args)
+
+        return jax.jit(wrapped, donate_argnums=donate)
+
+    def _build_jitted(self):
+        cs = serve_pool_specs(self.caches)
+        dp = P("data")                       # slot/batch axis over replicas
+        self._decode = self._traced_sharded_jit(
+            self.bundle.decode_step, "decode_compiles",
+            in_specs=(P(), cs, dp, dp), out_specs=(dp, cs))
+        self._prefill_many = self._traced_sharded_jit(
+            self.bundle.prefill_many, "prefill_compiles",
+            in_specs=(P(), dp, cs, dp), out_specs=(dp, cs))
+        self._prefill_chunk = self._traced_sharded_jit(
+            self.bundle.prefill_chunk, "chunk_compiles",
+            in_specs=(P(), dp, cs, dp, dp), out_specs=(dp, cs))
+        self._scatter = self._traced_sharded_jit(
+            self.bundle.cache_scatter, None,
+            in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
+        # the legacy per-request path is single-replica only (asserted in
+        # the scheduler core); no _prefill_one on the mesh.
+        self._prefill_one = None
+
+        # place the long-lived buffers once: params replicated over the
+        # whole mesh, cache pools with their slot axis over 'data' (later
+        # launches then never re-transfer them from the host)
+        repl = NamedSharding(self.mesh, P())
+        self.params = jax.device_put(self.params, repl)
+        pool_sh = jax.tree.map(lambda s: NamedSharding(self.mesh, s), cs,
+                               is_leaf=lambda x: isinstance(x, P))
+        self.caches = jax.device_put(self.caches, pool_sh)
+        self._prefill_pool = jax.device_put(self._prefill_pool, pool_sh)

@@ -294,6 +294,130 @@ def test_int8_kv_bucketed_decode_stays_masked(small_model):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "mamba2-2.7b",
+                                  "deepseek-v2-236b", "gemma2-2b"])
+def test_chunked_prefill_matches_unchunked(arch):
+    """Prompts beyond the largest bucket split into bucket-sized chunks
+    (first chunk via prefill_many, continuations via prefill_chunk against
+    the accumulating cache rows) with greedy outputs identical to an
+    engine whose bucket set admits the whole prompt at once - across the
+    GQA KV cache, the SSM conv tail + recurrent state, the MLA compressed
+    cache, and gemma2's sliding-window RING cache (regression: a
+    continuation chunk must attend the pre-write ring + its own k/v -
+    writing first evicts keys still inside earlier queries' windows)."""
+    cfg = reduced_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    lens = [3, 20, 40, 12, 33]            # 20/40/33 exceed the 16 bucket
+    whole = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16))
+    assert whole.buckets[-1] == 63        # capacity bucket admits unchunked
+    reqs = _requests(cfg, lens, max_new=5)
+    whole.run(reqs)
+    want = [tuple(r.generated) for r in reqs]
+
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16),
+                      chunked_prefill=True)
+    assert eng.buckets == (8, 16)         # no capacity-sized executable
+    reqs = _requests(cfg, lens, max_new=5)
+    eng.run(reqs)
+    got = [tuple(r.generated) for r in reqs]
+    assert got == want
+    assert eng.stats["chunked_requests"] == 3
+    assert eng.stats["chunk_batches"] >= 3
+    # the compile bound that motivates chunking: every executable is
+    # bucket-shaped (<= len(buckets) for each of the two prefill kinds)
+    assert eng.stats["prefill_compiles"] <= len(eng.buckets)
+    assert eng.stats["chunk_compiles"] <= len(eng.buckets)
+
+
+def test_chunked_prefill_rejects_beyond_capacity(small_model):
+    """Chunking lifts the bucket limit, not the cache capacity: a prompt
+    that cannot fit max_len (with the first decode slot reserved) still
+    raises up front without dequeuing peers."""
+    cfg, m, params = small_model
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, buckets=(8,),
+                      chunked_prefill=True)
+    ok = _requests(cfg, [20])[0]          # > bucket 8, <= capacity 31
+    bad = _requests(cfg, [32])[0]         # would fill the cache exactly
+    with pytest.raises(ValueError, match="exceeds the cache capacity"):
+        eng.run([ok, bad])
+    assert not eng.pending
+    eng.run([ok])
+    assert ok.done
+
+
+# ---------------------------------------------------------------------------
+# MoE router capacity: pad tokens masked out (DESIGN.md Sec. 4 fix)
+# ---------------------------------------------------------------------------
+
+
+def test_moe_pad_content_cannot_change_real_expert_assignment():
+    """With capacity tight, UNMASKED pad tokens ahead of a row's real
+    tokens steal expert-capacity slots (content-dependently); the
+    token_mask must make real-token outputs invariant to pad content."""
+    from repro.models.moe import MoEConfig, moe_ffn_tokens, moe_init
+
+    cfg = dataclasses.replace(
+        MoEConfig(n_experts=4, top_k=1, d_ff_expert=8), capacity_factor=1.0)
+    p = moe_init(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
+    routed = {k: p[k] for k in ("router", "we_gate", "we_up", "we_down")}
+    rng = np.random.default_rng(0)
+    real = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    pads = [jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+            for _ in range(2)]
+    # pads FIRST: in a flattened (B, S) prefill batch, row b's pads precede
+    # row b+1's real tokens, so they can claim capacity slots first.
+    mask = jnp.asarray([False] * 8 + [True] * 8)
+
+    def run(pad, token_mask):
+        x = jnp.concatenate([pad, real], axis=0)
+        y, _ = moe_ffn_tokens(routed, x, cfg, token_mask=token_mask)
+        return np.asarray(y[8:])
+
+    unmasked = [run(p_, None) for p_ in pads]
+    assert not np.array_equal(unmasked[0], unmasked[1]), (
+        "expected tight capacity to make real tokens pad-content-dependent "
+        "without the mask (the regression this test pins)")
+    masked = [run(p_, mask) for p_ in pads]
+    np.testing.assert_array_equal(masked[0], masked[1])
+
+
+def test_moe_bucketed_prefill_pad_invariant_under_tight_capacity():
+    """Bundle-level regression on a MoE arch with TIGHT expert capacity:
+    junk written into the pad tail of a bucketed prefill must not change
+    any real row's logits or caches.  Before the router mask, pad tokens
+    claimed capacity slots content-dependently, so this exact comparison
+    diverged; generous capacity_factor was the only thing hiding it (the
+    old DESIGN.md Sec. 4 caveat)."""
+    cfg = reduced_config("deepseek-v2-236b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    lens = [4, 7]
+    B, L = 2, 16
+    prompts = [rng.integers(0, cfg.vocab, s).astype(np.int32) for s in lens]
+    outs = []
+    for fill in (0, 1):
+        toks = (np.zeros((B, L), np.int32) if fill == 0
+                else rng.integers(0, cfg.vocab, (B, L)).astype(np.int32))
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+        lg, caches = m.prefill_many(
+            params, {"tokens": jnp.asarray(toks)}, m.init_caches(B, 32, 0),
+            jnp.asarray(lens, jnp.int32))
+        outs.append((lg, caches))
+    np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(outs[1][0]))
+    for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
 # scheduler behaviour
 # ---------------------------------------------------------------------------
 

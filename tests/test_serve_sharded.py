@@ -1,0 +1,222 @@
+"""ShardedServeEngine: mesh-distributed serving tests.
+
+Pins the PR-4 contract: a ('data', 'model') mesh engine produces
+token-for-token greedy parity with the single-device engine (slots
+data-parallel, PDQ/fp projection columns tensor-parallel with an
+all-gather epilogue), the sharded decode step stays on the grouped
+8-kernel path per replica, and the coordinator routes admits to the
+least-loaded replicas.
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main test
+process keeps its single-device view (same pattern as
+tests/test_distributed.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import serve_pool_specs
+
+
+def _run_subprocess(code: str, devices: int = 8):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ------------------------------------------------------------- spec helper
+def test_serve_pool_specs_slot_axis_layout():
+    """Slot axis shards over 'data': axis 0 on head/tail leaves, axis 1 on
+    lax.scan-stacked block leaves; nothing else is sharded."""
+    caches = {
+        "head": ({"k": jnp.zeros((8, 32, 2, 16)), "len": jnp.zeros((8,))},),
+        "tail": (),
+        "blocks": ({"k": jnp.zeros((6, 8, 32, 2, 16)),
+                    "state": jnp.zeros((6, 8, 4, 16, 8))},),
+    }
+    specs = serve_pool_specs(caches)
+    assert specs["head"][0]["k"] == P("data", None, None, None)
+    assert specs["head"][0]["len"] == P("data")
+    assert specs["blocks"][0]["k"] == P(None, "data", None, None, None)
+    assert specs["blocks"][0]["state"] == P(None, "data", None, None, None)
+
+
+# ----------------------------------------------------- mesh parity (greedy)
+def _parity_case(body: str) -> str:
+    """Prelude + test body, each dedented on its own (their indents differ)."""
+    return textwrap.dedent(_PARITY_PRELUDE) + textwrap.dedent(body)
+
+
+_PARITY_PRELUDE = """
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine, ShardedServeEngine
+
+    def requests(cfg, lens, max_new=4, seed=0):
+        rng = np.random.default_rng(seed)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                        max_new=max_new) for i, L in enumerate(lens)]
+
+    def outputs(eng, cfg, lens, max_new=4):
+        reqs = requests(cfg, lens, max_new)
+        eng.run(reqs)
+        assert all(r.done for r in reqs)
+        return [tuple(r.generated) for r in reqs]
+"""
+
+
+def test_sharded_matches_single_device_mixed_trace():
+    """Acceptance pin: a data=4 x model=2 mesh engine (2 slots/replica)
+    serves the 12-request mixed-length trace token-for-token identically
+    to the single-device engine, admission routes to the least-loaded
+    replicas, and the compile counts stay bucket-bounded."""
+    out = _run_subprocess(_parity_case("""
+        MIXED = [3, 5, 8, 9, 12, 16, 17, 23, 30, 4, 11, 27]
+        cfg = reduced_config("stablelm-1.6b")
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        ref = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32))
+        want = outputs(ref, cfg, MIXED, max_new=6)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        eng = ShardedServeEngine(cfg, params, mesh=mesh, slots_per_replica=2,
+                                 max_len=64, buckets=(8, 16, 32))
+        got = outputs(eng, cfg, MIXED, max_new=6)
+        assert got == want, [i for i, (a, b) in enumerate(zip(got, want))
+                             if a != b]
+        # coordinator accounting: every admit counted on some replica, and
+        # the least-loaded routing spreads the trace across all replicas
+        assert sum(eng.stats["replica_admits"]) == len(MIXED)
+        assert min(eng.stats["replica_admits"]) >= 1
+        assert eng.stats["replica_occupancy"] == [0, 0, 0, 0]   # drained
+        assert eng.stats["prefill_compiles"] <= len(eng.buckets)
+        assert eng.stats["decode_compiles"] == 1
+        print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_sharded_parity_other_families():
+    """SSM recurrent state and the MLA compressed cache survive the mesh:
+    greedy decode equality on a 2x2 mesh for mamba2 and deepseek."""
+    out = _run_subprocess(_parity_case("""
+        for arch in ("mamba2-2.7b", "deepseek-v2-236b"):
+            cfg = reduced_config(arch)
+            params = build_model(cfg).init(jax.random.PRNGKey(0))
+            lens = [3, 7, 11, 16, 5, 9]
+            ref = ServeEngine(cfg, params, slots=2, max_len=48, buckets=(8, 16))
+            want = outputs(ref, cfg, lens)
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            eng = ShardedServeEngine(cfg, params, mesh=mesh,
+                                     slots_per_replica=2, max_len=48,
+                                     buckets=(8, 16))
+            got = outputs(eng, cfg, lens)
+            assert got == want, (arch, got, want)
+            print("OK", arch)
+        print("OK")
+    """))
+    assert "OK mamba2-2.7b" in out and "OK deepseek-v2-236b" in out
+
+
+def test_sharded_quantized_and_chunked_parity():
+    """The PDQ-int8 weight path (column-split W8A8 + all-gather epilogue)
+    and chunked prefill both stay token-for-token exact on the mesh."""
+    out = _run_subprocess(_parity_case("""
+        cfg = reduced_config("stablelm-1.6b")
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+
+        lens = [3, 9, 14, 6, 12, 30]
+        ref = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16, 32),
+                          quantize_weights=True)
+        want = outputs(ref, cfg, lens)
+        eng = ShardedServeEngine(cfg, params, mesh=mesh, slots_per_replica=2,
+                                 max_len=64, buckets=(8, 16, 32),
+                                 quantize_weights=True)
+        got = outputs(eng, cfg, lens)
+        assert got == want, (got, want)
+        print("OK int8")
+
+        lens = [4, 20, 40, 11]          # 20/40 exceed the largest bucket
+        ref = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16),
+                          chunked_prefill=True)
+        want = outputs(ref, cfg, lens)
+        eng = ShardedServeEngine(cfg, params, mesh=mesh, slots_per_replica=2,
+                                 max_len=64, buckets=(8, 16),
+                                 chunked_prefill=True)
+        got = outputs(eng, cfg, lens)
+        assert got == want, (got, want)
+        assert eng.stats["chunked_requests"] == 2
+        print("OK chunked")
+    """))
+    assert "OK int8" in out and "OK chunked" in out
+
+
+# --------------------------------------------------------- kernel-count pin
+def test_sharded_decode_block_is_eight_kernels_per_replica():
+    """A quantized GQA block inside the shard_map body (TP over 'model')
+    must still trace to the grouped 8 pallas_calls per replica: the
+    column-split rides INSIDE the one-prologue-one-matmul pipeline (slice
+    + all-gather add no kernel launches)."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels import ops
+        from repro.models.attention import AttnDims, gqa_apply, gqa_init, init_cache
+        from repro.models.context import shard_map
+        from repro.models.layers import mlp_apply, mlp_init, rms_norm
+        from repro.models.linops import quantize_param_tree
+        from tests.test_hlo_and_linops import _count_pallas_calls
+
+        dims = AttnDims(d_model=256, n_heads=4, n_kv_heads=2, head_dim=64)
+        key = jax.random.PRNGKey(0)
+        params = {"attn": gqa_init(key, dims, jnp.float32),
+                  "attn_norm": jnp.zeros((256,)),
+                  "ffn_norm": jnp.zeros((256,)),
+                  "ffn": mlp_init(jax.random.fold_in(key, 1), 256, 512,
+                                  jnp.float32)}
+        qp = quantize_param_tree(params)
+        cache = init_cache(dims, 8, 64, jnp.float32)
+
+        def block(p, h, cache, positions):
+            a, cache = gqa_apply(p["attn"], dims,
+                                 rms_norm(h, p["attn_norm"]), positions,
+                                 mode="decode", cache=cache)
+            h = h + a
+            return h + mlp_apply(p["ffn"], rms_norm(h, p["ffn_norm"])), cache
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cs = jax.tree.map(lambda c: P(*(("data",) + (None,) * (c.ndim - 1))),
+                          cache)
+
+        def sharded(p, h, cache, positions):
+            def body(p, h, cache, positions):
+                with ops.tp_shard("model", 2):
+                    return block(p, h, cache, positions)
+            return shard_map(body, mesh=mesh,
+                             in_specs=(P(), P("data"), cs, P("data")),
+                             out_specs=(P("data"), cs))(p, h, cache, positions)
+
+        h = jnp.ones((8, 1, 256))
+        pos = jnp.zeros((8, 1), jnp.int32) + 3
+        ops.set_impl("kernel")
+        try:
+            jaxpr = jax.make_jaxpr(sharded)(qp, h, cache, pos)
+        finally:
+            ops.set_impl("auto")
+        n = _count_pallas_calls(jaxpr)
+        assert n == 8, f"expected 8 pallas_calls per sharded decode block, got {n}"
+        print("OK", n)
+    """)
+    assert "OK 8" in out
