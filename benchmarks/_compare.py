@@ -21,16 +21,37 @@ import math
 def compare(current: dict, baseline_path: str, keys: tuple[str, ...],
             threshold: float = 0.25) -> int:
     """Return 0 if the matched-cell geomean speedup is within threshold of
-    the baseline's, else 1."""
-    with open(baseline_path) as f:
-        baseline = json.load(f)
+    the baseline's, else 1.
+
+    A baseline that cannot be read as the expected shape (corrupt JSON,
+    missing 'cells'/'speedup' fields) FAILS the gate with a message rather
+    than crashing: a silently unparseable committed baseline would
+    otherwise disable the regression check it exists for.
+    """
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+        base_by_key = {tuple(c[k] for k in keys): c
+                       for c in baseline["cells"]}
+        for c in baseline["cells"]:
+            # the gate takes log(speedup) on the raw value: anything
+            # non-numeric (JSON strings) or <= 0 must fail HERE, with the
+            # message, not crash at the math below
+            if (isinstance(c["speedup"], bool)
+                    or not isinstance(c["speedup"], (int, float))
+                    or not c["speedup"] > 0):
+                raise ValueError(f"cell speedup {c['speedup']!r} is not a "
+                                 "positive number")
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"compare: FAIL - baseline {baseline_path} is unreadable or "
+              f"malformed ({type(e).__name__}: {e}); regenerate and commit it")
+        return 1
     cur_backend = current.get("meta", {}).get("backend")
     base_backend = baseline.get("meta", {}).get("backend")
     if cur_backend != base_backend:
         print(f"compare: SKIP - backend mismatch (current={cur_backend}, "
               f"baseline={base_backend})")
         return 0
-    base_by_key = {tuple(c[k] for k in keys): c for c in baseline["cells"]}
     log_cur, log_base = 0.0, 0.0
     matched = 0
     for cell in current["cells"]:

@@ -25,6 +25,19 @@ the measurement isolates the data-parallel scaling, not compile time.
 ``speedup`` is the tok/s ratio data=D over data=1.  On CPU the required
 virtual devices are forced automatically (env set before jax imports).
 
+Multi-process mode (``--mesh DxM --multiproc N``,
+BENCH_serve_multihost.json): the SAME logical mesh served by the
+single-process ShardedServeEngine (measured inline) vs the
+``jax.distributed`` MultiHostServeEngine over N spawned processes.  The
+GATED ``speedup`` is the per-round ingest-capacity ratio multihost /
+single-process: the coordinator protocol must reproduce the
+single-process schedule exactly (same admits per round), so the
+deterministic expectation is 1.0 and any routing/protocol regression
+(idle replicas, extra rounds) fails the gate.  Wall-clock tok/s for both
+engines is recorded informationally - on a 2-core CI host all processes
+share the cores, so the wall ratio measures coordination overhead plus
+core contention, not replica concurrency.
+
 Writes the JSON next to this file; ``--quick`` runs the CI smoke cells
 only and ``--compare <baseline.json>`` fails on a >25% geomean speedup
 regression (see _compare.py).
@@ -57,7 +70,10 @@ OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                    "BENCH_serve.json")
 OUT_SHARDED = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "BENCH_serve_sharded.json")
+OUT_MULTIHOST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_serve_multihost.json")
 ARCH = "stablelm-1.6b"
+MULTIPROC_TIMEOUT = 1200       # hard cap on the spawned process pair (s)
 
 
 def _workload(cfg, requests: int, max_prompt: int, seed: int = 0):
@@ -117,32 +133,21 @@ def bench_mesh_cell(cfg, params, *, data_hi: int, model: int, spr: int,
     and ~2.5x run-to-run), not replica concurrency.  On hardware with >=
     ``data`` cores/chips the wall ratio tracks the capacity ratio.
     """
-    buckets = (max_prompt,)
-    lo = max_prompt // 2
     out = {"requests": requests, "spr": spr, "max_prompt": max_prompt,
            "model": model, "data_hi": data_hi}
     per_round = {}
     for data in (1, data_hi):
-        mesh = make_serve_mesh(data, model)
-        eng = ShardedServeEngine(cfg, params, mesh=mesh,
+        eng = ShardedServeEngine(cfg, params,
+                                 mesh=make_serve_mesh(data, model),
                                  slots_per_replica=spr,
-                                 max_len=max_prompt + 32, buckets=buckets)
-        warm, _ = _mesh_workload(cfg, data * spr, lo, max_prompt, seed=7)
-        eng.run(warm)                              # compile + warm the pools
-        base_batches = eng.stats["prefill_batches"]
-        base_tokens = eng.stats["prefill_tokens"]
-        reqs, prompt_tokens = _mesh_workload(cfg, requests, lo, max_prompt)
-        t0 = time.perf_counter()
-        eng.run(reqs)
-        jax.block_until_ready(eng.caches)
-        dt = time.perf_counter() - t0
-        assert all(r.done for r in reqs)
-        rounds = eng.stats["prefill_batches"] - base_batches
-        tokens = eng.stats["prefill_tokens"] - base_tokens
+                                 max_len=max_prompt + 32,
+                                 buckets=(max_prompt,))
+        cell = _ingest_cell(eng, cfg, lo=max_prompt // 2, hi=max_prompt,
+                            requests=requests)
         tag = f"d{data}"
-        out[f"{tag}_tok_s"] = prompt_tokens / dt
-        out[f"{tag}_rounds"] = rounds
-        per_round[data] = tokens / rounds
+        out[f"{tag}_tok_s"] = cell["tok_s"]
+        out[f"{tag}_rounds"] = cell["rounds"]
+        per_round[data] = cell["tokens_per_round"]
         out[f"{tag}_tokens_per_round"] = per_round[data]
     out["speedup"] = per_round[data_hi] / per_round[1]
     return out
@@ -171,6 +176,136 @@ def run_mesh_sweep(args, cfg, params) -> dict:
             "keys": ("requests", "spr", "max_prompt", "model", "data_hi")}
 
 
+def _multiproc_cells(quick: bool):
+    """(spr, max_prompt, requests); the quick cell rides in the full sweep
+    so CI smoke runs intersect the committed baseline."""
+    quick_spec = [(4, 64, 24)]
+    return quick_spec if quick else list(dict.fromkeys(
+        quick_spec + [(2, 64, 24), (4, 32, 24)]))
+
+
+def _ingest_cell(eng, cfg, *, lo: int, hi: int, requests: int) -> dict:
+    """Steady-state ingest through an already-built engine: warm run to
+    compile, then one measured run; reports tokens landed per admission
+    round (the deterministic scheduler quantity) and wall tok/s."""
+    n_slots = eng.slots
+    warm, _ = _mesh_workload(cfg, n_slots, lo, hi, seed=7)
+    eng.run(warm)
+    base_batches = eng.stats["prefill_batches"]
+    base_tokens = eng.stats["prefill_tokens"]
+    reqs, prompt_tokens = _mesh_workload(cfg, requests, lo, hi)
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    jax.block_until_ready(eng.caches)
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    rounds = eng.stats["prefill_batches"] - base_batches
+    tokens = eng.stats["prefill_tokens"] - base_tokens
+    return {"tok_s": prompt_tokens / dt, "rounds": rounds,
+            "tokens_per_round": tokens / rounds}
+
+
+def run_multiproc_child(args, cfg, params) -> None:
+    """One jax.distributed process of the --multiproc sweep (spawned by the
+    parent with --process-id).  The coordinator (process 0) measures every
+    cell and writes the partial JSON the parent merges."""
+    from repro.launch.mesh import make_serve_mesh, parse_mesh
+    from repro.serve import MultiHostServeEngine
+
+    data, model = parse_mesh(args.mesh)
+    out = []
+    for spr, max_prompt, requests in _multiproc_cells(args.quick):
+        eng = MultiHostServeEngine(cfg, params, mesh=make_serve_mesh(data, model),
+                                   slots_per_replica=spr,
+                                   max_len=max_prompt + 32,
+                                   buckets=(max_prompt,))
+        if jax.process_index() == 0:
+            cell = _ingest_cell(eng, cfg, lo=max_prompt // 2, hi=max_prompt,
+                                requests=requests)
+            eng.stop_workers()
+            out.append(cell)
+        else:
+            eng.serve_worker()
+    if jax.process_index() == 0:
+        with open(args.multiproc_out, "w") as f:
+            json.dump(out, f)
+
+
+def run_multiproc_sweep(args, cfg, params) -> dict:
+    """Parent: measure the single-process ShardedServeEngine inline, spawn
+    the N-process pair to measure MultiHostServeEngine on the same logical
+    mesh, and gate the per-round capacity ratio."""
+    import subprocess
+    import sys as _sys
+    import tempfile
+
+    from repro.launch.mesh import (make_serve_mesh, parse_mesh,
+                                   pick_coordinator,
+                                   strip_forced_device_count)
+
+    data, model = parse_mesh(args.mesh)
+    singles = []
+    for spr, max_prompt, requests in _multiproc_cells(args.quick):
+        eng = ShardedServeEngine(cfg, params,
+                                 mesh=make_serve_mesh(data, model),
+                                 slots_per_replica=spr,
+                                 max_len=max_prompt + 32,
+                                 buckets=(max_prompt,))
+        singles.append(_ingest_cell(eng, cfg, lo=max_prompt // 2,
+                                    hi=max_prompt, requests=requests))
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = strip_forced_device_count(env.get("XLA_FLAGS", ""))
+    with tempfile.TemporaryDirectory() as td:
+        mp_out = os.path.join(td, "mp.json")
+        child_argv = [_sys.executable, os.path.abspath(__file__),
+                      "--mesh", args.mesh, "--multiproc", str(args.multiproc),
+                      # --num-processes sizes the child's forced device
+                      # count in bootstrap_mesh_env (D*M // N per process)
+                      "--num-processes", str(args.multiproc),
+                      "--coordinator", pick_coordinator(args.coordinator),
+                      "--multiproc-out", mp_out]
+        if args.quick:
+            child_argv.append("--quick")
+        procs = [subprocess.Popen(child_argv + ["--process-id", str(i)],
+                                  env=env)
+                 for i in range(args.multiproc)]
+        try:
+            for p in procs:
+                p.wait(timeout=MULTIPROC_TIMEOUT)
+        finally:
+            for p in procs:
+                p.kill()
+        for i, p in enumerate(procs):
+            if p.returncode != 0:
+                raise RuntimeError(f"multiproc bench process {i} exited "
+                                   f"{p.returncode}")
+        with open(mp_out) as f:
+            multis = json.load(f)
+
+    cells = []
+    for (spr, max_prompt, requests), sp, mp in zip(
+            _multiproc_cells(args.quick), singles, multis):
+        cell = {"requests": requests, "spr": spr, "max_prompt": max_prompt,
+                "nprocs": args.multiproc,
+                "sp_tok_s": sp["tok_s"],
+                "sp_tokens_per_round": sp["tokens_per_round"],
+                "mp_tok_s": mp["tok_s"],
+                "mp_rounds": mp["rounds"],
+                "mp_tokens_per_round": mp["tokens_per_round"],
+                # the coordinator protocol must reproduce the single-process
+                # schedule exactly: capacity ratio 1.0, deterministic
+                "speedup": mp["tokens_per_round"] / sp["tokens_per_round"]}
+        cells.append(cell)
+        print(f"spr={spr} max_prompt={max_prompt:3d} requests={requests:3d}  "
+              f"single-proc {cell['sp_tok_s']:8.0f} tok/s  "
+              f"{args.multiproc}-proc {cell['mp_tok_s']:8.0f} tok/s "
+              f"({cell['mp_rounds']} rounds)  "
+              f"capacity x{cell['speedup']:.2f}")
+    return {"cells": cells,
+            "keys": ("requests", "spr", "max_prompt", "nprocs")}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -181,11 +316,59 @@ def main() -> None:
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="data-parallel ingest scaling sweep on a DxM mesh "
                          "(ShardedServeEngine; data=1 vs data=D)")
+    ap.add_argument("--multiproc", type=int, default=0, metavar="N",
+                    help="with --mesh: compare the single-process sharded "
+                         "engine vs MultiHostServeEngine over N "
+                         "jax.distributed processes")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help=argparse.SUPPRESS)   # accepted for env bootstrap symmetry
+    ap.add_argument("--process-id", type=int, default=None,
+                    help=argparse.SUPPRESS)   # child mode (set by the parent)
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator for --multiproc "
+                         "(default: a free local port)")
+    ap.add_argument("--multiproc-out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
+
+    if args.process_id is not None:
+        # --multiproc child: join the jax.distributed job BEFORE any
+        # device query, then follow the coordinator
+        if not args.coordinator:
+            raise SystemExit("a --process-id child needs an explicit "
+                             "--coordinator HOST:PORT")
+        from repro.launch.mesh import init_distributed
+        init_distributed(args.coordinator, args.multiproc, args.process_id)
 
     cfg = reduced_config(ARCH)
     from repro.models import build_model
     params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    if args.process_id is not None:
+        run_multiproc_child(args, cfg, params)
+        return
+
+    if args.mesh and args.multiproc:
+        sweep = run_multiproc_sweep(args, cfg, params)
+        out = {
+            "meta": {
+                "backend": jax.default_backend(),
+                "device": str(jax.devices()[0]),
+                "arch": ARCH,
+                "jax": jax.__version__,
+                "mesh": args.mesh,
+                "nprocs": args.multiproc,
+                "quick": bool(args.quick),
+            },
+            "cells": sweep["cells"],
+        }
+        out_path = args.out or OUT_MULTIHOST
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out_path}")
+        if args.compare:
+            sys.exit(compare(out, args.compare, keys=sweep["keys"]))
+        return
 
     if args.mesh:
         sweep = run_mesh_sweep(args, cfg, params)

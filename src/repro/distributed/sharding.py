@@ -122,6 +122,44 @@ def serve_pool_specs(caches) -> Any:
             "blocks": jax.tree.map(block, caches["blocks"])}
 
 
+def pool_shardings(mesh: Mesh, caches) -> Any:
+    """NamedSharding tree for a ServeEngine cache pool on ``mesh``: the
+    ``serve_pool_specs`` PartitionSpecs bound to concrete devices (what
+    ``jax.jit`` out_shardings / ``jax.device_put`` want)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        serve_pool_specs(caches),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def process_replicas(mesh: Mesh) -> dict[int, list[int]]:
+    """Which data-parallel replicas each process hosts.
+
+    Replica r's cache-slot block is the r-th shard of the 'data' axis, so
+    its addressable shards live on the devices of mesh row r - the row's
+    process owns that replica's slot state.  Returns {process_index:
+    [replica, ...]} in replica order.  The serve meshes built by
+    ``launch/mesh.py`` lay processes out contiguously along 'data', so
+    each row is process-local; if a row ever spanned processes (exotic
+    topology) it is attributed to its first device's process.
+    """
+    devs = np.moveaxis(np.asarray(mesh.devices),
+                       tuple(mesh.axis_names).index("data"), 0)
+    out: dict[int, list[int]] = {}
+    for r in range(devs.shape[0]):
+        out.setdefault(devs[r].flat[0].process_index, []).append(r)
+    return out
+
+
+def make_global(mesh: Mesh, spec: P, x) -> jax.Array:
+    """Build a global jax.Array on ``mesh`` from a host array that every
+    process holds IDENTICALLY (multi-controller jax rejects plain numpy
+    args with non-trivial shardings; each process donates the shards its
+    local devices address)."""
+    sh = NamedSharding(mesh, spec)
+    x = np.asarray(x)
+    return jax.make_array_from_callback(x.shape, sh, lambda idx: x[idx])
+
+
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

@@ -62,21 +62,76 @@ def mesh_arg(argv) -> str | None:
     return None
 
 
+def _argv_int(argv, name: str) -> int | None:
+    """The integer value of --name N / --name=N in argv, else None (scanned
+    by hand: this runs BEFORE argparse so the device count can be sized
+    first)."""
+    for i, a in enumerate(argv):
+        if a == f"--{name}" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith(f"--{name}="):
+            return int(a.split("=", 1)[1])
+    return None
+
+
+def strip_forced_device_count(flags: str) -> str:
+    """Drop any --xla_force_host_platform_device_count=N from an XLA_FLAGS
+    string (a multi-process spawner must not leak its own forced count into
+    children that need a per-process one)."""
+    return " ".join(f for f in flags.split()
+                    if not f.startswith("--xla_force_host_platform_device_count"))
+
+
 def bootstrap_mesh_env(argv) -> None:
-    """Force D*M virtual host devices for a --mesh run on a CPU host.
+    """Force the right number of virtual host devices for a --mesh run on
+    a CPU host: D*M for a single process, D*M // --num-processes for a
+    ``jax.distributed`` child (identified by --process-id).
 
     Importing this module does not initialize the jax backend, so
     XLA_FLAGS set here still takes effect - call before the first device
     query (launch/serve.py and benchmarks/bench_serve.py call it at
     module import, before anything touches jax.devices())."""
     spec = mesh_arg(argv)
-    if spec is not None:
-        data, model = parse_mesh(spec)
-        flags = os.environ.get("XLA_FLAGS", "")
-        if "--xla_force_host_platform_device_count" not in flags:
-            os.environ["XLA_FLAGS"] = (
-                f"{flags} --xla_force_host_platform_device_count="
-                f"{data * model}").strip()
+    if spec is None:
+        return
+    data, model = parse_mesh(spec)
+    want = data * model
+    nprocs = _argv_int(argv, "num-processes") or 1
+    if _argv_int(argv, "process-id") is not None:
+        if (data * model) % nprocs:
+            raise ValueError(f"mesh {data}x{model} does not split over "
+                             f"{nprocs} processes")
+        want = data * model // nprocs
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={want}").strip()
+
+
+def pick_coordinator(addr: str | None) -> str:
+    """``addr`` if given, else 127.0.0.1 with a fresh OS-assigned port:
+    two concurrent multi-process fleets on one host (overlapping bench
+    runs, a retry racing a hung predecessor) must not rendezvous with
+    each other's coordination service."""
+    if addr:
+        return addr
+    import socket
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return f"127.0.0.1:{s.getsockname()[1]}"
+
+
+def init_distributed(coordinator: str, num_processes: int,
+                     process_id: int) -> None:
+    """``jax.distributed`` bootstrap for one serve process: CPU collectives
+    go through gloo (the CPU client's only cross-process implementation),
+    then the coordination service connects this process to its peers.
+    Must run before the first device query."""
+    import jax as _jax
+    if os.environ.get("JAX_PLATFORMS", "cpu") == "cpu":
+        _jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    _jax.distributed.initialize(coordinator, num_processes=num_processes,
+                                process_id=process_id)
 
 
 def make_serve_mesh(data: int, model: int):

@@ -1,16 +1,25 @@
 """Serving driver: bucketed batched prefill + continuous batching with the
-PDQ-int8 path, single-device or mesh-distributed.
+PDQ-int8 path, single-device, mesh-distributed, or multi-process.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --requests 8 --max-new 16 [--int8] [--int8-kv] \
         [--buckets 32,64,128] [--legacy-prefill] [--chunked-prefill] \
-        [--mesh 4x2] [--slots-per-replica 2]
+        [--mesh 4x2] [--slots-per-replica 2] [--num-processes 2]
 
 ``--mesh DxM`` serves over a ('data', 'model') device mesh
 (ShardedServeEngine: slots data-parallel across D replicas, projection
 columns tensor-parallel across M shards).  On a CPU host the driver forces
 enough virtual devices automatically - this line must run before jax
 imports, hence the early environ bootstrap below.
+
+``--num-processes N`` additionally splits the mesh over N OS processes
+joined by ``jax.distributed`` (MultiHostServeEngine): this process becomes
+a LAUNCHER that spawns N children (each re-runs this driver with
+--process-id i), streams their output, and exits non-zero the moment any
+child dies - so a hung or crashed worker is an actionable failure, not a
+silent stall.  Child 0 is the serving coordinator; it prints per-process
+admit/occupancy stats at the end.  A child can also be started by hand
+(e.g. one per host) with explicit --process-id/--coordinator.
 """
 from __future__ import annotations
 
@@ -23,20 +32,16 @@ bootstrap_mesh_env(sys.argv)
 
 import argparse
 import dataclasses
+import os
+import subprocess
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import ALL_ARCHS, get_config, reduced_config
-from repro.launch.mesh import make_serve_mesh, parse_mesh
-from repro.models import build_model
-from repro.serve import Request, ServeEngine, ShardedServeEngine
 
-
-def main(argv=None):
+def build_args(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b", choices=list(ALL_ARCHS))
+    ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -61,8 +66,88 @@ def main(argv=None):
     ap.add_argument("--slots-per-replica", type=int, default=None,
                     help="cache slots per data-parallel replica "
                          "(default: --slots)")
-    args = ap.parse_args(argv)
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="split --mesh over N jax.distributed processes "
+                         "(spawns the children unless --process-id is set)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this child's jax.distributed process index "
+                         "(set by the --num-processes launcher)")
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator address (default: the "
+                         "launcher picks a free local port; a hand-started "
+                         "child must be given one explicitly)")
+    return ap.parse_args(argv)
 
+
+def spawn_processes(args, argv) -> int:
+    """Launcher mode: spawn one child per process, fail fast and LOUD.
+
+    Children share this terminal's stdout/stderr (their prints are the
+    per-process log).  The first child to exit non-zero takes the fleet
+    down: remaining children are terminated and its code is returned, so
+    CI sees exactly which process died instead of a 6-hour hang."""
+    env = dict(os.environ)
+    from repro.launch.mesh import pick_coordinator, strip_forced_device_count
+    env["XLA_FLAGS"] = strip_forced_device_count(env.get("XLA_FLAGS", ""))
+    coordinator = pick_coordinator(args.coordinator)
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", *argv,
+         "--coordinator", coordinator, "--process-id", str(i)], env=env)
+        for i in range(args.num_processes)]
+    live = dict(enumerate(procs))
+    code = 0
+    while live:
+        time.sleep(0.2)
+        for i, p in list(live.items()):
+            rc = p.poll()
+            if rc is None:
+                continue
+            del live[i]
+            if rc != 0:
+                print(f"serve launcher: process {i} died with exit code "
+                      f"{rc}; terminating {len(live)} remaining",
+                      file=sys.stderr, flush=True)
+                for q in live.values():
+                    q.terminate()
+                for q in live.values():
+                    q.wait()
+                return rc
+    return code
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    args = build_args(argv)
+
+    multiproc = args.num_processes > 1 or args.process_id is not None
+    if multiproc:
+        if not args.mesh:
+            raise SystemExit("--num-processes requires --mesh DxM")
+        if args.legacy_prefill:
+            raise SystemExit("--legacy-prefill is single-device only")
+    if args.num_processes > 1 and args.process_id is None:
+        raise SystemExit(spawn_processes(args, argv))
+
+    if multiproc:
+        # child: join the jax.distributed job BEFORE any device query
+        if not args.coordinator:
+            raise SystemExit("a hand-started --process-id child needs an "
+                             "explicit --coordinator HOST:PORT")
+        from repro.launch.mesh import init_distributed
+        init_distributed(args.coordinator, args.num_processes,
+                         args.process_id)
+
+    import jax
+
+    from repro.configs import ALL_ARCHS, get_config, reduced_config
+    from repro.launch.mesh import make_serve_mesh, parse_mesh
+    from repro.models import build_model
+    from repro.serve import (MultiHostServeEngine, Request, ServeEngine,
+                             ShardedServeEngine)
+
+    if args.arch not in ALL_ARCHS:
+        raise SystemExit(f"unknown --arch {args.arch!r}; "
+                         f"choose from {sorted(ALL_ARCHS)}")
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.int8_kv:
         cfg = dataclasses.replace(cfg, quant_kv="dynamic")
@@ -71,19 +156,20 @@ def main(argv=None):
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
     if args.mesh:
-        if args.legacy_prefill:
-            raise SystemExit("--legacy-prefill is single-device only")
         data, model = parse_mesh(args.mesh)
+        if data % max(args.num_processes, 1):
+            raise SystemExit(f"--mesh data axis ({data}) must divide over "
+                             f"--num-processes ({args.num_processes})")
         mesh = make_serve_mesh(data, model)
         spr = args.slots_per_replica or args.slots
-        eng = ShardedServeEngine(cfg, params, mesh=mesh,
-                                 slots_per_replica=spr,
-                                 max_len=args.max_len,
-                                 quantize_weights=args.int8,
-                                 temperature=args.temperature,
-                                 buckets=buckets,
-                                 chunked_prefill=args.chunked_prefill)
+        cls = MultiHostServeEngine if multiproc else ShardedServeEngine
+        eng = cls(cfg, params, mesh=mesh, slots_per_replica=spr,
+                  max_len=args.max_len, quantize_weights=args.int8,
+                  temperature=args.temperature, buckets=buckets,
+                  chunked_prefill=args.chunked_prefill)
         mode = f"sharded {data}x{model} ({spr} slots/replica)"
+        if multiproc:
+            mode += f" x{args.num_processes}proc"
     else:
         eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                           quantize_weights=args.int8,
@@ -91,6 +177,14 @@ def main(argv=None):
                           batch_prefill=not args.legacy_prefill,
                           chunked_prefill=args.chunked_prefill)
         mode = "legacy" if args.legacy_prefill else "bucketed"
+
+    if multiproc and not eng.is_coordinator:
+        print(f"[proc {args.process_id}] worker following the coordinator "
+              f"command stream", flush=True)
+        eng.serve_worker()
+        print(f"[proc {args.process_id}] worker done", flush=True)
+        return
+
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -98,6 +192,8 @@ def main(argv=None):
                     max_new=args.max_new) for i in range(args.requests)]
     t0 = time.perf_counter()
     eng.run(reqs)
+    if multiproc:
+        eng.stop_workers()
     dt = time.perf_counter() - t0
     total_new = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
@@ -110,6 +206,11 @@ def main(argv=None):
                                        eng.stats["replica_occupancy"])):
         print(f"  replica {r}: admits={adm} occupied={occ}/"
               f"{eng.slots_per_replica}")
+    if multiproc:
+        for proc, hs in sorted(eng.host_stats().items()):
+            print(f"  process {proc}: replicas={hs['replicas']} "
+                  f"admits={hs['admits']} occupied={hs['occupied']}/"
+                  f"{hs['slots']}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.generated}")
 

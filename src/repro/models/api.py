@@ -128,7 +128,12 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
         B, S_text = tokens.shape
         P = _patch_count(cfg)
         pos = jnp.broadcast_to(jnp.arange(P + S_text)[None], (B, P + S_text))
-        tot = seq_lens.astype(jnp.int32) + P      # valid prefix incl patches
+        sl = seq_lens.astype(jnp.int32)
+        # valid prefix incl patches; rows with seq_lens == 0 are DUMMY rows
+        # of a partially-filled batch - their patch tokens are masked too,
+        # so a dummy row routes nothing through MoE and claims no expert
+        # capacity (the cache scatter drops its rows regardless)
+        tot = jnp.where(sl > 0, sl + P, 0)
         h, caches, _ = lm_apply(
             params, cfg, tokens=tokens, positions=pos, mode="prefill",
             caches=caches, frames=batch.get("frames"),

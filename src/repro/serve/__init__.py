@@ -1,3 +1,8 @@
-from . import engine
-from .engine import DEFAULT_BUCKETS, Request, ServeEngine
+from . import core, engine
+from .core import DEFAULT_BUCKETS, Request, SchedulerCore
+from .engine import ServeEngine
+from .multihost import MultiHostServeEngine
 from .sharded import ShardedServeEngine
+
+__all__ = ["DEFAULT_BUCKETS", "Request", "SchedulerCore", "ServeEngine",
+           "ShardedServeEngine", "MultiHostServeEngine", "core", "engine"]

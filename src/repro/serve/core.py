@@ -1,0 +1,459 @@
+"""Scheduler core: the device-agnostic half of every ServeEngine.
+
+The serving engines share one scheduler - request validation, the FIFO
+pending queue, bucket grouping, per-replica free-slot deques with
+least-loaded routing, slot/length accounting, and ``engine.stats`` - but
+differ in WHERE the device programs run (one device, a single-process
+('data', 'model') mesh, or a ``jax.distributed`` multi-process mesh).
+This module expresses the scheduler as host-side PLANS so that split is
+structural:
+
+  * ``SchedulerCore`` builds plans (pure numpy: padded token batches,
+    seq_lens, scatter maps, slot placements) and applies sampled results
+    back to the queue/slot state.  It never touches a jax array.
+  * an engine subclass implements three exec hooks, each consuming a plan
+    and returning the sampled next token per pool row:
+
+        _exec_prefill(plan, extras)   # one bucketed prefill + scatter
+        _exec_chunked(plan, extras)   # a chunked-prefill launch sequence
+        _exec_decode(plan)            # one batched decode step
+
+Because a plan is plain numpy, it can also be SHIPPED: the multi-host
+engine's coordinator broadcasts each plan's arrays to the worker
+processes, which execute the same SPMD launches (serve/multihost.py) -
+the scheduler itself keeps running as a host-side singleton on the
+coordinator, exactly as it does on one process.
+
+Dummy rows (pool rows a prefill batch does not fill) carry ``seq_lens ==
+0``: every token of the row is masked out end to end - attention writes
+clamp to index 0, the SSM recurrence skips all of them (dt = 0), and MoE
+routing masks the whole row (moe.route token_mask), so a dummy row claims
+NO expert-capacity slot.  (Until PR 5 dummy rows carried seq_lens == 1
+and each routed one token through the MoE router, which could evict real
+tokens' capacity slots at tight capacity factors.)
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+DEFAULT_BUCKETS = (32, 64, 128, 256)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new: int = 16
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class PrefillPlan:
+    """One bucketed prefill launch spanning every replica: prompts
+    right-padded to ``bucket``, replica r's admits in rows [r*spr, r*spr +
+    n_r) of the fixed ``slots``-row batch; rows with seq_lens == 0 are
+    dummies the scatter drops.  ``src_map`` carries replica-LOCAL source
+    rows (identical to global rows when n_replicas == 1)."""
+    bucket: int
+    tokens: np.ndarray               # (slots, bucket) int32
+    seq_lens: np.ndarray             # (slots,) int32; 0 = dummy row
+    src_map: np.ndarray              # (slots,) int32; -1 = keep pool slot
+    placed: list[tuple[int, int, Request]]   # (slot, batch row, request)
+    per_counts: list[int]            # admits per replica
+    real_tokens: int                 # prompt tokens (pads excluded)
+
+
+@dataclasses.dataclass
+class ChunkedPlan:
+    """A chunked prefill of ONE oversized prompt: the first chunk runs as
+    a normal bucketed prefill, later chunks continue against the
+    accumulating rows, then the finished row lands via ``src_map``."""
+    req: Request
+    replica: int
+    row: int                         # batch row carrying the prompt
+    slot: int
+    prompt_len: int
+    first: tuple[int, np.ndarray, np.ndarray]      # (bucket, tokens, seq_lens)
+    chunks: list[tuple[int, np.ndarray, np.ndarray, np.ndarray]]
+    #          (bucket, tokens, seq_lens, start_lens)
+    src_map: np.ndarray              # (slots,) int32
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    live: list[int]                  # slots with an active request
+    tokens: np.ndarray               # (slots, 1) int32
+    positions: np.ndarray            # (slots, 1) int32
+
+
+class SchedulerCore:
+    """Replica-aware admission/decode scheduler over a fixed slot pool.
+
+    Subclasses must set up device state and implement the exec hooks; the
+    driver methods here (``submit``/``run``/``step``) are shared by the
+    single-device, sharded, and multi-host engines.
+    """
+
+    # ------------------------------------------------------------ state init
+    def _init_scheduler(self, *, slots: int, n_replicas: int, max_len: int,
+                        patch_tokens: int, buckets: tuple[int, ...],
+                        batch_prefill: bool, chunked_prefill: bool) -> None:
+        assert slots % n_replicas == 0, (slots, n_replicas)
+        assert batch_prefill or n_replicas == 1, (
+            "the legacy per-request prefill baseline is single-replica only")
+        assert batch_prefill or not chunked_prefill, (
+            "chunked prefill requires the bucketed batched-prefill path")
+        self.slots = slots
+        self.n_replicas = n_replicas
+        self.slots_per_replica = slots // n_replicas
+        self.max_len = max_len
+        self.patch_tokens = patch_tokens
+        self.batch_prefill = batch_prefill
+        self.chunked_prefill = chunked_prefill
+        self.lengths = np.zeros((slots,), np.int64)
+        self.active: list[Request | None] = [None] * slots
+        self.last_tokens = np.zeros((slots,), np.int64)
+        self.finished: list[Request] = []   # completion order, appended O(1)
+        # clamp buckets so prompt + patches + the first decode token always
+        # fit the cache (a prompt filling the cache exactly would ring-wrap
+        # the first decode write onto slot 0), dedupe and sort ascending;
+        # _bucket() picks the smallest bucket >= prompt len.  Without
+        # chunking the capacity limit always rides as the last bucket, so
+        # any prompt the legacy per-request path served safely is still
+        # servable (at most one extra executable); with chunking the
+        # largest CONFIGURED bucket is the chunk size and longer prompts
+        # (up to capacity) are split instead.
+        limit = max_len - patch_tokens - 1
+        if limit <= 0:
+            raise ValueError(
+                f"max_len ({max_len}) leaves no room for a prompt: need "
+                f"patch_tokens ({patch_tokens}) + prompt + 1 decode slot")
+        self._capacity = limit
+        bset = {min(int(b), limit) for b in buckets if int(b) > 0}
+        if not chunked_prefill:
+            bset |= {limit}
+        if not bset:
+            raise ValueError("chunked prefill needs at least one bucket")
+        self.buckets = tuple(sorted(bset))
+        # admission scheduler state: FIFO pending queue + one free-slot
+        # deque per replica (O(1) admit, no rescans of self.active; the
+        # per-replica split is what least-loaded routing reads)
+        self.pending: collections.deque[Request] = collections.deque()
+        spr = self.slots_per_replica
+        self._free_r: list[collections.deque[int]] = [
+            collections.deque(range(r * spr, (r + 1) * spr))
+            for r in range(n_replicas)]
+        self.stats: dict[str, Any] = {
+            "prefill_compiles": 0,     # distinct prefill executables traced
+            "chunk_compiles": 0,       # distinct prefill_chunk executables
+            "decode_compiles": 0,
+            "prefill_batches": 0,      # prefill launches (bucketed: one per
+                                       # bucket group; legacy: one per request)
+            "chunk_batches": 0,        # prefill_chunk launches
+            "prefill_requests": 0,     # requests admitted through prefill
+            "chunked_requests": 0,     # ... of which needed chunking
+            "prefill_tokens": 0,       # real prompt tokens prefetched
+            "prefill_padded_tokens": 0,  # tokens actually executed (pads incl)
+            "decode_steps": 0,
+            "decode_tokens": 0,
+            "completed": 0,
+            # per-replica occupancy/admit accounting (single-replica engines
+            # report one-element lists)
+            "replica_admits": [0] * n_replicas,
+            "replica_occupancy": [0] * n_replicas,
+        }
+
+    # ------------------------------------------------------------ exec hooks
+    def _exec_prefill(self, plan: PrefillPlan, extras) -> np.ndarray:
+        """Run ONE bucketed prefill + cache scatter; return the sampled
+        next token per pool row (dummy rows' entries are ignored)."""
+        raise NotImplementedError
+
+    def _exec_chunked(self, plan: ChunkedPlan, extras) -> np.ndarray:
+        raise NotImplementedError
+
+    def _exec_decode(self, plan: DecodePlan) -> np.ndarray:
+        raise NotImplementedError
+
+    def _submit_one(self, req: Request, extras) -> bool:
+        raise NotImplementedError(
+            "the legacy per-request path is single-device only")
+
+    # ----------------------------------------------------------------- admin
+    def _bucket(self, prompt_len: int) -> int:
+        if prompt_len <= 0:
+            raise ValueError("empty prompt: nothing to prefill")
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(
+            f"prompt of {prompt_len} tokens exceeds the largest prefill "
+            f"bucket {self.buckets[-1]} (max_len={self.max_len}, "
+            f"patch_tokens={self.patch_tokens})")
+
+    def _validate(self, prompt_len: int) -> None:
+        """Reject empty/oversized prompts up front (before any dequeue)."""
+        if self.chunked_prefill and prompt_len > self.buckets[-1]:
+            if prompt_len > self._capacity:
+                raise ValueError(
+                    f"prompt of {prompt_len} tokens exceeds the cache "
+                    f"capacity {self._capacity} (max_len={self.max_len}, "
+                    f"patch_tokens={self.patch_tokens})")
+            return
+        self._bucket(prompt_len)
+
+    def _validate_extras(self, prompt_len: int, extras) -> None:
+        """Entry-point companion of _validate: reject unsupported extras
+        combinations BEFORE anything is queued or any plan claims a slot
+        (raising mid-admission would drop dequeued peers / leak slots).
+        The multi-host engine overrides this to reject all extras."""
+        if extras and self.chunked_prefill and prompt_len > self.buckets[-1]:
+            raise NotImplementedError(
+                "chunked prefill is text-only (no vision/encdec extras)")
+
+    def _free_total(self) -> int:
+        return sum(len(f) for f in self._free_r)
+
+    def _take_slot(self, replica: int) -> int:
+        slot = self._free_r[replica].popleft()
+        self.stats["replica_occupancy"][replica] += 1
+        return slot
+
+    def _release_slot(self, slot: int) -> None:
+        r = slot // self.slots_per_replica
+        self._free_r[r].append(slot)
+        self.stats["replica_occupancy"][r] -= 1
+
+    def _assign(self, reqs: list[Request]) -> list[list[Request]]:
+        """Route same-bucket admits to replicas, least-loaded first (most
+        free slots net of this round's assignments; FIFO within the
+        round).  Caller guarantees len(reqs) <= total free slots."""
+        per: list[list[Request]] = [[] for _ in range(self.n_replicas)]
+        for r in reqs:
+            ri = max(range(self.n_replicas),
+                     key=lambda i: (len(self._free_r[i]) - len(per[i]), -i))
+            assert len(self._free_r[ri]) > len(per[ri]), "no free slot"
+            per[ri].append(r)
+        return per
+
+    def _activate(self, slot: int, req: Request, prompt_len: int, tok: int):
+        req.generated.append(tok)
+        if len(req.generated) >= req.max_new:
+            # prefill already produced the full budget: complete without
+            # ever occupying a decode slot (max_new=1 = pure ingest)
+            req.done = True
+            self.finished.append(req)
+            self._release_slot(slot)
+            self.stats["completed"] += 1
+            return
+        self.active[slot] = req
+        self.lengths[slot] = prompt_len + self.patch_tokens
+        self.last_tokens[slot] = tok
+
+    # ------------------------------------------------------- prefill planning
+    def _plan_prefill(self, per: list[list[Request]], bucket: int) -> PrefillPlan:
+        """Lay replica r's admits into rows [r*spr, r*spr + len(per[r]))
+        of a fixed ``slots``-row batch and claim their slots.  Rows beyond
+        a replica's admits are dummies: seq_lens == 0 masks every one of
+        their tokens out of attention writes, the SSM recurrence and MoE
+        routing, and src_map == -1 makes the scatter drop them."""
+        spr = self.slots_per_replica
+        n = sum(len(g) for g in per)
+        assert 0 < n <= self._free_total()
+        tokens = np.zeros((self.slots, bucket), np.int32)
+        seq_lens = np.zeros((self.slots,), np.int32)     # dummy rows: 0
+        src_map = np.full((self.slots,), -1, np.int32)
+        placed: list[tuple[int, int, Request]] = []
+        for ri, reqs in enumerate(per):
+            for i, r in enumerate(reqs):
+                S = len(r.prompt)
+                tokens[ri * spr + i, :S] = r.prompt
+                seq_lens[ri * spr + i] = S
+                slot = self._take_slot(ri)
+                src_map[slot] = i                        # replica-local row
+                placed.append((slot, ri * spr + i, r))
+        return PrefillPlan(bucket=bucket, tokens=tokens, seq_lens=seq_lens,
+                           src_map=src_map, placed=placed,
+                           per_counts=[len(g) for g in per],
+                           real_tokens=int(seq_lens.sum()))
+
+    def _apply_prefill(self, plan: PrefillPlan, nxt: np.ndarray) -> None:
+        for ri, c in enumerate(plan.per_counts):
+            self.stats["replica_admits"][ri] += c
+        for slot, row, r in plan.placed:
+            self._activate(slot, r, int(plan.seq_lens[row]), int(nxt[row]))
+        self.stats["prefill_batches"] += 1
+        self.stats["prefill_requests"] += len(plan.placed)
+        self.stats["prefill_tokens"] += plan.real_tokens
+        self.stats["prefill_padded_tokens"] += self.slots * plan.bucket
+
+    def _plan_chunked(self, req: Request) -> ChunkedPlan:
+        """Split ONE oversized prompt into bucket-sized chunks.  The
+        prompt rides row 0 of the least-loaded replica's block; all other
+        rows are dummies (seq_lens == 0)."""
+        spr = self.slots_per_replica
+        Bp = self.slots
+        chunk = self.buckets[-1]
+        S = len(req.prompt)
+        ri = max(range(self.n_replicas),
+                 key=lambda i: (len(self._free_r[i]), -i))
+        row = ri * spr
+        prompt = np.asarray(req.prompt)
+
+        tokens = np.zeros((Bp, chunk), np.int32)
+        seq_lens = np.zeros((Bp,), np.int32)
+        tokens[row] = prompt[:chunk]
+        seq_lens[row] = chunk
+        first = (chunk, tokens, seq_lens)
+
+        chunks: list[tuple[int, np.ndarray, np.ndarray, np.ndarray]] = []
+        off = chunk
+        while off < S:
+            rem = min(chunk, S - off)
+            b = self._bucket(rem)        # ragged last chunk pads to a bucket
+            tokens = np.zeros((Bp, b), np.int32)
+            seq_lens = np.zeros((Bp,), np.int32)
+            start_lens = np.zeros((Bp,), np.int32)
+            tokens[row, :rem] = prompt[off:off + rem]
+            seq_lens[row] = rem
+            start_lens[row] = off
+            chunks.append((b, tokens, seq_lens, start_lens))
+            off += rem
+
+        slot = self._take_slot(ri)
+        src_map = np.full((Bp,), -1, np.int32)
+        src_map[slot] = 0                                 # replica-local row 0
+        return ChunkedPlan(req=req, replica=ri, row=row, slot=slot,
+                           prompt_len=S, first=first, chunks=chunks,
+                           src_map=src_map)
+
+    def _apply_chunked(self, plan: ChunkedPlan, nxt: np.ndarray) -> None:
+        self.stats["prefill_batches"] += 1
+        self.stats["chunk_batches"] += len(plan.chunks)
+        self.stats["prefill_padded_tokens"] += self.slots * (
+            plan.first[0] + sum(c[0] for c in plan.chunks))
+        self.stats["replica_admits"][plan.replica] += 1
+        self._activate(plan.slot, plan.req, plan.prompt_len,
+                       int(nxt[plan.row]))
+        self.stats["prefill_requests"] += 1
+        self.stats["chunked_requests"] += 1
+        self.stats["prefill_tokens"] += plan.prompt_len
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request, extras: dict[str, Any] | None = None) -> bool:
+        """Admit the request into a free slot now; False if engine is full.
+
+        On the bucketed path this may opportunistically co-admit queued
+        same-bucket requests into the same prefill launch.
+        """
+        if not self._free_total():
+            return False
+        if not self.batch_prefill:
+            return self._submit_one(req, extras)
+        self._validate(len(req.prompt))  # validate before touching the queue
+        self._validate_extras(len(req.prompt), extras)
+        self.pending.appendleft(req)
+        self._admit(extras)
+        return True
+
+    def _admit(self, extras=None) -> int:
+        """Bucket-grouped admission: ONE pass over the pending queue assigns
+        the first len(free) requests (FIFO) to per-bucket groups, then each
+        group prefills in ONE batched call spanning every replica (groups
+        launch in first-arrival order; a chunk-needing request flushes the
+        groups gathered so far and runs its chunk sequence solo).
+        O(pending) per admission call, not per batch.  Returns the number
+        of requests admitted."""
+        free = self._free_total()
+        groups: dict[int, list[Request]] = {}
+        order: list[int] = []
+        admitted = 0
+
+        def flush():
+            for b in order:
+                plan = self._plan_prefill(self._assign(groups[b]), b)
+                self._apply_prefill(plan, self._exec_prefill(plan, extras))
+            groups.clear()
+            order.clear()
+
+        while self.pending and admitted < free:   # consumes a queue prefix
+            r = self.pending.popleft()
+            S = len(r.prompt)
+            if self.chunked_prefill and S > self.buckets[-1]:
+                # extras were rejected at submit()/run() entry
+                # (_validate_extras) - raising here would drop the
+                # dequeued peers and leak the planned slot
+                flush()                  # keep arrival order across launches
+                plan = self._plan_chunked(r)
+                self._apply_chunked(plan, self._exec_chunked(plan, extras))
+                admitted += 1
+                continue
+            b = self._bucket(S)
+            if b not in groups:
+                groups[b] = []
+                order.append(b)
+            groups[b].append(r)
+            admitted += 1
+        flush()
+        return admitted
+
+    # ---------------------------------------------------------------- decode
+    def _plan_decode(self) -> DecodePlan | None:
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return None
+        return DecodePlan(live=live,
+                          tokens=self.last_tokens[:, None].astype(np.int32),
+                          positions=self.lengths[:, None].astype(np.int32))
+
+    def _apply_decode(self, plan: DecodePlan, nxt: np.ndarray) -> None:
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(plan.live)
+        for i in plan.live:
+            req = self.active[i]
+            req.generated.append(int(nxt[i]))
+            self.lengths[i] += 1
+            self.last_tokens[i] = int(nxt[i])
+            if (len(req.generated) >= req.max_new
+                    or self.lengths[i] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.active[i] = None
+                self._release_slot(i)   # slot freed for the next admission
+                self.stats["completed"] += 1
+
+    def step(self) -> int:
+        """One batched decode step over all active slots; returns #active."""
+        plan = self._plan_decode()
+        if plan is None:
+            return 0
+        self._apply_decode(plan, self._exec_decode(plan))
+        return len([r for r in self.active if r is not None])
+
+    def run(self, requests: list[Request], extras=None) -> list[Request]:
+        """Drain a request list through the engine (continuous batching).
+
+        Admission is bucket-grouped and batched (``_admit``); completion is
+        tracked incrementally: ``step`` appends each finished request to
+        ``self.finished`` as its slot frees, so draining is O(1) per
+        completion instead of rescanning the whole request list every
+        decode step.
+        """
+        for r in requests:                 # validate upfront: an oversized
+            self._validate(len(r.prompt))  # prompt must not dequeue peers
+            self._validate_extras(len(r.prompt), extras)
+        self.pending.extend(requests)
+        n_active = sum(r is not None for r in self.active)   # pre-submitted
+        while self.pending or n_active:
+            if self.batch_prefill:
+                self._admit(extras)
+            else:
+                while self.pending and self._free_total():
+                    self._submit_one(self.pending.popleft(), extras)
+            n_active = self.step()
+        return requests

@@ -11,40 +11,36 @@ Production features:
     the grouped PDQ prologue/matmul pipeline then runs at real batch sizes
     during prefill too.  The finished rows land in the pooled cache via one
     fused ``bundle.cache_scatter`` (kernels/kv_cache.cache_scatter_p);
-  * an explicit admission scheduler: a deque-based pending queue, bucket-
-    grouped admits in FIFO order, per-replica free-slot deques (no
-    O(slots) rescans per admission), least-loaded replica routing, and
+  * an explicit admission scheduler (serve/core.py SchedulerCore): a
+    deque-based pending queue, bucket-grouped admits in FIFO order,
+    per-replica free-slot deques, least-loaded replica routing, and
     per-step accounting in ``engine.stats``;
   * chunked prefill (``chunked_prefill=True``): prompts longer than the
     largest bucket are split into bucket-sized chunks instead of compiling
-    a cache-capacity-sized executable - the first chunk runs the normal
-    bucketed prefill, later chunks run ``bundle.prefill_chunk`` against the
-    accumulating cache rows, and the finished rows land through the same
-    ``cache_scatter``;
+    a cache-capacity-sized executable;
   * greedy or temperature sampling;
   * optional PDQ-int8 weight path (``quantize_weights=True``; see
     models/linops.py and DESIGN.md Sec. 2) and optional int8 KV cache
     (cfg.quant_kv='dynamic', kernels/kv_cache.py).
 
-The scheduler core is replica-aware: slots are grouped into ``n_replicas``
-equal blocks and every admission assigns same-bucket requests to the
-least-loaded replicas.  With ``n_replicas=1`` (this class) the engine is
-the single-device engine; ``serve/sharded.py`` subclasses it to run the
-same schedule over a ('data', 'model') device mesh, one slot block per
-data-parallel replica.
+The scheduler lives in ``serve/core.py`` as plan builders + result
+appliers; this class binds the plans to single-device jit programs.  With
+``n_replicas=1`` (this class) the engine is the single-device engine;
+``serve/sharded.py`` runs the same schedule over a ('data', 'model')
+device mesh and ``serve/multihost.py`` over a ``jax.distributed``
+multi-process mesh.
 
 Padding never leaks: pad tokens are masked out of attention by causality,
 skipped exactly by the SSM recurrence (dt=0), masked out of MoE routing
 (models/moe.route token_mask), and their cache writes are redirected onto
 the row's last real token (models/attention._clamp_padded), so a bucketed
-prefill is bit-identical to an unpadded one.  Remaining caveat: each DUMMY
-row of a partially-filled prefill batch still routes its single real-token
-row through the MoE router (bounded by one token per dummy row).
+prefill is bit-identical to an unpadded one.  Dummy rows of a
+partially-filled prefill batch carry seq_lens == 0 and are masked out the
+same way end to end - they claim no MoE expert capacity (PR-5 fix; the
+scatter drops their cache rows regardless).
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
 from typing import Any
 
 import jax
@@ -54,19 +50,13 @@ import numpy as np
 from repro.models import build_model
 from repro.models.linops import quantize_param_tree
 
-DEFAULT_BUCKETS = (32, 64, 128, 256)
+from .core import (DEFAULT_BUCKETS, ChunkedPlan, DecodePlan, PrefillPlan,
+                   Request, SchedulerCore)
+
+__all__ = ["DEFAULT_BUCKETS", "Request", "ServeEngine"]
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray               # (S,) int32
-    max_new: int = 16
-    generated: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class ServeEngine:
+class ServeEngine(SchedulerCore):
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  quantize_weights: bool = False, temperature: float = 0.0,
                  rng: jax.Array | None = None,
@@ -74,99 +64,49 @@ class ServeEngine:
                  batch_prefill: bool = True,
                  chunked_prefill: bool = False,
                  n_replicas: int = 1):
-        assert slots % n_replicas == 0, (slots, n_replicas)
-        assert batch_prefill or n_replicas == 1, (
-            "the legacy per-request prefill baseline is single-replica only")
-        assert batch_prefill or not chunked_prefill, (
-            "chunked prefill requires the bucketed batched-prefill path")
         self.cfg = cfg
         self.bundle = build_model(cfg)
         self.params = (quantize_param_tree(params) if quantize_weights
                        else params)
-        self.slots = slots
-        self.n_replicas = n_replicas
-        self.slots_per_replica = slots // n_replicas
-        self.max_len = max_len
         self.temperature = temperature
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         mem_len = 8 if cfg.family == "encdec" else 0
         self.mem_len = mem_len
-        self.patch_tokens = (cfg.frontend_tokens if cfg.frontend == "vision"
-                             else 0)
-        self.caches = self.bundle.init_caches(slots, max_len, mem_len)
-        self.lengths = np.zeros((slots,), np.int64)
-        self.active: list[Request | None] = [None] * slots
-        self.last_tokens = np.zeros((slots,), np.int64)
-        self.finished: list[Request] = []    # completion order, appended O(1)
-        self.batch_prefill = batch_prefill
-        self.chunked_prefill = chunked_prefill
-        # clamp buckets so prompt + patches + the first decode token always
-        # fit the cache (a prompt filling the cache exactly would ring-wrap
-        # the first decode write onto slot 0), dedupe and sort ascending;
-        # _bucket() picks the smallest bucket >= prompt len.  Without
-        # chunking the capacity limit always rides as the last bucket, so
-        # any prompt the legacy per-request path served safely is still
-        # servable (at most one extra executable); with chunking the
-        # largest CONFIGURED bucket is the chunk size and longer prompts
-        # (up to capacity) are split instead.
-        limit = max_len - self.patch_tokens - 1
-        if limit <= 0:
-            raise ValueError(
-                f"max_len ({max_len}) leaves no room for a prompt: need "
-                f"patch_tokens ({self.patch_tokens}) + prompt + 1 decode slot")
-        self._capacity = limit
-        bset = {min(int(b), limit) for b in buckets if int(b) > 0}
-        if not chunked_prefill:
-            bset |= {limit}
-        if not bset:
-            raise ValueError("chunked prefill needs at least one bucket")
-        self.buckets = tuple(sorted(bset))
-        # admission scheduler state: FIFO pending queue + one free-slot
-        # deque per replica (O(1) admit, no rescans of self.active; the
-        # per-replica split is what least-loaded routing reads)
-        self.pending: collections.deque[Request] = collections.deque()
-        spr = self.slots_per_replica
-        self._free_r: list[collections.deque[int]] = [
-            collections.deque(range(r * spr, (r + 1) * spr))
-            for r in range(n_replicas)]
-        self.stats: dict[str, Any] = {
-            "prefill_compiles": 0,     # distinct prefill executables traced
-            "chunk_compiles": 0,       # distinct prefill_chunk executables
-            "decode_compiles": 0,
-            "prefill_batches": 0,      # prefill launches (bucketed: one per
-                                       # bucket group; legacy: one per request)
-            "chunk_batches": 0,        # prefill_chunk launches
-            "prefill_requests": 0,     # requests admitted through prefill
-            "chunked_requests": 0,     # ... of which needed chunking
-            "prefill_tokens": 0,       # real prompt tokens prefetched
-            "prefill_padded_tokens": 0,  # tokens actually executed (pads incl)
-            "decode_steps": 0,
-            "decode_tokens": 0,
-            "completed": 0,
-            # per-replica occupancy/admit accounting (single-replica engines
-            # report one-element lists)
-            "replica_admits": [0] * n_replicas,
-            "replica_occupancy": [0] * n_replicas,
-        }
+        self._init_scheduler(
+            slots=slots, n_replicas=n_replicas, max_len=max_len,
+            patch_tokens=(cfg.frontend_tokens if cfg.frontend == "vision"
+                          else 0),
+            buckets=buckets, batch_prefill=batch_prefill,
+            chunked_prefill=chunked_prefill)
+        self._init_pools()
+        self._build_jitted()
+
+    def _init_pools(self):
+        """Allocate the serving cache pools.  The multi-host engine
+        overrides this with shape-only stand-ins (its pools are created
+        directly on the global mesh, so host allocations would be waste).
+        """
+        self.caches = self.bundle.init_caches(self.slots, self.max_len,
+                                              self.mem_len)
         # one spare cache pool fed to every prefill_many call: prefill is
         # functional, so the same zero pool is reused forever and the
         # written rows are landed into self.caches by cache_scatter.
-        if batch_prefill:
-            self._prefill_pool = self.bundle.init_caches(slots, max_len,
-                                                         mem_len)
+        if self.batch_prefill:
+            self._prefill_pool = self.bundle.init_caches(
+                self.slots, self.max_len, self.mem_len)
         else:
             # legacy path: a single zero row - a new request must prefill
             # from an EMPTY cache row, not the freed slot's stale one (the
             # int8 decode kernel masks by cache['len'], and _cache_write
             # keeps max(stale_len, new_len), so stale tokens would attend)
-            self._fresh_row = self.bundle.init_caches(1, max_len, mem_len)
-        self._build_jitted()
+            self._fresh_row = self.bundle.init_caches(1, self.max_len,
+                                                      self.mem_len)
 
     # ------------------------------------------------------- device programs
     def _build_jitted(self):
         """Compile wrappers for the device-facing programs.  The sharded
-        engine overrides this with shard_map-ed equivalents; everything
-        above this line (scheduling, slot accounting, sampling) is shared.
+        engine overrides this with shard_map-ed equivalents; the scheduler
+        (serve/core.py) is shared.
         """
         # the scheduler core emits replica-LOCAL src_map rows, which only a
         # replica-aware (shard_map-ed) scatter resolves - the single-device
@@ -202,57 +142,59 @@ class ServeEngine:
 
         return jax.jit(wrapped)
 
-    # ----------------------------------------------------------------- admin
-    def _bucket(self, prompt_len: int) -> int:
-        if prompt_len <= 0:
-            raise ValueError("empty prompt: nothing to prefill")
-        for b in self.buckets:
-            if prompt_len <= b:
-                return b
-        raise ValueError(
-            f"prompt of {prompt_len} tokens exceeds the largest prefill "
-            f"bucket {self.buckets[-1]} (max_len={self.max_len}, "
-            f"patch_tokens={self.patch_tokens})")
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self.rng, k = jax.random.split(self.rng)
+        return np.asarray(jax.random.categorical(k, logits / self.temperature))
 
-    def _validate(self, prompt_len: int) -> None:
-        """Reject empty/oversized prompts up front (before any dequeue)."""
-        if self.chunked_prefill and prompt_len > self.buckets[-1]:
-            if prompt_len > self._capacity:
-                raise ValueError(
-                    f"prompt of {prompt_len} tokens exceeds the cache "
-                    f"capacity {self._capacity} (max_len={self.max_len}, "
-                    f"patch_tokens={self.patch_tokens})")
-            return
-        self._bucket(prompt_len)
+    def _extras_batch(self, batch: dict, extras) -> dict:
+        if extras:
+            # extras are shared across requests (seed semantics): broadcast
+            # their leading batch dim across the prefill rows
+            Bp = self.slots
+            batch.update(jax.tree.map(
+                lambda a: jnp.broadcast_to(jnp.asarray(a)[:1],
+                                           (Bp,) + jnp.asarray(a).shape[1:]),
+                dict(extras)))
+        return batch
 
-    def _free_total(self) -> int:
-        return sum(len(f) for f in self._free_r)
+    # ------------------------------------------------------------ exec hooks
+    def _exec_prefill(self, plan: PrefillPlan, extras) -> np.ndarray:
+        batch = self._extras_batch({"tokens": jnp.asarray(plan.tokens)},
+                                   extras)
+        logits, sub = self._prefill_many(self.params, batch,
+                                         self._prefill_pool,
+                                         jnp.asarray(plan.seq_lens))
+        self.caches = self._scatter(self.caches, sub,
+                                    jnp.asarray(plan.src_map))
+        return self._sample(logits)
 
-    def _take_slot(self, replica: int) -> int:
-        slot = self._free_r[replica].popleft()
-        self.stats["replica_occupancy"][replica] += 1
-        return slot
+    def _exec_chunked(self, plan: ChunkedPlan, extras) -> np.ndarray:
+        if extras:
+            raise NotImplementedError(
+                "chunked prefill is text-only (no vision/encdec extras)")
+        _, tokens, seq_lens = plan.first
+        logits, sub = self._prefill_many(self.params,
+                                         {"tokens": jnp.asarray(tokens)},
+                                         self._prefill_pool,
+                                         jnp.asarray(seq_lens))
+        for _, tokens, seq_lens, start_lens in plan.chunks:
+            logits, sub = self._prefill_chunk(self.params,
+                                              {"tokens": jnp.asarray(tokens)},
+                                              sub, jnp.asarray(seq_lens),
+                                              jnp.asarray(start_lens))
+        self.caches = self._scatter(self.caches, sub,
+                                    jnp.asarray(plan.src_map))
+        return self._sample(logits)
 
-    def _release_slot(self, slot: int) -> None:
-        r = slot // self.slots_per_replica
-        self._free_r[r].append(slot)
-        self.stats["replica_occupancy"][r] -= 1
+    def _exec_decode(self, plan: DecodePlan) -> np.ndarray:
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           jnp.asarray(plan.tokens),
+                                           jnp.asarray(plan.positions))
+        return self._sample(logits)
 
-    def submit(self, req: Request, extras: dict[str, Any] | None = None) -> bool:
-        """Admit the request into a free slot now; False if engine is full.
-
-        On the bucketed path this may opportunistically co-admit queued
-        same-bucket requests into the same prefill launch.
-        """
-        if not self._free_total():
-            return False
-        if not self.batch_prefill:
-            return self._submit_one(req, extras)
-        self._validate(len(req.prompt))  # validate before touching the queue
-        self.pending.appendleft(req)
-        self._admit(extras)
-        return True
-
+    # ------------------------------------------------- legacy per-request path
     def _submit_one(self, req: Request, extras) -> bool:
         """Legacy per-request prefill (benchmark baseline): slice one slot,
         prefill a batch of 1 at the EXACT prompt length (so XLA compiles a
@@ -276,226 +218,3 @@ class ServeEngine:
         self.stats["prefill_tokens"] += S
         self.stats["prefill_padded_tokens"] += S
         return True
-
-    def _activate(self, slot: int, req: Request, prompt_len: int, tok: int):
-        req.generated.append(tok)
-        if len(req.generated) >= req.max_new:
-            # prefill already produced the full budget: complete without
-            # ever occupying a decode slot (max_new=1 = pure ingest)
-            req.done = True
-            self.finished.append(req)
-            self._release_slot(slot)
-            self.stats["completed"] += 1
-            return
-        self.active[slot] = req
-        self.lengths[slot] = prompt_len + self.patch_tokens
-        self.last_tokens[slot] = tok
-
-    def _assign(self, reqs: list[Request]) -> list[list[Request]]:
-        """Route same-bucket admits to replicas, least-loaded first (most
-        free slots net of this round's assignments; FIFO within the
-        round).  Caller guarantees len(reqs) <= total free slots."""
-        per: list[list[Request]] = [[] for _ in range(self.n_replicas)]
-        for r in reqs:
-            ri = max(range(self.n_replicas),
-                     key=lambda i: (len(self._free_r[i]) - len(per[i]), -i))
-            assert len(self._free_r[ri]) > len(per[ri]), "no free slot"
-            per[ri].append(r)
-        return per
-
-    def _admit(self, extras=None) -> int:
-        """Bucket-grouped admission: ONE pass over the pending queue assigns
-        the first len(free) requests (FIFO) to per-bucket groups, then each
-        group prefills in ONE batched call spanning every replica (groups
-        launch in first-arrival order; a chunk-needing request flushes the
-        groups gathered so far and runs its chunk sequence solo).
-        O(pending) per admission call, not per batch.  Returns the number
-        of requests admitted."""
-        free = self._free_total()
-        groups: dict[int, list[Request]] = {}
-        order: list[int] = []
-        admitted = 0
-
-        def flush():
-            for b in order:
-                self._prefill_batch(self._assign(groups[b]), b, extras)
-            groups.clear()
-            order.clear()
-
-        while self.pending and admitted < free:   # consumes a queue prefix
-            r = self.pending.popleft()
-            S = len(r.prompt)
-            if self.chunked_prefill and S > self.buckets[-1]:
-                flush()                  # keep arrival order across launches
-                self._prefill_chunked(r, extras)
-                admitted += 1
-                continue
-            b = self._bucket(S)
-            if b not in groups:
-                groups[b] = []
-                order.append(b)
-            groups[b].append(r)
-            admitted += 1
-        flush()
-        return admitted
-
-    def _prefill_batch(self, per: list[list[Request]], bucket: int,
-                       extras=None):
-        """ONE multi-slot prefill spanning all replicas: right-pad the
-        prompts to ``bucket``, lay replica r's admits into rows [r*spr,
-        r*spr + len(per[r])) of a fixed ``slots``-row batch (rows beyond a
-        replica's admits are dummies the scatter drops), run ONE
-        prefill_many, then land the rows into the pooled cache with one
-        cache_scatter.  ``src_map`` carries replica-LOCAL source rows so
-        the sharded engine's per-replica scatter blocks see local indices
-        (identical to global rows when n_replicas == 1)."""
-        spr = self.slots_per_replica
-        Bp = self.slots
-        n = sum(len(g) for g in per)
-        assert 0 < n <= self._free_total()
-        tokens = np.zeros((Bp, bucket), np.int32)
-        seq_lens = np.ones((Bp,), np.int32)          # dummy rows: 1 token
-        for ri, reqs in enumerate(per):
-            for i, r in enumerate(reqs):
-                S = len(r.prompt)
-                tokens[ri * spr + i, :S] = r.prompt
-                seq_lens[ri * spr + i] = S
-        batch = {"tokens": jnp.asarray(tokens)}
-        if extras:
-            # extras are shared across requests (seed semantics): broadcast
-            # their leading batch dim across the prefill rows
-            batch.update(jax.tree.map(
-                lambda a: jnp.broadcast_to(jnp.asarray(a)[:1],
-                                           (Bp,) + jnp.asarray(a).shape[1:]),
-                dict(extras)))
-        logits, sub = self._prefill_many(self.params, batch,
-                                         self._prefill_pool,
-                                         jnp.asarray(seq_lens))
-        src_map = np.full((self.slots,), -1, np.int32)
-        placed: list[tuple[int, int, Request]] = []   # (slot, row, request)
-        for ri, reqs in enumerate(per):
-            self.stats["replica_admits"][ri] += len(reqs)
-            for i, r in enumerate(reqs):
-                slot = self._take_slot(ri)
-                src_map[slot] = i                     # replica-local row
-                placed.append((slot, ri * spr + i, r))
-        self.caches = self._scatter(self.caches, sub, jnp.asarray(src_map))
-        nxt = self._sample(logits)                   # (Bp,), dummies ignored
-        for slot, row, r in placed:
-            self._activate(slot, r, int(seq_lens[row]), int(nxt[row]))
-        self.stats["prefill_batches"] += 1
-        self.stats["prefill_requests"] += n
-        self.stats["prefill_tokens"] += int(
-            sum(len(r.prompt) for g in per for r in g))
-        self.stats["prefill_padded_tokens"] += Bp * bucket
-
-    def _prefill_chunked(self, req: Request, extras=None):
-        """Chunked prefill of ONE oversized prompt: bucket-sized chunks run
-        sequentially (chunk 1 via the normal ``prefill_many``, later chunks
-        via ``prefill_chunk`` against the accumulating rows of the spare
-        pool), then the finished row lands through the same
-        ``cache_scatter`` as a bucketed admit.  The prompt rides row 0 of
-        the least-loaded replica's block; other rows are dummies."""
-        if extras:
-            raise NotImplementedError(
-                "chunked prefill is text-only (no vision/encdec extras)")
-        spr = self.slots_per_replica
-        Bp = self.slots
-        chunk = self.buckets[-1]
-        S = len(req.prompt)
-        ri = max(range(self.n_replicas), key=lambda i: (len(self._free_r[i]), -i))
-        row = ri * spr
-        prompt = np.asarray(req.prompt)
-
-        tokens = np.zeros((Bp, chunk), np.int32)
-        seq_lens = np.ones((Bp,), np.int32)
-        tokens[row] = prompt[:chunk]
-        seq_lens[row] = chunk
-        logits, sub = self._prefill_many(self.params,
-                                         {"tokens": jnp.asarray(tokens)},
-                                         self._prefill_pool,
-                                         jnp.asarray(seq_lens))
-        self.stats["prefill_batches"] += 1
-        self.stats["prefill_padded_tokens"] += Bp * chunk
-        off = chunk
-        while off < S:
-            rem = min(chunk, S - off)
-            b = self._bucket(rem)        # ragged last chunk pads to a bucket
-            tokens = np.zeros((Bp, b), np.int32)
-            seq_lens = np.ones((Bp,), np.int32)
-            start_lens = np.zeros((Bp,), np.int32)
-            tokens[row, :rem] = prompt[off:off + rem]
-            seq_lens[row] = rem
-            start_lens[row] = off
-            logits, sub = self._prefill_chunk(self.params,
-                                              {"tokens": jnp.asarray(tokens)},
-                                              sub, jnp.asarray(seq_lens),
-                                              jnp.asarray(start_lens))
-            self.stats["chunk_batches"] += 1
-            self.stats["prefill_padded_tokens"] += Bp * b
-            off += rem
-
-        slot = self._take_slot(ri)
-        src_map = np.full((self.slots,), -1, np.int32)
-        src_map[slot] = 0                             # replica-local row 0
-        self.caches = self._scatter(self.caches, sub, jnp.asarray(src_map))
-        tok = int(self._sample(logits)[row])
-        self.stats["replica_admits"][ri] += 1
-        self._activate(slot, req, S, tok)
-        self.stats["prefill_requests"] += 1
-        self.stats["chunked_requests"] += 1
-        self.stats["prefill_tokens"] += S
-
-    def _sample(self, logits: jax.Array) -> np.ndarray:
-        if self.temperature <= 0.0:
-            return np.asarray(jnp.argmax(logits, -1))
-        self.rng, k = jax.random.split(self.rng)
-        return np.asarray(jax.random.categorical(k, logits / self.temperature))
-
-    # ---------------------------------------------------------------- decode
-    def step(self) -> int:
-        """One batched decode step over all active slots; returns #active."""
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
-            return 0
-        tokens = jnp.asarray(self.last_tokens[:, None], jnp.int32)
-        positions = jnp.asarray(self.lengths[:, None], jnp.int32)
-        logits, self.caches = self._decode(self.params, self.caches, tokens,
-                                           positions)
-        nxt = self._sample(logits)
-        self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(live)
-        for i in live:
-            req = self.active[i]
-            req.generated.append(int(nxt[i]))
-            self.lengths[i] += 1
-            self.last_tokens[i] = int(nxt[i])
-            if len(req.generated) >= req.max_new or self.lengths[i] >= self.max_len - 1:
-                req.done = True
-                self.finished.append(req)
-                self.active[i] = None
-                self._release_slot(i)    # slot freed for the next admission
-                self.stats["completed"] += 1
-        return len([r for r in self.active if r is not None])
-
-    def run(self, requests: list[Request], extras=None) -> list[Request]:
-        """Drain a request list through the engine (continuous batching).
-
-        Admission is bucket-grouped and batched (``_admit``); completion is
-        tracked incrementally: ``step`` appends each finished request to
-        ``self.finished`` as its slot frees, so draining is O(1) per
-        completion instead of rescanning the whole request list every
-        decode step.
-        """
-        for r in requests:                 # validate upfront: an oversized
-            self._validate(len(r.prompt))  # prompt must not dequeue peers
-        self.pending.extend(requests)
-        n_active = sum(r is not None for r in self.active)   # pre-submitted
-        while self.pending or n_active:
-            if self.batch_prefill:
-                self._admit(extras)
-            else:
-                while self.pending and self._free_total():
-                    self._submit_one(self.pending.popleft(), extras)
-            n_active = self.step()
-        return requests

@@ -1,0 +1,413 @@
+"""Multi-process serving: ``MultiHostServeEngine`` over a ``jax.distributed``
+mesh, with a coordinator protocol.
+
+Topology.  N OS processes each own a slice of the global device set;
+``launch/mesh.py`` lays them out contiguously along the 'data' axis of the
+('data', 'model') serve mesh, so every data-parallel replica's cache-slot
+block is addressable by exactly one process (``distributed/sharding.
+process_replicas``).  All processes execute the SAME SPMD launch sequence
+- multi-controller jax requires it - but scheduling is NOT replicated:
+
+  * **coordinator (process 0)** runs the scheduler core (serve/core.py)
+    as a host-side singleton: the pending queue, bucket grouping and
+    least-loaded replica routing live only there, exactly as on one
+    process.  Each device launch it decides is announced to the workers
+    as a COMMAND: a fixed-shape int32 header (opcode + bucket length)
+    followed by the plan's numpy payload, both shipped by a one-to-all
+    psum broadcast that blocks on every local shard (see ``_broadcast``).
+  * **workers (process > 0)** run ``serve_worker()``: receive a command,
+    execute the identical launch, repeat until CMD_STOP.  They hold no
+    scheduler state - just the global cache pool (of which they
+    physically store their replicas' shards) and the in-flight chunked
+    sub-pool.
+
+Collective fast path.  The single-process engines sample on the host,
+which forces a device->host gather of the (slots, vocab) logits; across
+processes that gather is not even addressable.  Here sampling runs
+IN-PROGRAM: argmax / categorical is fused after the shard_map body, and
+the jit's replicated out_sharding makes XLA broadcast the (slots,) sampled
+tokens to every device via an in-program all-gather - every process then
+reads the full token vector from its local shard, no host-side device
+gathers.  Because each replica's argmax runs over exactly the logits the
+single-process engine computed (PDQ column-TP epilogue included), tokens
+stay bit-exact vs ``ShardedServeEngine`` on the same logical mesh, fp and
+int8.
+
+Failure modes: a worker that dies mid-trace leaves the coordinator blocked
+in a collective - the gloo/distributed-runtime timeout (or the CI job's
+hard timeout) converts that into a visible failure, and the launcher
+(launch/serve.py --num-processes) exits non-zero when any process dies.
+A coordinator exception is propagated best-effort: ``run`` broadcasts
+CMD_ABORT from a ``finally`` so workers raise instead of waiting forever
+at the next header rendezvous.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (make_global, pool_shardings,
+                                        process_replicas, serve_pool_specs)
+
+from .core import ChunkedPlan, DecodePlan, PrefillPlan
+from .engine import DEFAULT_BUCKETS
+from .sharded import ShardedServeEngine
+
+# coordinator -> worker opcodes (header: int32[2] = [op, bucket_len])
+CMD_STOP = 0
+CMD_PREFILL = 1        # payload: tokens (slots, L), seq_lens, src_map
+CMD_CHUNK_FIRST = 2    # payload: tokens (slots, L), seq_lens
+CMD_CHUNK_NEXT = 3     # payload: tokens (slots, L), seq_lens, start_lens
+CMD_CHUNK_END = 4      # payload: src_map
+CMD_DECODE = 5         # payload: tokens (slots, 1), positions (slots, 1)
+CMD_ABORT = 6          # coordinator died: workers raise
+
+
+class MultiHostServeEngine(ShardedServeEngine):
+    """ShardedServeEngine over a multi-process ('data', 'model') mesh.
+
+    Every process constructs the engine with IDENTICAL arguments (params
+    are host-replicated: same init seed or same checkpoint).  Process 0
+    then drives ``run(requests)``; every other process calls
+    ``serve_worker()`` and follows the broadcast command stream.  Call
+    ``stop_workers()`` on the coordinator when the engine is done so the
+    workers' loops return.
+
+    Text-only (no vision/encdec extras: their side inputs are not part of
+    the command protocol yet).  Temperature sampling runs in-program from
+    a per-launch key split deterministically from ``rng`` on every
+    process; the stream matches the single-process engine's except under
+    chunked prefill (one split per chunk launch vs one per sequence).
+    """
+
+    def __init__(self, cfg, params, *, mesh, slots_per_replica: int = 4,
+                 max_len: int = 256, quantize_weights: bool = False,
+                 temperature: float = 0.0, rng: jax.Array | None = None,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 chunked_prefill: bool = False):
+        if cfg.frontend == "vision" or cfg.family == "encdec":
+            raise NotImplementedError(
+                "multi-host serving is text-only: vision/encdec extras are "
+                "not part of the coordinator command protocol")
+        self.n_processes = jax.process_count()
+        self.process_id = jax.process_index()
+        self.is_coordinator = self.process_id == 0
+        data = int(mesh.shape["data"])
+        if data % self.n_processes:
+            # a mesh row straddling a process boundary would make the TP
+            # all_gather a cross-process collective and break the
+            # replica->process slot-state attribution
+            raise ValueError(
+                f"mesh 'data' axis ({data}) must divide over the "
+                f"{self.n_processes} jax.distributed processes")
+        self._chunk_sub = None
+        self._stopped = False
+        super().__init__(cfg, params, mesh=mesh,
+                         slots_per_replica=slots_per_replica, max_len=max_len,
+                         quantize_weights=quantize_weights,
+                         temperature=temperature, rng=rng, buckets=buckets,
+                         chunked_prefill=chunked_prefill)
+        # replica -> owning process, for per-host stats and routing debug
+        self.host_replicas = process_replicas(self.mesh)
+        if self.n_processes > 1:
+            self._build_broadcast()
+
+    # ------------------------------------------------------- device programs
+    def _init_pools(self):
+        """Shape-only stand-ins: _build_jitted reads the pool tree
+        structure (specs/shardings) and then allocates the real pools
+        directly on the global mesh - materializing host zeros here would
+        be two full pool allocations thrown away per process."""
+        self.caches = jax.eval_shape(
+            lambda: self.bundle.init_caches(self.slots, self.max_len,
+                                            self.mem_len))
+        self._prefill_pool = self.caches
+
+    def _build_jitted(self):
+        cs = serve_pool_specs(self.caches)
+        dp = P("data")
+        pool_sh = pool_shardings(self.mesh, self.caches)
+        repl = NamedSharding(self.mesh, P())
+
+        # long-lived global buffers.  Params: every process holds the same
+        # host values; make_global donates each process's addressable
+        # (replicated) shards.  Cache pools: allocated directly on the mesh
+        # by a sharded-output jit - a device_put of the process-local zeros
+        # cannot address the other processes' shards.
+        self.params = jax.tree.map(
+            lambda x: make_global(self.mesh, P(), np.asarray(x)), self.params)
+        mk_pool = jax.jit(
+            lambda: self.bundle.init_caches(self.slots, self.max_len,
+                                            self.mem_len),
+            out_shardings=pool_sh)
+        self.caches = mk_pool()
+        self._prefill_pool = mk_pool()
+
+        temp = self.temperature
+
+        def sample(logits, key):
+            if temp <= 0.0:
+                return jnp.argmax(logits, -1)
+            return jax.random.categorical(key, logits / temp)
+
+        def sampled(fn, in_specs):
+            """shard_map(fn) (TP active inside) returning (sampled tokens,
+            caches): logits stay sharded over 'data', the argmax runs per
+            replica, and the replicated out_sharding broadcasts the
+            (slots,) tokens to every device in-program."""
+            mapped = self._sharded(fn, in_specs, (dp, cs))
+
+            def prog(key, *args):
+                logits, caches = mapped(*args)
+                return sample(logits, key), caches
+
+            return prog
+
+        def traced(fn, counter, **jit_kw):
+            stats = self.stats
+
+            def wrapped(*args):
+                if counter:
+                    stats[counter] += 1      # trace-time side effect
+                return fn(*args)
+
+            return jax.jit(wrapped, **jit_kw)
+
+        self._decode = traced(
+            sampled(self.bundle.decode_step, (P(), cs, dp, dp)),
+            "decode_compiles", out_shardings=(repl, pool_sh))
+        self._prefill_many = traced(
+            sampled(self.bundle.prefill_many, (P(), dp, cs, dp)),
+            "prefill_compiles", out_shardings=(repl, pool_sh))
+        self._prefill_chunk = traced(
+            sampled(self.bundle.prefill_chunk, (P(), dp, cs, dp, dp)),
+            "chunk_compiles", out_shardings=(repl, pool_sh))
+        self._scatter = self._traced_sharded_jit(
+            self.bundle.cache_scatter, None,
+            in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
+        self._prefill_one = None
+
+    # --------------------------------------------------------- the protocol
+    # Coordinator -> worker shipping is a psum-based one-to-all broadcast
+    # (workers contribute zeros), like multihost_utils.broadcast_one_to_all
+    # BUT blocked on EVERY local shard before returning.  Gloo matches
+    # collective ops on a TCP device pair by posting order, and an op only
+    # sequences a device that DEPENDS on it: blocking just the first local
+    # shard (what np.asarray does) lets the other local devices' tail
+    # collectives drain into the next program's ops and cross-pair them -
+    # observed as gloo preamble-size aborts.  Every launch here therefore
+    # blocks all addressable shards of anything carrying a collective
+    # before the next program is dispatched.
+    def _glob(self, x, spec):
+        return make_global(self.mesh, spec, x)
+
+    def _next_key(self):
+        """Per-launch sampling key, split identically on every process (all
+        start from the same ``rng`` and execute the same launch stream)."""
+        self.rng, k = jax.random.split(self.rng)
+        return self._glob(np.asarray(k), P())
+
+    def _build_broadcast(self):
+        devs = np.array(jax.devices()).reshape(self.n_processes,
+                                               jax.local_device_count())
+        self._bc_mesh = Mesh(devs, ("proc", "dev"))
+        self._bc_jit = jax.jit(
+            lambda tree: jax.tree.map(lambda x: jnp.sum(x, axis=0), tree),
+            out_shardings=NamedSharding(self._bc_mesh, P()))
+
+    def _broadcast(self, arrays: tuple) -> list[np.ndarray]:
+        """Ship the coordinator's int32 arrays to every process.  All
+        processes must call with equal shapes (workers pass templates)."""
+        if self.n_processes == 1:
+            return [np.asarray(a, np.int32) for a in arrays]
+
+        def pre(x):
+            x = np.asarray(x, np.int32)
+            full = np.zeros((self.n_processes,) + x.shape, np.int32)
+            if self.is_coordinator:
+                full[0] = x              # workers sum in their zero rows
+            return make_global(self._bc_mesh, P("proc"), full)
+
+        out = self._bc_jit(tuple(pre(a) for a in arrays))
+        jax.block_until_ready(out)       # every local shard, see above
+        return [np.asarray(x.addressable_data(0)) for x in out]
+
+    def _cmd(self, op: int, arg: int = 0) -> None:
+        if not self.is_coordinator:
+            # a worker that drives scheduling (submit()/run()) would
+            # contribute zero rows to its own command broadcast and hang
+            # or desync the fleet - fail loudly at the first command
+            raise RuntimeError(
+                f"process {self.process_id} is a worker: only the "
+                "coordinator (process 0) issues commands; call "
+                "serve_worker() here")
+        self._broadcast((np.asarray([op, arg], np.int32),))
+
+    def _recv_cmd(self) -> tuple[int, int]:
+        out, = self._broadcast((np.zeros((2,), np.int32),))
+        if int(out[0]) == CMD_ABORT:
+            raise RuntimeError("multi-host serve coordinator aborted")
+        return int(out[0]), int(out[1])
+
+    def _send(self, arrays: list[np.ndarray]) -> None:
+        self._broadcast(tuple(arrays))
+
+    def _recv(self, shapes: list[tuple[int, ...]]) -> list[np.ndarray]:
+        return self._broadcast(tuple(np.zeros(s, np.int32) for s in shapes))
+
+    # ------------------------------------------------- shared launch bodies
+    # Each _do_* runs on EVERY process with identical host arrays (the
+    # coordinator's plan, either local or just received) and performs the
+    # same global-mesh launch; the replicated sampled-token output is
+    # locally addressable everywhere.
+    def _do_prefill(self, tokens, seq_lens, src_map) -> np.ndarray:
+        key = self._next_key()
+        nxt, sub = self._prefill_many(
+            key, self.params, {"tokens": self._glob(tokens, P("data"))},
+            self._prefill_pool, self._glob(seq_lens, P("data")))
+        self.caches = self._scatter(self.caches, sub,
+                                    self._glob(src_map, P("data")))
+        jax.block_until_ready((nxt, self.caches))
+        return np.asarray(nxt)
+
+    def _do_chunk_first(self, tokens, seq_lens) -> np.ndarray:
+        key = self._next_key()
+        nxt, self._chunk_sub = self._prefill_many(
+            key, self.params, {"tokens": self._glob(tokens, P("data"))},
+            self._prefill_pool, self._glob(seq_lens, P("data")))
+        jax.block_until_ready((nxt, self._chunk_sub))
+        return np.asarray(nxt)
+
+    def _do_chunk_next(self, tokens, seq_lens, start_lens) -> np.ndarray:
+        key = self._next_key()
+        nxt, self._chunk_sub = self._prefill_chunk(
+            key, self.params, {"tokens": self._glob(tokens, P("data"))},
+            self._chunk_sub, self._glob(seq_lens, P("data")),
+            self._glob(start_lens, P("data")))
+        jax.block_until_ready((nxt, self._chunk_sub))
+        return np.asarray(nxt)
+
+    def _do_chunk_end(self, src_map) -> None:
+        self.caches = self._scatter(self.caches, self._chunk_sub,
+                                    self._glob(src_map, P("data")))
+        jax.block_until_ready(self.caches)
+        self._chunk_sub = None
+
+    def _do_decode(self, tokens, positions) -> np.ndarray:
+        key = self._next_key()
+        nxt, self.caches = self._decode(key, self.params, self.caches,
+                                        self._glob(tokens, P("data")),
+                                        self._glob(positions, P("data")))
+        jax.block_until_ready((nxt, self.caches))
+        return np.asarray(nxt)
+
+    # --------------------------------------------------- coordinator driver
+    def _exec_prefill(self, plan: PrefillPlan, extras) -> np.ndarray:
+        if extras:
+            raise NotImplementedError("multi-host serving takes no extras")
+        self._cmd(CMD_PREFILL, plan.bucket)
+        self._send([plan.tokens, plan.seq_lens, plan.src_map])
+        return self._do_prefill(plan.tokens, plan.seq_lens, plan.src_map)
+
+    def _exec_chunked(self, plan: ChunkedPlan, extras) -> np.ndarray:
+        if extras:
+            raise NotImplementedError("multi-host serving takes no extras")
+        b, tokens, seq_lens = plan.first
+        self._cmd(CMD_CHUNK_FIRST, b)
+        self._send([tokens, seq_lens])
+        nxt = self._do_chunk_first(tokens, seq_lens)
+        for b, tokens, seq_lens, start_lens in plan.chunks:
+            self._cmd(CMD_CHUNK_NEXT, b)
+            self._send([tokens, seq_lens, start_lens])
+            nxt = self._do_chunk_next(tokens, seq_lens, start_lens)
+        self._cmd(CMD_CHUNK_END)
+        self._send([plan.src_map])
+        self._do_chunk_end(plan.src_map)
+        return nxt
+
+    def _exec_decode(self, plan: DecodePlan) -> np.ndarray:
+        self._cmd(CMD_DECODE)
+        self._send([plan.tokens, plan.positions])
+        return self._do_decode(plan.tokens, plan.positions)
+
+    def _validate_extras(self, prompt_len: int, extras) -> None:
+        # entry-point rejection, BEFORE anything queues or a plan claims
+        # a slot (the _exec_* backstops would leak it); unreachable for
+        # well-formed use, since __init__ refuses vision/encdec configs
+        if extras:
+            raise NotImplementedError("multi-host serving takes no extras")
+
+    def run(self, requests, extras=None):
+        if not self.is_coordinator:
+            raise RuntimeError(
+                f"process {self.process_id} is a worker: call "
+                "serve_worker(), only process 0 drives run()")
+        if extras:
+            self._validate_extras(0, extras)   # even for an empty trace
+        try:
+            return super().run(requests, extras)
+        except BaseException:
+            # best-effort: unblock workers waiting at the next header
+            # rendezvous (a worker already desynced inside a payload
+            # collective is covered by the runtime/CI timeout instead).
+            # The workers then EXIT, so mark the fleet stopped - a
+            # `finally: stop_workers()` cleanup must not broadcast into
+            # dead peers and hang on the gloo timeout.
+            try:
+                self._cmd(CMD_ABORT)
+            except Exception:
+                pass               # peer already gone: keep the original error
+            finally:
+                self._stopped = True
+            raise
+
+    def stop_workers(self) -> None:
+        """Release the worker loops; the engine stays usable for stats."""
+        if self.is_coordinator and not self._stopped:
+            self._cmd(CMD_STOP)
+            self._stopped = True
+
+    # --------------------------------------------------------- worker loop
+    def serve_worker(self) -> None:
+        """Follow the coordinator's command stream until CMD_STOP."""
+        assert not self.is_coordinator, "process 0 is the coordinator"
+        S = self.slots
+        while True:
+            op, L = self._recv_cmd()
+            if op == CMD_STOP:
+                return
+            if op == CMD_PREFILL:
+                t, sl, m = self._recv([(S, L), (S,), (S,)])
+                self._do_prefill(t, sl, m)
+            elif op == CMD_CHUNK_FIRST:
+                t, sl = self._recv([(S, L), (S,)])
+                self._do_chunk_first(t, sl)
+            elif op == CMD_CHUNK_NEXT:
+                t, sl, st = self._recv([(S, L), (S,), (S,)])
+                self._do_chunk_next(t, sl, st)
+            elif op == CMD_CHUNK_END:
+                m, = self._recv([(S,)])
+                self._do_chunk_end(m)
+            elif op == CMD_DECODE:
+                t, p = self._recv([(S, 1), (S, 1)])
+                self._do_decode(t, p)
+            else:
+                raise RuntimeError(f"unknown multi-host serve opcode {op}")
+
+    # ------------------------------------------------------ per-host stats
+    def host_stats(self) -> dict[int, dict[str, int]]:
+        """Coordinator-side admit/occupancy totals per OWNING process,
+        derived from the replica->process map (the scheduler only exists
+        on process 0, so these are its authoritative counters)."""
+        out: dict[int, dict[str, int]] = {}
+        for proc, reps in self.host_replicas.items():
+            out[proc] = {
+                "replicas": len(reps),
+                "admits": sum(self.stats["replica_admits"][r] for r in reps),
+                "occupied": sum(self.stats["replica_occupancy"][r]
+                                for r in reps),
+                "slots": len(reps) * self.slots_per_replica,
+            }
+        return out

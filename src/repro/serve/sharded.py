@@ -37,13 +37,19 @@ jax device mesh with axes ``('data', 'model')``:
 CPU CI exercises the whole engine on a virtual mesh via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
 tests/test_serve_sharded.py).
+
+The scheduler itself lives in ``serve/core.py`` (plan builders + result
+appliers); this class only rebinds the three exec hooks' device programs
+to shard_map-ed equivalents.  ``serve/multihost.py`` extends THIS engine
+to real ``jax.distributed`` multi-process meshes by shipping the plans
+to worker processes.
 """
 from __future__ import annotations
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import serve_pool_specs
+from repro.distributed.sharding import pool_shardings, serve_pool_specs
 from repro.kernels import ops
 from repro.models.context import shard_map
 
@@ -121,9 +127,8 @@ class ShardedServeEngine(ServeEngine):
         # place the long-lived buffers once: params replicated over the
         # whole mesh, cache pools with their slot axis over 'data' (later
         # launches then never re-transfer them from the host)
-        repl = NamedSharding(self.mesh, P())
-        self.params = jax.device_put(self.params, repl)
-        pool_sh = jax.tree.map(lambda s: NamedSharding(self.mesh, s), cs,
-                               is_leaf=lambda x: isinstance(x, P))
+        self.params = jax.device_put(self.params,
+                                     NamedSharding(self.mesh, P()))
+        pool_sh = pool_shardings(self.mesh, self.caches)
         self.caches = jax.device_put(self.caches, pool_sh)
         self._prefill_pool = jax.device_put(self._prefill_pool, pool_sh)

@@ -1,0 +1,111 @@
+"""benchmarks/_compare.py: the CI bench regression gate, itself pinned.
+
+Every BENCH_*.json smoke step stands on ``compare()`` returning the right
+exit code; a silent bug here (gate that never fails, or one that crashes
+on a mangled committed baseline) would disable the perf trajectory checks
+without anyone noticing.  Cases: pass, >25% geomean regression, improved
+speedup, unmatched cells, malformed/corrupt baselines, backend skip.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks"))
+from _compare import compare  # noqa: E402
+
+KEYS = ("requests", "slots")
+
+
+def _result(cells, backend="cpu"):
+    return {"meta": {"backend": backend}, "cells": cells}
+
+
+def _cell(requests, slots, speedup):
+    return {"requests": requests, "slots": slots, "speedup": speedup}
+
+
+def _baseline(tmp_path, payload, raw: str | None = None):
+    p = tmp_path / "baseline.json"
+    p.write_text(raw if raw is not None else json.dumps(payload))
+    return str(p)
+
+
+def test_matching_speedups_pass(tmp_path):
+    cells = [_cell(8, 4, 2.0), _cell(16, 4, 3.0)]
+    path = _baseline(tmp_path, _result(cells))
+    assert compare(_result(cells), path, KEYS) == 0
+
+
+def test_within_threshold_passes_and_beyond_fails(tmp_path):
+    path = _baseline(tmp_path, _result([_cell(8, 4, 2.0)]))
+    # -20% geomean: inside the 25% budget
+    assert compare(_result([_cell(8, 4, 1.6)]), path, KEYS) == 0
+    # -30%: regression
+    assert compare(_result([_cell(8, 4, 1.4)]), path, KEYS) == 1
+
+
+def test_geomean_absorbs_one_noisy_cell_but_not_systemic_loss(tmp_path):
+    base = [_cell(8, 4, 2.0), _cell(16, 4, 2.0), _cell(24, 8, 2.0)]
+    path = _baseline(tmp_path, _result(base))
+    one_bad = [_cell(8, 4, 1.3), _cell(16, 4, 2.0), _cell(24, 8, 2.0)]
+    assert compare(_result(one_bad), path, KEYS) == 0
+    all_bad = [_cell(r, s, 1.3) for r, s, _ in
+               [(8, 4, 0), (16, 4, 0), (24, 8, 0)]]
+    assert compare(_result(all_bad), path, KEYS) == 1
+
+
+def test_improvement_passes(tmp_path):
+    path = _baseline(tmp_path, _result([_cell(8, 4, 2.0)]))
+    assert compare(_result([_cell(8, 4, 5.0)]), path, KEYS) == 0
+
+
+def test_unmatched_cells_warn_but_do_not_fail(tmp_path):
+    """A sweep whose shapes don't intersect the baseline checks nothing -
+    that must be a visible no-op, not a pass/fail coin flip."""
+    path = _baseline(tmp_path, _result([_cell(999, 2, 2.0)]))
+    assert compare(_result([_cell(8, 4, 0.01)]), path, KEYS) == 0
+
+
+def test_partial_match_only_scores_matched_cells(tmp_path):
+    path = _baseline(tmp_path, _result([_cell(8, 4, 2.0)]))
+    cur = [_cell(8, 4, 2.0), _cell(64, 32, 0.01)]   # extra cell: ignored
+    assert compare(_result(cur), path, KEYS) == 0
+
+
+def test_backend_mismatch_skips(tmp_path):
+    """A TPU baseline checked from a CPU CI host is a skip, not a fail."""
+    path = _baseline(tmp_path, _result([_cell(8, 4, 9.0)], backend="tpu"))
+    assert compare(_result([_cell(8, 4, 1.0)]), path, KEYS) == 0
+
+
+@pytest.mark.parametrize("raw", [
+    "{not json",                                        # corrupt file
+    json.dumps({"meta": {"backend": "cpu"}}),           # no cells
+    json.dumps({"meta": {"backend": "cpu"},
+                "cells": [{"requests": 8, "slots": 4}]}),   # no speedup
+    json.dumps({"meta": {"backend": "cpu"},
+                "cells": [{"requests": 8, "slots": 4,
+                           "speedup": "fast"}]}),       # non-numeric speedup
+    json.dumps({"meta": {"backend": "cpu"},
+                "cells": [{"requests": 8, "slots": 4,
+                           "speedup": "2.0"}]}),        # numeric STRING: log()
+                                                        # would TypeError
+    json.dumps({"meta": {"backend": "cpu"},
+                "cells": [{"requests": 8, "slots": 4,
+                           "speedup": 0.0}]}),          # log(0): domain error
+    json.dumps({"meta": {"backend": "cpu"},
+                "cells": [{"speedup": 2.0}]}),          # missing shape keys
+])
+def test_malformed_baseline_fails_loudly(tmp_path, raw):
+    """A mangled committed baseline must FAIL the gate with a message -
+    crashing (or silently passing) would disable the regression check."""
+    path = _baseline(tmp_path, None, raw=raw)
+    assert compare(_result([_cell(8, 4, 2.0)]), path, KEYS) == 1
+
+
+def test_missing_baseline_file_fails_loudly(tmp_path):
+    assert compare(_result([_cell(8, 4, 2.0)]),
+                   str(tmp_path / "nope.json"), KEYS) == 1

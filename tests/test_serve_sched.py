@@ -334,6 +334,27 @@ def test_chunked_prefill_matches_unchunked(arch):
     assert eng.stats["chunk_compiles"] <= len(eng.buckets)
 
 
+def test_chunked_extras_rejected_without_leaking_the_slot(small_model):
+    """Chunked prefill is text-only; the rejection must fire at the
+    run()/submit() ENTRY - raising mid-admission would leak the planned
+    slot and silently drop already-dequeued same-round peers."""
+    cfg, m, params = small_model
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8,),
+                      chunked_prefill=True)
+    extras = {"patches": np.zeros((1, 2, 4), np.float32)}
+    short, oversized = _requests(cfg, [5, 20])    # 20 needs chunking
+    with pytest.raises(NotImplementedError, match="text-only"):
+        eng.run([short, oversized], extras=extras)
+    assert eng._free_total() == 2          # no slot leaked
+    assert eng.stats["replica_occupancy"] == [0]
+    assert not eng.pending                 # nothing queued, nothing dropped
+    with pytest.raises(NotImplementedError, match="text-only"):
+        eng.submit(oversized, extras=extras)
+    assert eng._free_total() == 2
+    eng.run([short, oversized])            # engine stays fully usable
+    assert short.done and oversized.done
+
+
 def test_chunked_prefill_rejects_beyond_capacity(small_model):
     """Chunking lifts the bucket limit, not the cache capacity: a prompt
     that cannot fit max_len (with the first decode slot reserved) still
@@ -415,6 +436,87 @@ def test_moe_bucketed_prefill_pad_invariant_under_tight_capacity():
     np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(outs[1][0]))
     for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_dummy_rows_claim_no_expert_capacity():
+    """PR-5 fix for the ROADMAP caveat: a DUMMY row of a partially-filled
+    prefill batch must route NOTHING - under the old convention its one
+    'real' token claimed an expert-capacity slot ahead of later rows'
+    real tokens, which at capacity_factor=1.0 evicts them."""
+    from repro.models.moe import MoEConfig, moe_ffn_tokens, moe_init, route
+
+    cfg = dataclasses.replace(
+        MoEConfig(n_experts=4, top_k=1, d_ff_expert=8), capacity_factor=1.0)
+    p = moe_init(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
+    routed = {k: p[k] for k in ("router", "we_gate", "we_up", "we_down")}
+
+    # route(): an all-masked row contributes only sentinel ids (== E) and
+    # zero gates, so _bucket drops every one of its assignments
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 16)),
+                    jnp.float32)
+    gates, ids, _ = route(x, p["router"], cfg, jnp.zeros((8,), bool))
+    assert np.all(np.asarray(ids) == cfg.n_experts)
+    assert np.all(np.asarray(gates) == 0.0)
+
+    # capacity: 16 tokens, E=4, k=1, cf=1.0 -> C=4.  The dummy block leads
+    # (replica-interleaved layout) and its tokens' router inputs EQUAL the
+    # real tokens', so any dummy claim steals exactly a real token's slot.
+    rng = np.random.default_rng(1)
+    real = jnp.asarray(np.repeat(rng.standard_normal((1, 16)), 8, axis=0),
+                       jnp.float32)
+    dummy = real                                 # same routing as the reals
+    batch = jnp.concatenate([dummy, real], axis=0)
+    new_mask = jnp.asarray([False] * 8 + [True] * 8)     # dummy row: nothing
+    old_mask = jnp.asarray([True] + [False] * 7 + [True] * 8)  # old: 1 token
+
+    def reals_out(mask):
+        y, _ = moe_ffn_tokens(routed, batch, cfg, token_mask=mask)
+        return np.asarray(y[8:])
+
+    want = reals_out(new_mask)
+    assert not np.array_equal(want, reals_out(old_mask)), (
+        "expected the old one-token dummy claim to evict a real token at "
+        "capacity_factor=1.0 (the regression this test pins)")
+    # dummy CONTENT is also inert once fully masked
+    junk = jnp.concatenate([dummy + 3.0, real], axis=0)
+    y2, _ = moe_ffn_tokens(routed, junk, cfg, token_mask=new_mask)
+    np.testing.assert_array_equal(want, np.asarray(y2[8:]))
+
+
+def test_engine_dummy_rows_have_zero_seq_len_and_are_inert(small_model):
+    """The scheduler emits seq_lens == 0 for dummy rows, and prefill_many
+    threads that through to a fully-masked row: at capacity_factor=1.0 on
+    a MoE arch, real rows' logits are bit-identical whether the dummy row
+    sits BETWEEN them (a multi-replica plan's interleaved layout) or at
+    the end (the packed single-replica layout)."""
+    cfg, m, params = small_model
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16))
+    plan = eng._plan_prefill(eng._assign(_requests(cfg, [5])), 8)
+    assert list(plan.seq_lens) == [5, 0, 0, 0]
+    assert list(plan.src_map) == [0, -1, -1, -1]
+
+    mcfg = reduced_config("deepseek-v2-236b")
+    mcfg = dataclasses.replace(
+        mcfg, moe=dataclasses.replace(mcfg.moe, capacity_factor=1.0))
+    mm = build_model(mcfg)
+    mp = mm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    p1 = rng.integers(0, mcfg.vocab, 4).astype(np.int32)
+    p2 = rng.integers(0, mcfg.vocab, 7).astype(np.int32)
+
+    def prefill(seq_lens, rows):
+        toks = np.zeros((3, 8), np.int32)
+        for r, pr in rows.items():
+            toks[r, :len(pr)] = pr
+        lg, _ = mm.prefill_many(mp, {"tokens": jnp.asarray(toks)},
+                                mm.init_caches(3, 32, 0),
+                                jnp.asarray(seq_lens, jnp.int32))
+        return np.asarray(lg)
+
+    mid = prefill([4, 0, 7], {0: p1, 2: p2})
+    end = prefill([4, 7, 0], {0: p1, 1: p2})
+    np.testing.assert_array_equal(mid[0], end[0])
+    np.testing.assert_array_equal(mid[2], end[1])
 
 
 # ---------------------------------------------------------------------------
