@@ -85,6 +85,68 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ---------------------------------------------------------------------------
+# Guarded PDQ fallback (fault tolerance)
+# ---------------------------------------------------------------------------
+#
+# A corrupted int8 epilogue (bad surrogate interval, overflowed requant
+# grid, a flipped bit in the weight record) shows up as NaN/Inf in the
+# projection output.  With ``pdq_guard`` active while tracing, every PDQ
+# fp-out projection checks its result device-side and - per projection,
+# per launch - falls back to the plain fp-dequant matmul
+# ``x @ (q * scale)`` when any element is non-finite.  The fallback branch
+# is pure jnp (no pallas_call), so guarded programs keep the exact kernel
+# census of unguarded ones; the finite check is one fused reduction per
+# projection.  Engines opt in with ``pdq_fallback=True``.
+
+_PDQ_GUARD = False
+_PDQ_FAULT = False      # test hook: corrupt every fast-path result
+
+
+@contextlib.contextmanager
+def pdq_guard(enable: bool = True):
+    """Enable the per-projection PDQ->fp-dequant fallback while tracing."""
+    global _PDQ_GUARD
+    prev = _PDQ_GUARD
+    _PDQ_GUARD = bool(enable)
+    try:
+        yield
+    finally:
+        _PDQ_GUARD = prev
+
+
+@contextlib.contextmanager
+def pdq_fault():
+    """Test-only: poison every guarded fast-path output with NaN while
+    tracing, so the fallback branch is forced to carry the computation."""
+    global _PDQ_FAULT
+    prev = _PDQ_FAULT
+    _PDQ_FAULT = True
+    try:
+        yield
+    finally:
+        _PDQ_FAULT = prev
+
+
+def _fp_dequant_matmul(x, w_q, scale, out_dtype):
+    """The always-available fallback precision: dequantize the int8 weight
+    and run the projection in fp32.  No PDQ prologue, no requant grid - the
+    only state it shares with the fast path is the weight record itself."""
+    w = w_q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def _guard_pdq(y, x, w_q, scale, out_dtype):
+    """y if finite else the fp-dequant fallback (no-op unless pdq_guard)."""
+    if not _PDQ_GUARD:
+        return y
+    if _PDQ_FAULT:
+        y = y + jnp.float32(jnp.nan).astype(y.dtype)
+    return jax.lax.cond(jnp.isfinite(y).all(),
+                        lambda: y,
+                        lambda: _fp_dequant_matmul(x, w_q, scale, out_dtype))
+
+
 def _pad_to(a: jax.Array, axis: int, mult: int, value=0):
     size = a.shape[axis]
     pad = (-size) % mult
@@ -290,15 +352,20 @@ def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
         ax, T = _TP
         idx = jax.lax.axis_index(ax)
         Nl = N // T
-        y = w8a8_matmul(x_q, _tp_cols(wrec["q"], Nl, idx, 1), s_x, 0,
-                        _tp_cols(wrec["scale"], Nl, idx, 0),
+        wq_l = _tp_cols(wrec["q"], Nl, idx, 1)
+        sc_l = _tp_cols(wrec["scale"], Nl, idx, 0)
+        y = w8a8_matmul(x_q, wq_l, s_x, 0, sc_l,
                         colsum=_tp_cols(wrec["colsum"], Nl, idx, 1),
                         fp_range=(lo_g, hi_g), out_dtype=out_dtype, block=block)
+        # guard BEFORE the all-gather: each shard checks and (if needed)
+        # recomputes only its own columns, so one corrupted shard cannot
+        # spread non-finite values through the gathered concatenation.
+        y = _guard_pdq(y, x, wq_l, sc_l, out_dtype)
         return jax.lax.all_gather(y, ax, axis=y.ndim - 1, tiled=True)
     y = w8a8_matmul(x_q, wrec["q"], s_x, 0, wrec["scale"],
                     colsum=wrec["colsum"], fp_range=(lo_g, hi_g),
                     out_dtype=out_dtype, block=block)
-    return y
+    return _guard_pdq(y, x, wrec["q"], wrec["scale"], out_dtype)
 
 
 def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
@@ -352,18 +419,21 @@ def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
         idx = jax.lax.axis_index(ax)
         nb_l, Nl = nb // T, segs.total // T
         lo_b, hi_b = blockwise(lo_g), blockwise(hi_g)
-        y = w8a8_matmul(x_q, _tp_cols(grec["q"], Nl, idx, 1), s_x, 0,
-                        _tp_cols(grec["scale"], Nl, idx, 0),
+        wq_l = _tp_cols(grec["q"], Nl, idx, 1)
+        sc_l = _tp_cols(grec["scale"], Nl, idx, 0)
+        y = w8a8_matmul(x_q, wq_l, s_x, 0, sc_l,
                         colsum=_tp_cols(grec["colsum"], Nl, idx, 1),
                         fp_range=(_tp_cols(lo_b, nb_l, idx, lo_b.ndim - 1),
                                   _tp_cols(hi_b, nb_l, idx, hi_b.ndim - 1)),
                         out_dtype=out_dtype, block=block)
+        y = _guard_pdq(y, x, wq_l, sc_l, out_dtype)
         y = jax.lax.all_gather(y, ax, axis=y.ndim - 1, tiled=True)
         return tuple(y[..., o:o + n] for o, n in bounds)
     y = w8a8_matmul(x_q, grec["q"], s_x, 0, grec["scale"],
                     colsum=grec["colsum"],
                     fp_range=(blockwise(lo_g), blockwise(hi_g)),
                     out_dtype=out_dtype, block=block)
+    y = _guard_pdq(y, x, grec["q"], grec["scale"], out_dtype)
     return tuple(y[..., o:o + n] for o, n in bounds)
 
 

@@ -108,30 +108,64 @@ def bootstrap_mesh_env(argv) -> None:
             f"{flags} --xla_force_host_platform_device_count={want}").strip()
 
 
-def pick_coordinator(addr: str | None) -> str:
+def pick_coordinator(addr: str | None, *, attempts: int = 5) -> str:
     """``addr`` if given, else 127.0.0.1 with a fresh OS-assigned port:
     two concurrent multi-process fleets on one host (overlapping bench
     runs, a retry racing a hung predecessor) must not rendezvous with
-    each other's coordination service."""
+    each other's coordination service.  The ephemeral bind is retried
+    (bounded) so transient EADDRINUSE under heavy concurrent CI does not
+    kill the launcher."""
     if addr:
         return addr
     import socket
-    with socket.socket() as s:
-        s.bind(("127.0.0.1", 0))
-        return f"127.0.0.1:{s.getsockname()[1]}"
+    import time as _time
+    for attempt in range(attempts):
+        try:
+            with socket.socket() as s:
+                s.bind(("127.0.0.1", 0))
+                return f"127.0.0.1:{s.getsockname()[1]}"
+        except OSError:
+            if attempt == attempts - 1:
+                raise
+            _time.sleep(0.2 * (2 ** attempt))
+    raise AssertionError("unreachable")
 
 
 def init_distributed(coordinator: str, num_processes: int,
-                     process_id: int) -> None:
+                     process_id: int, *, attempts: int = 3,
+                     backoff: float = 1.0) -> None:
     """``jax.distributed`` bootstrap for one serve process: CPU collectives
     go through gloo (the CPU client's only cross-process implementation),
     then the coordination service connects this process to its peers.
-    Must run before the first device query."""
+    Must run before the first device query.
+
+    The initialize is retried with exponential backoff (bounded): the
+    coordination-service port can be mid-release from a previous fleet
+    (TIME_WAIT) or the coordinator child can come up a beat after a
+    worker - both transient, both previously fatal."""
     import jax as _jax
     if os.environ.get("JAX_PLATFORMS", "cpu") == "cpu":
         _jax.config.update("jax_cpu_collectives_implementation", "gloo")
-    _jax.distributed.initialize(coordinator, num_processes=num_processes,
-                                process_id=process_id)
+    for attempt in range(attempts):
+        try:
+            _jax.distributed.initialize(coordinator,
+                                        num_processes=num_processes,
+                                        process_id=process_id)
+            return
+        except Exception as e:
+            if attempt == attempts - 1:
+                raise
+            import sys as _sys
+            import time as _time
+            try:                       # drop any half-open connection state
+                _jax.distributed.shutdown()
+            except Exception:
+                pass
+            delay = backoff * (2 ** attempt)
+            print(f"init_distributed: attempt {attempt + 1}/{attempts} "
+                  f"failed ({e!r}); retrying in {delay:.1f}s",
+                  file=_sys.stderr, flush=True)
+            _time.sleep(delay)
 
 
 def make_serve_mesh(data: int, model: int):

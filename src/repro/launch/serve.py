@@ -31,12 +31,21 @@ from repro.launch.mesh import bootstrap_mesh_env
 bootstrap_mesh_env(sys.argv)
 
 import argparse
+import collections
 import dataclasses
 import os
+import signal
 import subprocess
+import threading
 import time
 
 import numpy as np
+
+# typed child exit codes the launcher knows how to explain (keep in sync
+# with repro.distributed.fault - imported lazily there to avoid pulling
+# jax into the launcher before the children's env is set up)
+_EXIT_MEANING = {87: "deadline watchdog fired (hung collective/dead peer)",
+                 41: "fault-injection kill"}
 
 
 def build_args(argv=None):
@@ -76,43 +85,105 @@ def build_args(argv=None):
                     help="jax.distributed coordinator address (default: the "
                          "launcher picks a free local port; a hand-started "
                          "child must be given one explicitly)")
+    ap.add_argument("--launch-timeout", type=float, default=None,
+                    help="per-launch deadline (seconds) for multi-process "
+                         "collectives; a hung rendezvous exits with the "
+                         "typed watchdog code instead of blocking forever")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="write the scheduler drain record here on "
+                         "preemption (SIGTERM) or fleet failure")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="requeue the unfinished requests of a previous "
+                         "run's --snapshot record instead of generating a "
+                         "fresh trace")
+    ap.add_argument("--pdq-fallback", action="store_true",
+                    help="guard every PDQ projection with a per-launch "
+                         "fp-dequant fallback on non-finite output")
     return ap.parse_args(argv)
+
+
+def _tee_stderr(proc, ring) -> threading.Thread:
+    """Stream a child's stderr to ours while keeping the tail in ``ring``
+    (the launcher's post-mortem: WHAT the dead process last said)."""
+
+    def pump():
+        for line in iter(proc.stderr.readline, ""):
+            ring.append(line.rstrip("\n"))
+            sys.stderr.write(line)
+            sys.stderr.flush()
+        proc.stderr.close()
+
+    t = threading.Thread(target=pump, daemon=True)
+    t.start()
+    return t
 
 
 def spawn_processes(args, argv) -> int:
     """Launcher mode: spawn one child per process, fail fast and LOUD.
 
-    Children share this terminal's stdout/stderr (their prints are the
-    per-process log).  The first child to exit non-zero takes the fleet
-    down: remaining children are terminated and its code is returned, so
-    CI sees exactly which process died instead of a 6-hour hang."""
+    Children share this terminal's stdout (their prints are the
+    per-process log); stderr is teed through a per-child ring buffer.
+    The first child to exit non-zero takes the fleet down: remaining
+    children are terminated, and the launcher reports WHICH process died,
+    its exit code (decoded for the typed watchdog/fault-injection codes)
+    and the last lines it wrote to stderr - so CI sees an actionable
+    post-mortem instead of a bare non-zero exit or a 6-hour hang.
+
+    A SIGTERM to the launcher is forwarded to the coordinator child
+    (process 0) only: it drains, snapshots (with --snapshot) and releases
+    the workers through the command protocol, so the whole fleet exits
+    cleanly."""
     env = dict(os.environ)
     from repro.launch.mesh import pick_coordinator, strip_forced_device_count
     env["XLA_FLAGS"] = strip_forced_device_count(env.get("XLA_FLAGS", ""))
     coordinator = pick_coordinator(args.coordinator)
     procs = [subprocess.Popen(
         [sys.executable, "-m", "repro.launch.serve", *argv,
-         "--coordinator", coordinator, "--process-id", str(i)], env=env)
+         "--coordinator", coordinator, "--process-id", str(i)], env=env,
+        stderr=subprocess.PIPE, text=True)
         for i in range(args.num_processes)]
+    rings = [collections.deque(maxlen=20) for _ in procs]
+    tees = [_tee_stderr(p, r) for p, r in zip(procs, rings)]
     live = dict(enumerate(procs))
-    code = 0
-    while live:
-        time.sleep(0.2)
-        for i, p in list(live.items()):
-            rc = p.poll()
-            if rc is None:
-                continue
-            del live[i]
-            if rc != 0:
-                print(f"serve launcher: process {i} died with exit code "
-                      f"{rc}; terminating {len(live)} remaining",
-                      file=sys.stderr, flush=True)
-                for q in live.values():
-                    q.terminate()
-                for q in live.values():
-                    q.wait()
-                return rc
-    return code
+
+    def forward_term(signum, frame):
+        if 0 in live:
+            live[0].send_signal(signal.SIGTERM)     # coordinator drains
+
+    prev = signal.signal(signal.SIGTERM, forward_term)
+    try:
+        while live:
+            time.sleep(0.2)
+            for i, p in list(live.items()):
+                rc = p.poll()
+                if rc is None:
+                    continue
+                del live[i]
+                if rc != 0:
+                    meaning = _EXIT_MEANING.get(rc)
+                    why = f" [{meaning}]" if meaning else ""
+                    print(f"serve launcher: process {i} died with exit code "
+                          f"{rc}{why}; terminating {len(live)} remaining",
+                          file=sys.stderr, flush=True)
+                    for t in tees:
+                        t.join(timeout=2)
+                    tail = list(rings[i])
+                    if tail:
+                        print(f"serve launcher: last stderr of process {i}:",
+                              file=sys.stderr)
+                        for line in tail:
+                            print(f"  [proc {i}] {line}", file=sys.stderr)
+                        sys.stderr.flush()
+                    for q in live.values():
+                        q.terminate()
+                    for q in live.values():
+                        q.wait()
+                    return rc
+        return 0
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+        for t in tees:
+            t.join(timeout=2)
 
 
 def main(argv=None):
@@ -162,11 +233,23 @@ def main(argv=None):
                              f"--num-processes ({args.num_processes})")
         mesh = make_serve_mesh(data, model)
         spr = args.slots_per_replica or args.slots
-        cls = MultiHostServeEngine if multiproc else ShardedServeEngine
-        eng = cls(cfg, params, mesh=mesh, slots_per_replica=spr,
-                  max_len=args.max_len, quantize_weights=args.int8,
-                  temperature=args.temperature, buckets=buckets,
-                  chunked_prefill=args.chunked_prefill)
+        if multiproc:
+            eng = MultiHostServeEngine(
+                cfg, params, mesh=mesh, slots_per_replica=spr,
+                max_len=args.max_len, quantize_weights=args.int8,
+                temperature=args.temperature, buckets=buckets,
+                chunked_prefill=args.chunked_prefill,
+                pdq_fallback=args.pdq_fallback,
+                launch_timeout=args.launch_timeout,
+                snapshot_path=args.snapshot)
+        else:
+            eng = ShardedServeEngine(
+                cfg, params, mesh=mesh, slots_per_replica=spr,
+                max_len=args.max_len, quantize_weights=args.int8,
+                temperature=args.temperature, buckets=buckets,
+                chunked_prefill=args.chunked_prefill,
+                pdq_fallback=args.pdq_fallback)
+            eng.snapshot_path = args.snapshot
         mode = f"sharded {data}x{model} ({spr} slots/replica)"
         if multiproc:
             mode += f" x{args.num_processes}proc"
@@ -175,7 +258,9 @@ def main(argv=None):
                           quantize_weights=args.int8,
                           temperature=args.temperature, buckets=buckets,
                           batch_prefill=not args.legacy_prefill,
-                          chunked_prefill=args.chunked_prefill)
+                          chunked_prefill=args.chunked_prefill,
+                          pdq_fallback=args.pdq_fallback)
+        eng.snapshot_path = args.snapshot
         mode = "legacy" if args.legacy_prefill else "bucketed"
 
     if multiproc and not eng.is_coordinator:
@@ -185,16 +270,35 @@ def main(argv=None):
         print(f"[proc {args.process_id}] worker done", flush=True)
         return
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        int(rng.integers(1, args.prompt_len + 1))),
-                    max_new=args.max_new) for i in range(args.requests)]
+    if args.resume:
+        # requeue the previous run's unfinished work (progress cleared:
+        # (uid, step)-keyed sampling regenerates the identical tokens)
+        from repro.distributed.fault import load_snapshot
+        from repro.serve import resume_requests
+        done, reqs = resume_requests(load_snapshot(args.resume))
+        print(f"resuming {len(reqs)} unfinished requests "
+              f"({len(done)} already finished) from {args.resume}",
+              flush=True)
+    else:
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            int(rng.integers(1, args.prompt_len + 1))),
+                        max_new=args.max_new) for i in range(args.requests)]
+    # preemption: SIGTERM requests a drain - the scheduler finishes the
+    # round, snapshots (with --snapshot) and run() returns; the workers
+    # are then released through the normal CMD_STOP
+    signal.signal(signal.SIGTERM, lambda *_: eng.request_drain())
     t0 = time.perf_counter()
     eng.run(reqs)
     if multiproc:
         eng.stop_workers()
     dt = time.perf_counter() - t0
+    if eng.drained:
+        left = sum(not r.done for r in reqs)
+        print(f"drained on preemption: {left} unfinished requests "
+              + (f"snapshotted to {eng.snapshot_path}" if eng.snapshot_path
+                 else "(no --snapshot: progress dropped)"), flush=True)
     total_new = sum(len(r.generated) for r in reqs)
     print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s) int8={args.int8} int8_kv={args.int8_kv} "

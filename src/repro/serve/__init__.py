@@ -1,8 +1,9 @@
 from . import core, engine
-from .core import DEFAULT_BUCKETS, Request, SchedulerCore
+from .core import DEFAULT_BUCKETS, Request, SchedulerCore, resume_requests
 from .engine import ServeEngine
-from .multihost import MultiHostServeEngine
+from .multihost import CoordinatorAbort, MultiHostServeEngine, ProtocolError
 from .sharded import ShardedServeEngine
 
 __all__ = ["DEFAULT_BUCKETS", "Request", "SchedulerCore", "ServeEngine",
-           "ShardedServeEngine", "MultiHostServeEngine", "core", "engine"]
+           "ShardedServeEngine", "MultiHostServeEngine", "CoordinatorAbort",
+           "ProtocolError", "resume_requests", "core", "engine"]

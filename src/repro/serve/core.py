@@ -36,9 +36,13 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any
 
 import numpy as np
+
+from repro.distributed.fault import (FailureLog, FaultInjector,
+                                     StragglerWatchdog, save_snapshot)
 
 DEFAULT_BUCKETS = (32, 64, 128, 256)
 
@@ -50,6 +54,7 @@ class Request:
     max_new: int = 16
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: str | None = None         # set iff the request FAILED (isolated)
 
 
 @dataclasses.dataclass
@@ -66,6 +71,8 @@ class PrefillPlan:
     placed: list[tuple[int, int, Request]]   # (slot, batch row, request)
     per_counts: list[int]            # admits per replica
     real_tokens: int                 # prompt tokens (pads excluded)
+    row_uids: np.ndarray = None      # (slots,) int32; -1 = dummy row
+    row_steps: np.ndarray = None     # (slots,) int32 token index; -1 = dummy
 
 
 @dataclasses.dataclass
@@ -82,6 +89,8 @@ class ChunkedPlan:
     chunks: list[tuple[int, np.ndarray, np.ndarray, np.ndarray]]
     #          (bucket, tokens, seq_lens, start_lens)
     src_map: np.ndarray              # (slots,) int32
+    row_uids: np.ndarray = None      # (slots,) int32; -1 = dummy row
+    row_steps: np.ndarray = None     # (slots,) int32; -1 = dummy row
 
 
 @dataclasses.dataclass
@@ -89,6 +98,8 @@ class DecodePlan:
     live: list[int]                  # slots with an active request
     tokens: np.ndarray               # (slots, 1) int32
     positions: np.ndarray            # (slots, 1) int32
+    row_uids: np.ndarray = None      # (slots,) int32; -1 = free slot
+    row_steps: np.ndarray = None     # (slots,) int32; -1 = free slot
 
 
 class SchedulerCore:
@@ -100,9 +111,16 @@ class SchedulerCore:
     """
 
     # ------------------------------------------------------------ state init
+    # a launch exception fails the launch's requests and keeps serving;
+    # the multi-host engine overrides this to False (a coordinator that
+    # keeps scheduling after a desynced collective would hang the fleet -
+    # it aborts and lets drain-and-resume requeue the work instead)
+    _isolate_exec = True
+
     def _init_scheduler(self, *, slots: int, n_replicas: int, max_len: int,
                         patch_tokens: int, buckets: tuple[int, ...],
-                        batch_prefill: bool, chunked_prefill: bool) -> None:
+                        batch_prefill: bool, chunked_prefill: bool,
+                        fault: FaultInjector | None = None) -> None:
         assert slots % n_replicas == 0, (slots, n_replicas)
         assert batch_prefill or n_replicas == 1, (
             "the legacy per-request prefill baseline is single-replica only")
@@ -148,6 +166,19 @@ class SchedulerCore:
         self._free_r: list[collections.deque[int]] = [
             collections.deque(range(r * spr, (r + 1) * spr))
             for r in range(n_replicas)]
+        # fault-tolerance state: a no-op-by-default injector (tests thread
+        # a FaultPlan injector through the engine kwarg), a straggler EMA
+        # over decode launch times, a failure event log, the scheduler
+        # round counter the injector keys off, and the drain flag that
+        # preempts the run loop (SIGTERM / coordinator preemption)
+        self.fault = fault if fault is not None else FaultInjector()
+        self.fault.bind(self)
+        self.straggler = StragglerWatchdog()
+        self.failures = FailureLog()
+        self.snapshot_path: str | None = None
+        self._round = 0
+        self._draining = False
+        self._inflight: list[Request] = []   # claimed by an unapplied plan
         self.stats: dict[str, Any] = {
             "prefill_compiles": 0,     # distinct prefill executables traced
             "chunk_compiles": 0,       # distinct prefill_chunk executables
@@ -162,6 +193,8 @@ class SchedulerCore:
             "decode_steps": 0,
             "decode_tokens": 0,
             "completed": 0,
+            "failed": 0,               # requests failed + evicted (isolated)
+            "straggler_flags": 0,      # decode rounds flagged slow (EMA)
             # per-replica occupancy/admit accounting (single-replica engines
             # report one-element lists)
             "replica_admits": [0] * n_replicas,
@@ -169,20 +202,97 @@ class SchedulerCore:
         }
 
     # ------------------------------------------------------------ exec hooks
-    def _exec_prefill(self, plan: PrefillPlan, extras) -> np.ndarray:
-        """Run ONE bucketed prefill + cache scatter; return the sampled
-        next token per pool row (dummy rows' entries are ignored)."""
+    def _exec_prefill(self, plan: PrefillPlan, extras):
+        """Run ONE bucketed prefill + cache scatter; return ``(nxt, ok)``:
+        the sampled next token per pool row and a per-row finite flag
+        (False = that row's logits carried NaN/Inf and the request must be
+        failed without touching its batch peers).  Dummy rows' entries are
+        ignored."""
         raise NotImplementedError
 
-    def _exec_chunked(self, plan: ChunkedPlan, extras) -> np.ndarray:
+    def _exec_chunked(self, plan: ChunkedPlan, extras):
         raise NotImplementedError
 
-    def _exec_decode(self, plan: DecodePlan) -> np.ndarray:
+    def _exec_decode(self, plan: DecodePlan):
         raise NotImplementedError
 
     def _submit_one(self, req: Request, extras) -> bool:
         raise NotImplementedError(
             "the legacy per-request path is single-device only")
+
+    # ------------------------------------------------------ request failure
+    def _fail(self, req: Request, err: str, kind: str) -> None:
+        """Fail ONE request in place: mark done with an error, surface it
+        through ``finished`` (so ``run`` drains normally) and the failure
+        log.  The caller releases any claimed slot."""
+        req.done = True
+        req.error = str(err)
+        self.finished.append(req)
+        self.stats["failed"] += 1
+        self.failures.record(self._round, kind, f"uid={req.uid}: {err}")
+
+    def _check_prompt(self, req: Request) -> None:
+        """Structural validation at dequeue time: a malformed prompt must
+        fail ALONE (raising inside ``_plan_prefill`` would poison the
+        whole admission group)."""
+        p = np.asarray(req.prompt)
+        if p.ndim != 1 or p.size == 0 or not np.issubdtype(p.dtype, np.integer):
+            raise ValueError(
+                f"malformed prompt: shape {p.shape}, dtype {p.dtype} "
+                "(need a non-empty 1-D integer array)")
+
+    def _abort_launch(self, kind: str, slots_reqs, e: Exception) -> None:
+        """A device launch raised: fail every request it carried, release
+        their slots, keep the engine serving (request isolation)."""
+        for slot, req in slots_reqs:
+            if slot is not None:
+                if self.active[slot] is req:
+                    self.active[slot] = None
+                self._release_slot(slot)
+            self._fail(req, f"{kind} launch failed: {e!r}", "exec")
+        self._inflight = []
+
+    # ------------------------------------------------------- drain control
+    def request_drain(self) -> None:
+        """Stop scheduling at the next round boundary (SIGTERM handler /
+        coordinator preemption); ``snapshot()`` then carries the queue and
+        the in-flight work so a restarted engine can requeue it."""
+        self._draining = True
+
+    @property
+    def drained(self) -> bool:
+        return self._draining
+
+    # ----------------------------------------------------------- snapshots
+    def snapshot(self) -> dict:
+        """The scheduler's drain record: a pure-numpy/python dict (shippable
+        via ``distributed.fault.save_snapshot``) of finished, in-flight and
+        pending requests plus counters.  In-flight covers both activated
+        slots and requests claimed by a plan whose result never applied
+        (e.g. the deadline watchdog fired mid-collective: host scheduler
+        state is still consistent, the launch simply never landed)."""
+        seen: set[int] = set()
+
+        def pack(r: Request) -> dict:
+            seen.add(id(r))
+            return {"uid": int(r.uid), "prompt": np.asarray(r.prompt),
+                    "max_new": int(r.max_new),
+                    "generated": [int(t) for t in r.generated],
+                    "error": r.error}
+
+        inflight = [pack(self.active[s]) for s in range(self.slots)
+                    if self.active[s] is not None]
+        inflight += [pack(r) for r in self._inflight if id(r) not in seen]
+        return {
+            "version": 1,
+            "round": int(self._round),
+            "inflight": inflight,
+            "pending": [pack(r) for r in self.pending],
+            "finished": [pack(r) for r in self.finished],
+            "stats": {k: (list(v) if isinstance(v, list) else int(v))
+                      for k, v in self.stats.items()},
+            "failures": list(self.failures.events),
+        }
 
     # ----------------------------------------------------------------- admin
     def _bucket(self, prompt_len: int) -> int:
@@ -268,25 +378,38 @@ class SchedulerCore:
         tokens = np.zeros((self.slots, bucket), np.int32)
         seq_lens = np.zeros((self.slots,), np.int32)     # dummy rows: 0
         src_map = np.full((self.slots,), -1, np.int32)
+        row_uids = np.full((self.slots,), -1, np.int32)
+        row_steps = np.full((self.slots,), -1, np.int32)
         placed: list[tuple[int, int, Request]] = []
         for ri, reqs in enumerate(per):
             for i, r in enumerate(reqs):
                 S = len(r.prompt)
                 tokens[ri * spr + i, :S] = r.prompt
                 seq_lens[ri * spr + i] = S
+                row_uids[ri * spr + i] = r.uid
+                row_steps[ri * spr + i] = len(r.generated)
                 slot = self._take_slot(ri)
                 src_map[slot] = i                        # replica-local row
                 placed.append((slot, ri * spr + i, r))
         return PrefillPlan(bucket=bucket, tokens=tokens, seq_lens=seq_lens,
                            src_map=src_map, placed=placed,
                            per_counts=[len(g) for g in per],
-                           real_tokens=int(seq_lens.sum()))
+                           real_tokens=int(seq_lens.sum()),
+                           row_uids=row_uids, row_steps=row_steps)
 
-    def _apply_prefill(self, plan: PrefillPlan, nxt: np.ndarray) -> None:
+    def _apply_prefill(self, plan: PrefillPlan, res) -> None:
+        nxt, ok = res
         for ri, c in enumerate(plan.per_counts):
             self.stats["replica_admits"][ri] += c
         for slot, row, r in plan.placed:
+            if not ok[row]:
+                # poisoned row: fail + evict THIS request only; peers'
+                # rows are untouched (per-slot attention/cache state)
+                self._release_slot(slot)
+                self._fail(r, "non-finite logits at prefill", "nonfinite")
+                continue
             self._activate(slot, r, int(plan.seq_lens[row]), int(nxt[row]))
+        self._inflight = []
         self.stats["prefill_batches"] += 1
         self.stats["prefill_requests"] += len(plan.placed)
         self.stats["prefill_tokens"] += plan.real_tokens
@@ -328,18 +451,30 @@ class SchedulerCore:
         slot = self._take_slot(ri)
         src_map = np.full((Bp,), -1, np.int32)
         src_map[slot] = 0                                 # replica-local row 0
+        row_uids = np.full((Bp,), -1, np.int32)
+        row_steps = np.full((Bp,), -1, np.int32)
+        row_uids[row] = req.uid
+        row_steps[row] = len(req.generated)
         return ChunkedPlan(req=req, replica=ri, row=row, slot=slot,
                            prompt_len=S, first=first, chunks=chunks,
-                           src_map=src_map)
+                           src_map=src_map, row_uids=row_uids,
+                           row_steps=row_steps)
 
-    def _apply_chunked(self, plan: ChunkedPlan, nxt: np.ndarray) -> None:
+    def _apply_chunked(self, plan: ChunkedPlan, res) -> None:
+        nxt, ok = res
         self.stats["prefill_batches"] += 1
         self.stats["chunk_batches"] += len(plan.chunks)
         self.stats["prefill_padded_tokens"] += self.slots * (
             plan.first[0] + sum(c[0] for c in plan.chunks))
         self.stats["replica_admits"][plan.replica] += 1
-        self._activate(plan.slot, plan.req, plan.prompt_len,
-                       int(nxt[plan.row]))
+        if not ok[plan.row]:
+            self._release_slot(plan.slot)
+            self._fail(plan.req, "non-finite logits at chunked prefill",
+                       "nonfinite")
+        else:
+            self._activate(plan.slot, plan.req, plan.prompt_len,
+                           int(nxt[plan.row]))
+        self._inflight = []
         self.stats["prefill_requests"] += 1
         self.stats["chunked_requests"] += 1
         self.stats["prefill_tokens"] += plan.prompt_len
@@ -374,15 +509,40 @@ class SchedulerCore:
         order: list[int] = []
         admitted = 0
 
+        def launch(kind, plan, slots_reqs, exec_fn, apply_fn):
+            # request isolation around ONE device launch: the fault hook
+            # runs inside the guard (an injected launch fault exercises
+            # the same path a real device error takes), and an exception
+            # fails the launch's requests without taking the engine down
+            self._inflight = [r for _, r in slots_reqs]
+            try:
+                self.fault.on_exec(kind, self._round)
+                res = exec_fn()
+            except Exception as e:
+                if not self._isolate_exec:
+                    raise          # multi-host: abort + drain, never desync
+                self._abort_launch(kind, slots_reqs, e)
+            else:
+                apply_fn(plan, res)
+
         def flush():
             for b in order:
                 plan = self._plan_prefill(self._assign(groups[b]), b)
-                self._apply_prefill(plan, self._exec_prefill(plan, extras))
+                launch("prefill", plan,
+                       [(s, r) for s, _, r in plan.placed],
+                       lambda p=plan: self._exec_prefill(p, extras),
+                       self._apply_prefill)
             groups.clear()
             order.clear()
 
         while self.pending and admitted < free:   # consumes a queue prefix
             r = self.pending.popleft()
+            try:
+                self._check_prompt(r)
+            except Exception as e:
+                # malformed request: fails ALONE, peers stay queued/grouped
+                self._fail(r, str(e), "plan")
+                continue
             S = len(r.prompt)
             if self.chunked_prefill and S > self.buckets[-1]:
                 # extras were rejected at submit()/run() entry
@@ -390,7 +550,9 @@ class SchedulerCore:
                 # dequeued peers and leak the planned slot
                 flush()                  # keep arrival order across launches
                 plan = self._plan_chunked(r)
-                self._apply_chunked(plan, self._exec_chunked(plan, extras))
+                launch("chunked", plan, [(plan.slot, r)],
+                       lambda p=plan: self._exec_chunked(p, extras),
+                       self._apply_chunked)
                 admitted += 1
                 continue
             b = self._bucket(S)
@@ -407,15 +569,29 @@ class SchedulerCore:
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return None
+        row_uids = np.full((self.slots,), -1, np.int32)
+        row_steps = np.full((self.slots,), -1, np.int32)
+        for i in live:
+            row_uids[i] = self.active[i].uid
+            row_steps[i] = len(self.active[i].generated)
         return DecodePlan(live=live,
                           tokens=self.last_tokens[:, None].astype(np.int32),
-                          positions=self.lengths[:, None].astype(np.int32))
+                          positions=self.lengths[:, None].astype(np.int32),
+                          row_uids=row_uids, row_steps=row_steps)
 
-    def _apply_decode(self, plan: DecodePlan, nxt: np.ndarray) -> None:
+    def _apply_decode(self, plan: DecodePlan, res) -> None:
+        nxt, ok = res
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(plan.live)
         for i in plan.live:
             req = self.active[i]
+            if not ok[i]:
+                # poisoned slot: evict this request alone; peers' rows in
+                # the cache pool are untouched (per-slot state)
+                self.active[i] = None
+                self._release_slot(i)
+                self._fail(req, "non-finite logits at decode", "nonfinite")
+                continue
             req.generated.append(int(nxt[i]))
             self.lengths[i] += 1
             self.last_tokens[i] = int(nxt[i])
@@ -428,11 +604,34 @@ class SchedulerCore:
                 self.stats["completed"] += 1
 
     def step(self) -> int:
-        """One batched decode step over all active slots; returns #active."""
+        """One batched decode step over all active slots; returns #active.
+
+        The launch is timed into the straggler EMA (plus any injected
+        virtual delay) and guarded by request isolation: a raising decode
+        launch fails the live requests and keeps the engine serving."""
         plan = self._plan_decode()
         if plan is None:
             return 0
-        self._apply_decode(plan, self._exec_decode(plan))
+        t0 = time.perf_counter()
+        try:
+            self.fault.on_exec("decode", self._round)
+            res = self._exec_decode(plan)
+        except Exception as e:
+            if not self._isolate_exec:
+                raise
+            self._abort_launch("decode",
+                               [(i, self.active[i]) for i in plan.live
+                                if self.active[i] is not None], e)
+        else:
+            dt = (time.perf_counter() - t0
+                  + self.fault.exec_delay("decode", self._round))
+            if self.straggler.observe(dt):
+                self.failures.record(
+                    self._round, "straggler",
+                    f"decode launch {dt:.4f}s > {self.straggler.factor:g}x "
+                    f"EMA {self.straggler.ema:.4f}s")
+            self.stats["straggler_flags"] = self.straggler.flagged
+            self._apply_decode(plan, res)
         return len([r for r in self.active if r is not None])
 
     def run(self, requests: list[Request], extras=None) -> list[Request]:
@@ -450,10 +649,48 @@ class SchedulerCore:
         self.pending.extend(requests)
         n_active = sum(r is not None for r in self.active)   # pre-submitted
         while self.pending or n_active:
+            if self._draining:
+                break                 # preempted: snapshot() carries the rest
+            self.fault.on_round(self._round)
+            if self._draining:
+                break
             if self.batch_prefill:
                 self._admit(extras)
             else:
                 while self.pending and self._free_total():
                     self._submit_one(self.pending.popleft(), extras)
             n_active = self.step()
+            self._round += 1
+        if self._draining and self.snapshot_path:
+            # persist the drain record as part of the preemption path: the
+            # relaunch rebuilds its queue via ``resume_requests``
+            save_snapshot(self.snapshot_path, self.snapshot())
         return requests
+
+
+def resume_requests(snap: dict) -> tuple[list[Request], list[Request]]:
+    """Rebuild requests from a drain snapshot: ``(finished, todo)``.
+
+    ``todo`` (in-flight in slot order first, then pending in queue order)
+    carries each unfinished request with its progress CLEARED: on resume
+    the engine regenerates from the original prompt, and because sampling
+    keys derive from (uid, step) - not from engine launch history - token
+    n of a request is the identical computation whether or not the run was
+    interrupted, on whatever mesh the restarted engine got.  That is what
+    makes a killed-and-resumed run token-for-token equal to an
+    uninterrupted one without shipping cache pages in the snapshot (a lost
+    worker's pages could not be shipped anyway).
+    """
+    assert snap.get("version") == 1, snap.get("version")
+
+    def unpack(rec: dict, *, clear: bool) -> Request:
+        return Request(uid=int(rec["uid"]),
+                       prompt=np.asarray(rec["prompt"]),
+                       max_new=int(rec["max_new"]),
+                       generated=[] if clear else list(rec["generated"]),
+                       done=not clear, error=rec.get("error"))
+
+    finished = [unpack(rec, clear=False) for rec in snap["finished"]]
+    todo = [unpack(rec, clear=True)
+            for rec in list(snap["inflight"]) + list(snap["pending"])]
+    return finished, todo

@@ -47,6 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.fault import FaultInjector
+from repro.kernels import ops
 from repro.models import build_model
 from repro.models.linops import quantize_param_tree
 
@@ -63,13 +65,23 @@ class ServeEngine(SchedulerCore):
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  batch_prefill: bool = True,
                  chunked_prefill: bool = False,
-                 n_replicas: int = 1):
+                 n_replicas: int = 1,
+                 fault: FaultInjector | None = None,
+                 pdq_fallback: bool = False):
         self.cfg = cfg
         self.bundle = build_model(cfg)
         self.params = (quantize_param_tree(params) if quantize_weights
                        else params)
         self.temperature = temperature
+        # the BASE sampling key: never split or advanced.  Every sampled
+        # token derives its key as fold_in(fold_in(rng, uid), step), so a
+        # request's token stream depends only on (rng, uid, prompt, step) -
+        # not on batch composition, chunking, engine restarts, or which
+        # other requests shared its launches.  That is what makes chunked
+        # == unchunked temperature streams and drain-resume regeneration
+        # token-exact.
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.pdq_fallback = bool(pdq_fallback)
         mem_len = 8 if cfg.family == "encdec" else 0
         self.mem_len = mem_len
         self._init_scheduler(
@@ -77,8 +89,9 @@ class ServeEngine(SchedulerCore):
             patch_tokens=(cfg.frontend_tokens if cfg.frontend == "vision"
                           else 0),
             buckets=buckets, batch_prefill=batch_prefill,
-            chunked_prefill=chunked_prefill)
+            chunked_prefill=chunked_prefill, fault=fault)
         self._init_pools()
+        self._build_sampler()
         self._build_jitted()
 
     def _init_pools(self):
@@ -135,18 +148,51 @@ class ServeEngine(SchedulerCore):
         """jit(fn) that bumps ``stats[counter]`` once per (re)trace - i.e.
         once per compiled executable, the quantity the bucket design caps."""
         stats = self.stats
+        guard = self.pdq_fallback
 
         def wrapped(*args):
             stats[counter] += 1      # trace-time side effect
-            return fn(*args)
+            with ops.pdq_guard(guard):
+                return fn(*args)
 
         return jax.jit(wrapped)
 
-    def _sample(self, logits: jax.Array) -> np.ndarray:
-        if self.temperature <= 0.0:
-            return np.asarray(jnp.argmax(logits, -1))
-        self.rng, k = jax.random.split(self.rng)
-        return np.asarray(jax.random.categorical(k, logits / self.temperature))
+    # -------------------------------------------------------------- sampling
+    def _build_sampler(self):
+        """One jitted program turning a (slots, V) logits batch into
+        (tokens, ok): per-row sampled token + per-row all-finite flag.
+
+        Keys are derived per ROW from (base rng, uid, step) so a token's
+        randomness is a pure function of the request identity and its
+        position in the stream; the base key is passed in (not closed
+        over) so engines sharing temperature share the executable."""
+        temp = float(self.temperature)
+
+        def sample(rng, logits, uids, steps):
+            ok = jnp.isfinite(logits).all(axis=-1)
+            if temp <= 0.0:
+                toks = jnp.argmax(logits, -1)
+            else:
+                def one(lg, uid, step):
+                    k = jax.random.fold_in(jax.random.fold_in(rng, uid), step)
+                    return jax.random.categorical(k, lg / temp)
+                toks = jax.vmap(one)(logits, uids, steps)
+            return toks, ok
+
+        self._sampler = jax.jit(sample)
+
+    def _sample_rows(self, kind: str, plan, logits) -> tuple[np.ndarray,
+                                                             np.ndarray]:
+        """Sample every batch row of a launch; returns numpy
+        (tokens (slots,), ok (slots,)).  Applies the fault injector's
+        logits poisoning first (no-op outside fault tests)."""
+        rows = self.fault.poison_rows(kind, plan)
+        if rows:
+            logits = jnp.asarray(logits).at[np.asarray(rows)].set(jnp.nan)
+        toks, ok = self._sampler(self.rng, logits,
+                                 jnp.asarray(plan.row_uids, jnp.int32),
+                                 jnp.asarray(plan.row_steps, jnp.int32))
+        return np.asarray(toks), np.asarray(ok)
 
     def _extras_batch(self, batch: dict, extras) -> dict:
         if extras:
@@ -160,7 +206,7 @@ class ServeEngine(SchedulerCore):
         return batch
 
     # ------------------------------------------------------------ exec hooks
-    def _exec_prefill(self, plan: PrefillPlan, extras) -> np.ndarray:
+    def _exec_prefill(self, plan: PrefillPlan, extras):
         batch = self._extras_batch({"tokens": jnp.asarray(plan.tokens)},
                                    extras)
         logits, sub = self._prefill_many(self.params, batch,
@@ -168,9 +214,9 @@ class ServeEngine(SchedulerCore):
                                          jnp.asarray(plan.seq_lens))
         self.caches = self._scatter(self.caches, sub,
                                     jnp.asarray(plan.src_map))
-        return self._sample(logits)
+        return self._sample_rows("prefill", plan, logits)
 
-    def _exec_chunked(self, plan: ChunkedPlan, extras) -> np.ndarray:
+    def _exec_chunked(self, plan: ChunkedPlan, extras):
         if extras:
             raise NotImplementedError(
                 "chunked prefill is text-only (no vision/encdec extras)")
@@ -186,13 +232,13 @@ class ServeEngine(SchedulerCore):
                                               jnp.asarray(start_lens))
         self.caches = self._scatter(self.caches, sub,
                                     jnp.asarray(plan.src_map))
-        return self._sample(logits)
+        return self._sample_rows("chunked", plan, logits)
 
-    def _exec_decode(self, plan: DecodePlan) -> np.ndarray:
+    def _exec_decode(self, plan: DecodePlan):
         logits, self.caches = self._decode(self.params, self.caches,
                                            jnp.asarray(plan.tokens),
                                            jnp.asarray(plan.positions))
-        return self._sample(logits)
+        return self._sample_rows("decode", plan, logits)
 
     # ------------------------------------------------- legacy per-request path
     def _submit_one(self, req: Request, extras) -> bool:
@@ -210,7 +256,14 @@ class ServeEngine(SchedulerCore):
             batch.update(extras)
         logits, sub_caches = self._prefill_one(self.params, batch, sub_caches)
         self.caches = self.bundle.cache_merge(self.caches, sub_caches, slot)
-        tok = self._sample(logits)[0]
+        toks, ok = self._sampler(self.rng, logits,
+                                 jnp.asarray([req.uid], jnp.int32),
+                                 jnp.asarray([0], jnp.int32))
+        if not bool(np.asarray(ok)[0]):
+            self._release_slot(slot)
+            self._fail(req, "non-finite logits at prefill", "nonfinite")
+            return True
+        tok = int(np.asarray(toks)[0])
         self.stats["replica_admits"][0] += 1
         self._activate(slot, req, S, int(tok))
         self.stats["prefill_batches"] += 1

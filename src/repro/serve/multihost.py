@@ -33,13 +33,26 @@ single-process engine computed (PDQ column-TP epilogue included), tokens
 stay bit-exact vs ``ShardedServeEngine`` on the same logical mesh, fp and
 int8.
 
-Failure modes: a worker that dies mid-trace leaves the coordinator blocked
-in a collective - the gloo/distributed-runtime timeout (or the CI job's
-hard timeout) converts that into a visible failure, and the launcher
-(launch/serve.py --num-processes) exits non-zero when any process dies.
-A coordinator exception is propagated best-effort: ``run`` broadcasts
-CMD_ABORT from a ``finally`` so workers raise instead of waiting forever
-at the next header rendezvous.
+Failure handling (see DESIGN.md "Failure handling").  The command header
+carries a monotonically increasing sequence number and a per-process ack
+slot: every process CONTRIBUTES to the header exchange (coordinator: the
+command; worker p: its last-completed seq in slot p), so each command
+doubles as a fleet heartbeat - the coordinator verifies every worker
+acked the previous command before the new one executes, and a desynced
+worker is a typed ``ProtocolError`` instead of a silent hang.  Aborts are
+typed: ``CMD_ABORT`` ships a reason code (exception / deadline / desync)
+and workers raise ``CoordinatorAbort`` carrying it.  Every blocking
+broadcast and device launch is armed with a ``DeadlineWatchdog``
+(``launch_timeout=`` seconds; None disarms): a thread blocked inside a
+gloo collective cannot be interrupted, so on expiry a side thread dumps
+the coordinator's scheduler snapshot (if ``snapshot_path`` is set),
+prints a typed ABORT_DEADLINE line and ``os._exit``s with
+``fault.EXIT_DEADLINE`` - the launcher (launch/serve.py) then reports
+which process timed out, and a later run resumes from the snapshot.
+Exec-launch exceptions are NOT isolated per request here
+(``_isolate_exec = False``): a coordinator that kept scheduling after a
+failed collective would desync the fleet, so protocol errors are
+fleet-fatal and recovery is drain-and-resume.
 """
 from __future__ import annotations
 
@@ -48,6 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.fault import DeadlineWatchdog, _default_deadline_abort, \
+    save_snapshot
 from repro.distributed.sharding import (make_global, pool_shardings,
                                         process_replicas, serve_pool_specs)
 
@@ -55,14 +70,42 @@ from .core import ChunkedPlan, DecodePlan, PrefillPlan
 from .engine import DEFAULT_BUCKETS
 from .sharded import ShardedServeEngine
 
-# coordinator -> worker opcodes (header: int32[2] = [op, bucket_len])
+# coordinator -> worker opcodes.  Header: int32[4 + n_processes] =
+# [op, arg, seq, 0, ack_0, ..., ack_{n-1}] - arg is the bucket length
+# (prefill/chunk) or the abort reason code; seq numbers every command;
+# ack_p is process p's last-completed command seq (the heartbeat).
 CMD_STOP = 0
-CMD_PREFILL = 1        # payload: tokens (slots, L), seq_lens, src_map
-CMD_CHUNK_FIRST = 2    # payload: tokens (slots, L), seq_lens
+CMD_PREFILL = 1        # payload: tokens (slots, L), seq_lens, src_map,
+                       #          row_uids, row_steps
+CMD_CHUNK_FIRST = 2    # payload: tokens (slots, L), seq_lens, row_uids,
+                       #          row_steps (kept for the later chunks)
 CMD_CHUNK_NEXT = 3     # payload: tokens (slots, L), seq_lens, start_lens
 CMD_CHUNK_END = 4      # payload: src_map
-CMD_DECODE = 5         # payload: tokens (slots, 1), positions (slots, 1)
-CMD_ABORT = 6          # coordinator died: workers raise
+CMD_DECODE = 5         # payload: tokens (slots, 1), positions (slots, 1),
+                       #          row_uids, row_steps
+CMD_ABORT = 6          # coordinator died: workers raise (arg = reason)
+
+# typed abort reasons (CMD_ABORT arg)
+ABORT_EXC = 1          # coordinator raised while scheduling
+ABORT_DEADLINE = 2     # a deadline watchdog fired fleet-side
+ABORT_DESYNC = 3       # heartbeat ack mismatch: a worker fell out of step
+ABORT_REASONS = {ABORT_EXC: "coordinator exception",
+                 ABORT_DEADLINE: "deadline exceeded",
+                 ABORT_DESYNC: "worker desynchronized"}
+
+
+class ProtocolError(RuntimeError):
+    """The command stream itself is corrupt (bad opcode, failed ack)."""
+
+
+class CoordinatorAbort(RuntimeError):
+    """Raised on workers when the coordinator broadcasts CMD_ABORT."""
+
+    def __init__(self, reason: int):
+        self.reason = int(reason)
+        super().__init__(
+            "multi-host serve coordinator aborted: "
+            f"{ABORT_REASONS.get(self.reason, f'reason {reason}')}")
 
 
 class MultiHostServeEngine(ShardedServeEngine):
@@ -76,17 +119,27 @@ class MultiHostServeEngine(ShardedServeEngine):
     workers' loops return.
 
     Text-only (no vision/encdec extras: their side inputs are not part of
-    the command protocol yet).  Temperature sampling runs in-program from
-    a per-launch key split deterministically from ``rng`` on every
-    process; the stream matches the single-process engine's except under
-    chunked prefill (one split per chunk launch vs one per sequence).
+    the command protocol yet).  Temperature sampling runs in-program with
+    per-request keys derived from (rng, uid, step) - the same derivation
+    the single-process engines use - so sampled streams match them
+    token-for-token, chunked prefill included (every process holds the
+    same base ``rng`` and receives the batch uids/steps with the plan).
     """
+
+    # a failed launch here is fleet-fatal, not per-request: the workers
+    # already rendezvoused on this command, so skipping it on the
+    # coordinator alone would desync every later collective.  Recovery is
+    # abort + drain-and-resume instead (run()'s except path).
+    _isolate_exec = False
 
     def __init__(self, cfg, params, *, mesh, slots_per_replica: int = 4,
                  max_len: int = 256, quantize_weights: bool = False,
                  temperature: float = 0.0, rng: jax.Array | None = None,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 chunked_prefill: bool = False):
+                 chunked_prefill: bool = False, fault=None,
+                 pdq_fallback: bool = False,
+                 launch_timeout: float | None = None,
+                 snapshot_path: str | None = None):
         if cfg.frontend == "vision" or cfg.family == "encdec":
             raise NotImplementedError(
                 "multi-host serving is text-only: vision/encdec extras are "
@@ -103,12 +156,19 @@ class MultiHostServeEngine(ShardedServeEngine):
                 f"mesh 'data' axis ({data}) must divide over the "
                 f"{self.n_processes} jax.distributed processes")
         self._chunk_sub = None
+        self._chunk_us = None          # (uids, steps) held across chunk cmds
         self._stopped = False
+        self.launch_timeout = launch_timeout
+        self._hdr = 4 + self.n_processes
+        self._seq = 1                  # next command number (coordinator)
+        self._done_seq = 0             # last completed command (workers)
         super().__init__(cfg, params, mesh=mesh,
                          slots_per_replica=slots_per_replica, max_len=max_len,
                          quantize_weights=quantize_weights,
                          temperature=temperature, rng=rng, buckets=buckets,
-                         chunked_prefill=chunked_prefill)
+                         chunked_prefill=chunked_prefill, fault=fault,
+                         pdq_fallback=pdq_fallback)
+        self.snapshot_path = snapshot_path
         # replica -> owning process, for per-host stats and routing debug
         self.host_replicas = process_replicas(self.mesh)
         if self.n_processes > 1:
@@ -145,23 +205,33 @@ class MultiHostServeEngine(ShardedServeEngine):
         self.caches = mk_pool()
         self._prefill_pool = mk_pool()
 
-        temp = self.temperature
+        temp = float(self.temperature)
+        base_rng = np.asarray(self.rng)   # identical on every process
 
-        def sample(logits, key):
+        def sample(logits, uids, steps):
+            ok = jnp.isfinite(logits).all(axis=-1)
             if temp <= 0.0:
-                return jnp.argmax(logits, -1)
-            return jax.random.categorical(key, logits / temp)
+                return jnp.argmax(logits, -1), ok
+
+            def one(lg, uid, step):
+                k = jax.random.fold_in(jax.random.fold_in(base_rng, uid),
+                                       step)
+                return jax.random.categorical(k, lg / temp)
+
+            return jax.vmap(one)(logits, uids, steps), ok
 
         def sampled(fn, in_specs):
             """shard_map(fn) (TP active inside) returning (sampled tokens,
-            caches): logits stay sharded over 'data', the argmax runs per
-            replica, and the replicated out_sharding broadcasts the
-            (slots,) tokens to every device in-program."""
+            ok flags, caches): logits stay sharded over 'data', sampling
+            and the finite check run per replica, and the replicated
+            out_sharding broadcasts the (slots,) tokens + flags to every
+            device in-program."""
             mapped = self._sharded(fn, in_specs, (dp, cs))
 
-            def prog(key, *args):
+            def prog(uids, steps, *args):
                 logits, caches = mapped(*args)
-                return sample(logits, key), caches
+                toks, ok = sample(logits, uids, steps)
+                return toks, ok, caches
 
             return prog
 
@@ -171,19 +241,21 @@ class MultiHostServeEngine(ShardedServeEngine):
             def wrapped(*args):
                 if counter:
                     stats[counter] += 1      # trace-time side effect
+                # NB: the PDQ fallback guard is applied inside _sharded's
+                # shard_map body (per shard, before the TP all-gather)
                 return fn(*args)
 
             return jax.jit(wrapped, **jit_kw)
 
         self._decode = traced(
             sampled(self.bundle.decode_step, (P(), cs, dp, dp)),
-            "decode_compiles", out_shardings=(repl, pool_sh))
+            "decode_compiles", out_shardings=(repl, repl, pool_sh))
         self._prefill_many = traced(
             sampled(self.bundle.prefill_many, (P(), dp, cs, dp)),
-            "prefill_compiles", out_shardings=(repl, pool_sh))
+            "prefill_compiles", out_shardings=(repl, repl, pool_sh))
         self._prefill_chunk = traced(
             sampled(self.bundle.prefill_chunk, (P(), dp, cs, dp, dp)),
-            "chunk_compiles", out_shardings=(repl, pool_sh))
+            "chunk_compiles", out_shardings=(repl, repl, pool_sh))
         self._scatter = self._traced_sharded_jit(
             self.bundle.cache_scatter, None,
             in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
@@ -203,12 +275,29 @@ class MultiHostServeEngine(ShardedServeEngine):
     def _glob(self, x, spec):
         return make_global(self.mesh, spec, x)
 
-    def _next_key(self):
-        """Per-launch sampling key, split identically on every process (all
-        start from the same ``rng`` and execute the same launch stream)."""
-        self.rng, k = jax.random.split(self.rng)
-        return self._glob(np.asarray(k), P())
+    # ------------------------------------------------- deadline watchdogs
+    def _deadline(self, reason: str) -> DeadlineWatchdog:
+        """Arm a watchdog around one blocking rendezvous/launch.  Disarmed
+        when ``launch_timeout`` is None or the fleet is one process
+        (nothing to rendezvous with)."""
+        seconds = self.launch_timeout if self.n_processes > 1 else None
+        return DeadlineWatchdog(seconds, reason=reason,
+                                on_timeout=self._deadline_abort)
 
+    def _deadline_abort(self, reason: str, seconds: float) -> None:
+        # the main thread is stuck inside a collective, but the host-side
+        # scheduler state is consistent between result applications: dump
+        # the drain record first so a restarted coordinator can resume,
+        # then declare this process dead with the typed exit code.
+        if self.is_coordinator and self.snapshot_path:
+            try:
+                save_snapshot(self.snapshot_path, self.snapshot())
+            except Exception:
+                pass
+        _default_deadline_abort(f"process {self.process_id}: {reason}",
+                                seconds)
+
+    # -------------------------------------------------------- broadcasts
     def _build_broadcast(self):
         devs = np.array(jax.devices()).reshape(self.n_processes,
                                                jax.local_device_count())
@@ -217,23 +306,30 @@ class MultiHostServeEngine(ShardedServeEngine):
             lambda tree: jax.tree.map(lambda x: jnp.sum(x, axis=0), tree),
             out_shardings=NamedSharding(self._bc_mesh, P()))
 
-    def _broadcast(self, arrays: tuple) -> list[np.ndarray]:
-        """Ship the coordinator's int32 arrays to every process.  All
-        processes must call with equal shapes (workers pass templates)."""
+    def _broadcast(self, arrays: tuple, *,
+                   all_ranks: bool = False) -> list[np.ndarray]:
+        """psum-exchange int32 arrays across the fleet.  All processes must
+        call with equal shapes.  Default: one-to-all (workers contribute
+        zero rows, everyone reads the coordinator's values).  With
+        ``all_ranks`` every process contributes its OWN row - the command
+        header uses this so worker acks ride the same exchange."""
         if self.n_processes == 1:
             return [np.asarray(a, np.int32) for a in arrays]
+        row = self.process_id if all_ranks else 0
 
         def pre(x):
             x = np.asarray(x, np.int32)
             full = np.zeros((self.n_processes,) + x.shape, np.int32)
-            if self.is_coordinator:
-                full[0] = x              # workers sum in their zero rows
+            if all_ranks or self.is_coordinator:
+                full[row] = x            # others sum in their zero rows
             return make_global(self._bc_mesh, P("proc"), full)
 
-        out = self._bc_jit(tuple(pre(a) for a in arrays))
-        jax.block_until_ready(out)       # every local shard, see above
+        with self._deadline("collective broadcast"):
+            out = self._bc_jit(tuple(pre(a) for a in arrays))
+            jax.block_until_ready(out)   # every local shard, see above
         return [np.asarray(x.addressable_data(0)) for x in out]
 
+    # ----------------------------------------------------- command stream
     def _cmd(self, op: int, arg: int = 0) -> None:
         if not self.is_coordinator:
             # a worker that drives scheduling (submit()/run()) would
@@ -243,13 +339,31 @@ class MultiHostServeEngine(ShardedServeEngine):
                 f"process {self.process_id} is a worker: only the "
                 "coordinator (process 0) issues commands; call "
                 "serve_worker() here")
-        self._broadcast((np.asarray([op, arg], np.int32),))
+        seq = self._seq
+        hdr = np.zeros((self._hdr,), np.int32)
+        hdr[0], hdr[1], hdr[2] = op, arg, seq
+        hdr[4] = seq - 1                 # coordinator's own ack slot
+        hdr = self.fault.on_broadcast(seq, hdr)
+        out, = self._broadcast((hdr,), all_ranks=True)
+        self._seq += 1
+        # piggybacked heartbeat: the worker loop is sequential, so at this
+        # rendezvous every live worker must have completed seq - 1 exactly
+        for p in range(1, self.n_processes):
+            if int(out[4 + p]) != seq - 1:
+                raise ProtocolError(
+                    f"worker {p} acked command seq {int(out[4 + p])} at "
+                    f"command seq {seq} (expected {seq - 1}): the fleet is "
+                    "desynchronized")
 
-    def _recv_cmd(self) -> tuple[int, int]:
-        out, = self._broadcast((np.zeros((2,), np.int32),))
-        if int(out[0]) == CMD_ABORT:
-            raise RuntimeError("multi-host serve coordinator aborted")
-        return int(out[0]), int(out[1])
+    def _recv_cmd(self) -> tuple[int, int, int]:
+        hdr = np.zeros((self._hdr,), np.int32)
+        hdr[4 + self.process_id] = self._done_seq      # heartbeat/ack
+        hdr = self.fault.on_broadcast(self._done_seq + 1, hdr)
+        out, = self._broadcast((hdr,), all_ranks=True)
+        op, arg, seq = int(out[0]), int(out[1]), int(out[2])
+        if op == CMD_ABORT:
+            raise CoordinatorAbort(arg)
+        return op, arg, seq
 
     def _send(self, arrays: list[np.ndarray]) -> None:
         self._broadcast(tuple(arrays))
@@ -260,77 +374,97 @@ class MultiHostServeEngine(ShardedServeEngine):
     # ------------------------------------------------- shared launch bodies
     # Each _do_* runs on EVERY process with identical host arrays (the
     # coordinator's plan, either local or just received) and performs the
-    # same global-mesh launch; the replicated sampled-token output is
+    # same global-mesh launch; the replicated (tokens, ok) outputs are
     # locally addressable everywhere.
-    def _do_prefill(self, tokens, seq_lens, src_map) -> np.ndarray:
-        key = self._next_key()
-        nxt, sub = self._prefill_many(
-            key, self.params, {"tokens": self._glob(tokens, P("data"))},
-            self._prefill_pool, self._glob(seq_lens, P("data")))
-        self.caches = self._scatter(self.caches, sub,
-                                    self._glob(src_map, P("data")))
-        jax.block_until_ready((nxt, self.caches))
-        return np.asarray(nxt)
+    def _us(self, uids, steps):
+        return (self._glob(np.asarray(uids, np.int32), P()),
+                self._glob(np.asarray(steps, np.int32), P()))
 
-    def _do_chunk_first(self, tokens, seq_lens) -> np.ndarray:
-        key = self._next_key()
-        nxt, self._chunk_sub = self._prefill_many(
-            key, self.params, {"tokens": self._glob(tokens, P("data"))},
-            self._prefill_pool, self._glob(seq_lens, P("data")))
-        jax.block_until_ready((nxt, self._chunk_sub))
-        return np.asarray(nxt)
+    def _do_prefill(self, tokens, seq_lens, src_map, uids, steps):
+        u, s = self._us(uids, steps)
+        with self._deadline("prefill launch"):
+            nxt, ok, sub = self._prefill_many(
+                u, s, self.params,
+                {"tokens": self._glob(tokens, P("data"))},
+                self._prefill_pool, self._glob(seq_lens, P("data")))
+            self.caches = self._scatter(self.caches, sub,
+                                        self._glob(src_map, P("data")))
+            jax.block_until_ready((nxt, ok, self.caches))
+        return np.asarray(nxt), np.asarray(ok)
 
-    def _do_chunk_next(self, tokens, seq_lens, start_lens) -> np.ndarray:
-        key = self._next_key()
-        nxt, self._chunk_sub = self._prefill_chunk(
-            key, self.params, {"tokens": self._glob(tokens, P("data"))},
-            self._chunk_sub, self._glob(seq_lens, P("data")),
-            self._glob(start_lens, P("data")))
-        jax.block_until_ready((nxt, self._chunk_sub))
-        return np.asarray(nxt)
+    def _do_chunk_first(self, tokens, seq_lens, uids, steps):
+        self._chunk_us = self._us(uids, steps)
+        u, s = self._chunk_us
+        with self._deadline("chunked-prefill launch"):
+            nxt, ok, self._chunk_sub = self._prefill_many(
+                u, s, self.params,
+                {"tokens": self._glob(tokens, P("data"))},
+                self._prefill_pool, self._glob(seq_lens, P("data")))
+            jax.block_until_ready((nxt, ok, self._chunk_sub))
+        return np.asarray(nxt), np.asarray(ok)
+
+    def _do_chunk_next(self, tokens, seq_lens, start_lens):
+        u, s = self._chunk_us
+        with self._deadline("chunked-prefill launch"):
+            nxt, ok, self._chunk_sub = self._prefill_chunk(
+                u, s, self.params,
+                {"tokens": self._glob(tokens, P("data"))},
+                self._chunk_sub, self._glob(seq_lens, P("data")),
+                self._glob(start_lens, P("data")))
+            jax.block_until_ready((nxt, ok, self._chunk_sub))
+        return np.asarray(nxt), np.asarray(ok)
 
     def _do_chunk_end(self, src_map) -> None:
-        self.caches = self._scatter(self.caches, self._chunk_sub,
-                                    self._glob(src_map, P("data")))
-        jax.block_until_ready(self.caches)
+        with self._deadline("chunk cache scatter"):
+            self.caches = self._scatter(self.caches, self._chunk_sub,
+                                        self._glob(src_map, P("data")))
+            jax.block_until_ready(self.caches)
         self._chunk_sub = None
+        self._chunk_us = None
 
-    def _do_decode(self, tokens, positions) -> np.ndarray:
-        key = self._next_key()
-        nxt, self.caches = self._decode(key, self.params, self.caches,
-                                        self._glob(tokens, P("data")),
-                                        self._glob(positions, P("data")))
-        jax.block_until_ready((nxt, self.caches))
-        return np.asarray(nxt)
+    def _do_decode(self, tokens, positions, uids, steps):
+        u, s = self._us(uids, steps)
+        with self._deadline("decode launch"):
+            nxt, ok, self.caches = self._decode(
+                u, s, self.params, self.caches,
+                self._glob(tokens, P("data")),
+                self._glob(positions, P("data")))
+            jax.block_until_ready((nxt, ok, self.caches))
+        return np.asarray(nxt), np.asarray(ok)
 
     # --------------------------------------------------- coordinator driver
-    def _exec_prefill(self, plan: PrefillPlan, extras) -> np.ndarray:
+    def _exec_prefill(self, plan: PrefillPlan, extras):
         if extras:
             raise NotImplementedError("multi-host serving takes no extras")
         self._cmd(CMD_PREFILL, plan.bucket)
-        self._send([plan.tokens, plan.seq_lens, plan.src_map])
-        return self._do_prefill(plan.tokens, plan.seq_lens, plan.src_map)
+        self._send([plan.tokens, plan.seq_lens, plan.src_map,
+                    plan.row_uids, plan.row_steps])
+        return self._do_prefill(plan.tokens, plan.seq_lens, plan.src_map,
+                                plan.row_uids, plan.row_steps)
 
-    def _exec_chunked(self, plan: ChunkedPlan, extras) -> np.ndarray:
+    def _exec_chunked(self, plan: ChunkedPlan, extras):
         if extras:
             raise NotImplementedError("multi-host serving takes no extras")
         b, tokens, seq_lens = plan.first
         self._cmd(CMD_CHUNK_FIRST, b)
-        self._send([tokens, seq_lens])
-        nxt = self._do_chunk_first(tokens, seq_lens)
+        self._send([tokens, seq_lens, plan.row_uids, plan.row_steps])
+        res = self._do_chunk_first(tokens, seq_lens,
+                                   plan.row_uids, plan.row_steps)
         for b, tokens, seq_lens, start_lens in plan.chunks:
             self._cmd(CMD_CHUNK_NEXT, b)
             self._send([tokens, seq_lens, start_lens])
-            nxt = self._do_chunk_next(tokens, seq_lens, start_lens)
+            res = self._do_chunk_next(tokens, seq_lens, start_lens)
         self._cmd(CMD_CHUNK_END)
         self._send([plan.src_map])
         self._do_chunk_end(plan.src_map)
-        return nxt
+        return res
 
-    def _exec_decode(self, plan: DecodePlan) -> np.ndarray:
+    def _exec_decode(self, plan: DecodePlan):
         self._cmd(CMD_DECODE)
-        self._send([plan.tokens, plan.positions])
-        return self._do_decode(plan.tokens, plan.positions)
+        self._send([plan.tokens, plan.positions,
+                    plan.row_uids, plan.row_steps])
+        return self._do_decode(plan.tokens, plan.positions,
+                               plan.row_uids, plan.row_steps)
 
     def _validate_extras(self, prompt_len: int, extras) -> None:
         # entry-point rejection, BEFORE anything queues or a plan claims
@@ -348,15 +482,24 @@ class MultiHostServeEngine(ShardedServeEngine):
             self._validate_extras(0, extras)   # even for an empty trace
         try:
             return super().run(requests, extras)
-        except BaseException:
-            # best-effort: unblock workers waiting at the next header
+        except BaseException as e:
+            # the fleet is lost: first persist the drain record (resume
+            # needs it even if the abort below hangs on a dead peer), then
+            # best-effort unblock workers waiting at the next header
             # rendezvous (a worker already desynced inside a payload
-            # collective is covered by the runtime/CI timeout instead).
-            # The workers then EXIT, so mark the fleet stopped - a
-            # `finally: stop_workers()` cleanup must not broadcast into
+            # collective is covered by the deadline watchdog / CI timeout
+            # instead).  The workers then EXIT, so mark the fleet stopped -
+            # a `finally: stop_workers()` cleanup must not broadcast into
             # dead peers and hang on the gloo timeout.
+            if self.snapshot_path:
+                try:
+                    save_snapshot(self.snapshot_path, self.snapshot())
+                except Exception:
+                    pass
+            reason = (ABORT_DESYNC if isinstance(e, ProtocolError)
+                      else ABORT_EXC)
             try:
-                self._cmd(CMD_ABORT)
+                self._cmd(CMD_ABORT, reason)
             except Exception:
                 pass               # peer already gone: keep the original error
             finally:
@@ -371,30 +514,39 @@ class MultiHostServeEngine(ShardedServeEngine):
 
     # --------------------------------------------------------- worker loop
     def serve_worker(self) -> None:
-        """Follow the coordinator's command stream until CMD_STOP."""
+        """Follow the coordinator's command stream until CMD_STOP.
+
+        Each completed command's seq is acked on the NEXT header exchange
+        (the piggybacked heartbeat); a coordinator abort raises the typed
+        ``CoordinatorAbort``, an unknown opcode the typed
+        ``ProtocolError``."""
         assert not self.is_coordinator, "process 0 is the coordinator"
         S = self.slots
         while True:
-            op, L = self._recv_cmd()
+            op, arg, seq = self._recv_cmd()
             if op == CMD_STOP:
                 return
             if op == CMD_PREFILL:
-                t, sl, m = self._recv([(S, L), (S,), (S,)])
-                self._do_prefill(t, sl, m)
+                t, sl, m, u, st = self._recv([(S, arg), (S,), (S,), (S,),
+                                              (S,)])
+                self._do_prefill(t, sl, m, u, st)
             elif op == CMD_CHUNK_FIRST:
-                t, sl = self._recv([(S, L), (S,)])
-                self._do_chunk_first(t, sl)
+                t, sl, u, st = self._recv([(S, arg), (S,), (S,), (S,)])
+                self._do_chunk_first(t, sl, u, st)
             elif op == CMD_CHUNK_NEXT:
-                t, sl, st = self._recv([(S, L), (S,), (S,)])
+                t, sl, st = self._recv([(S, arg), (S,), (S,)])
                 self._do_chunk_next(t, sl, st)
             elif op == CMD_CHUNK_END:
                 m, = self._recv([(S,)])
                 self._do_chunk_end(m)
             elif op == CMD_DECODE:
-                t, p = self._recv([(S, 1), (S, 1)])
-                self._do_decode(t, p)
+                t, p, u, st = self._recv([(S, 1), (S, 1), (S,), (S,)])
+                self._do_decode(t, p, u, st)
             else:
-                raise RuntimeError(f"unknown multi-host serve opcode {op}")
+                raise ProtocolError(
+                    f"unknown multi-host serve opcode {op} at command seq "
+                    f"{seq} (corrupt or desynchronized command stream)")
+            self._done_seq = seq
 
     # ------------------------------------------------------ per-host stats
     def host_stats(self) -> dict[int, dict[str, int]]:

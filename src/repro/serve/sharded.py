@@ -70,7 +70,8 @@ class ShardedServeEngine(ServeEngine):
                  max_len: int = 256, quantize_weights: bool = False,
                  temperature: float = 0.0, rng: jax.Array | None = None,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 chunked_prefill: bool = False):
+                 chunked_prefill: bool = False, fault=None,
+                 pdq_fallback: bool = False):
         assert {"data", "model"} <= set(mesh.axis_names), mesh.axis_names
         self.mesh = mesh
         self.data_size = int(mesh.shape["data"])
@@ -79,15 +80,18 @@ class ShardedServeEngine(ServeEngine):
                          max_len=max_len, quantize_weights=quantize_weights,
                          temperature=temperature, rng=rng, buckets=buckets,
                          batch_prefill=True, chunked_prefill=chunked_prefill,
-                         n_replicas=self.data_size)
+                         n_replicas=self.data_size, fault=fault,
+                         pdq_fallback=pdq_fallback)
 
     # ------------------------------------------------------- device programs
     def _sharded(self, fn, in_specs, out_specs):
-        """shard_map(fn) over the mesh with TP active inside the body."""
+        """shard_map(fn) over the mesh with TP (and, when enabled, the
+        per-shard PDQ->fp fallback guard) active inside the body."""
         T = self.model_size
+        guard = self.pdq_fallback
 
         def body(*args):
-            with ops.tp_shard("model", T):
+            with ops.tp_shard("model", T), ops.pdq_guard(guard):
                 return fn(*args)
 
         return shard_map(body, mesh=self.mesh, in_specs=in_specs,

@@ -140,6 +140,52 @@ def _run(code: str, argv: list[str], devices: int) -> subprocess.CompletedProces
                           cwd=REPO, timeout=TIMEOUT)
 
 
+_BIND_RACE = ("EADDRINUSE", "Address already in use",
+              "address already in use")
+
+
+def _spawn_fleet(code: str, argv: list[str], *, n_procs: int = 2,
+                 devices: int = 4, attempts: int = 3, timeout: int = TIMEOUT,
+                 hang_ok: tuple[int, ...] = ()):
+    """Spawn an n-process ``jax.distributed`` fleet on a fresh ephemeral
+    port; each child gets [process_id, port, *argv].  Returns
+    (procs, [(stdout, stderr), ...]).
+
+    The coordination-service port is probed with ``_free_port()`` and can
+    be grabbed by another process between the probe and jax binding it
+    (parallel CI shards on one host), so an EADDRINUSE death of the fleet
+    is retried on a NEW port instead of failing the test.
+
+    ``hang_ok`` names process indices that are EXPECTED to hang (injected
+    fault): they are killed once every other process has exited, instead
+    of burning the full timeout waiting for them."""
+    for attempt in range(attempts):
+        port = _free_port()
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", textwrap.dedent(code),
+             str(i), str(port), *argv],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=_env(devices), cwd=REPO) for i in range(n_procs)]
+        outs: list = [None] * n_procs
+        try:
+            for i, p in enumerate(procs):
+                if i not in hang_ok:
+                    outs[i] = p.communicate(timeout=timeout)
+            for i in hang_ok:
+                procs[i].kill()
+                outs[i] = procs[i].communicate(timeout=60)
+        finally:
+            for p in procs:
+                p.kill()
+        raced = any(p.returncode not in (0, None)
+                    and any(m in se for m in _BIND_RACE)
+                    for p, (_, se) in zip(procs, outs))
+        if raced and attempt < attempts - 1:
+            continue
+        return procs, outs
+    raise AssertionError("unreachable")
+
+
 def test_multihost_matches_single_process_sharded_engine():
     """Acceptance pin: 2 jax.distributed processes (4 virtual devices
     each) serve the mixed 12-request trace token-for-token identically to
@@ -151,20 +197,8 @@ def test_multihost_matches_single_process_sharded_engine():
         ref = _run(_REF, [ref_path], devices=8)
         assert ref.returncode == 0, ref.stderr[-3000:]
 
-        port = _free_port()
         mh_path = os.path.join(td, "mh.json")
-        procs = [subprocess.Popen(
-            [sys.executable, "-c", textwrap.dedent(_MULTI),
-             str(i), str(port), mh_path],
-            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
-            env=_env(4), cwd=REPO) for i in (0, 1)]
-        outs = []
-        try:
-            for p in procs:
-                outs.append(p.communicate(timeout=TIMEOUT))
-        finally:
-            for p in procs:
-                p.kill()
+        procs, outs = _spawn_fleet(_MULTI, [mh_path], n_procs=2, devices=4)
         for p, (so, se) in zip(procs, outs):
             assert p.returncode == 0, (so[-1500:], se[-3000:])
 
