@@ -223,6 +223,27 @@ class FaultInjector:
         ``self.engine.process_id``."""
         return header
 
+    # ---- ingress faults (serve/service.ServeService hook points) ----
+
+    def ingress_burst(self, rnd: int) -> list:
+        """Extra ``(prompt, max_new)`` pairs the service submits at the top
+        of round ``rnd`` - a deterministic client stampede for overload
+        tests.  Submissions past the admission watermark are shed (counted
+        in stats) exactly like external ones."""
+        return []
+
+    def drop_stream(self, uid: int, n_tokens: int) -> bool:
+        """Return True to sever request ``uid``'s client after it has
+        received ``n_tokens`` tokens (models a mid-stream disconnect; the
+        service turns it into ``cancel(uid, kind='disconnect')``)."""
+        return False
+
+    def stream_cap(self, uid: int) -> int | None:
+        """Override the per-stream token-buffer bound for ``uid`` (models a
+        stalled SSE reader: a tiny cap overflows after a few tokens and the
+        service cancels with ``kind='slow_consumer'``).  None = default."""
+        return None
+
 
 @dataclasses.dataclass
 class FaultPlan:
@@ -251,6 +272,15 @@ class FaultPlan:
     hang_at_seq: int = 0
     hang_seconds: float = 3600.0
     corrupt_header_at_seq: int | None = None   # coordinator ships opcode 99
+    # ingress faults (service front door):
+    # {round: [[prompt_len, max_new], ...]} - deterministic client burst
+    # submitted at the top of that round (prompts are derived from the
+    # round number, so replays are exact)
+    burst_rounds: dict = dataclasses.field(default_factory=dict)
+    disconnect_uid: int | None = None  # sever this client mid-stream ...
+    disconnect_after: int = 1          # ... once it has this many tokens
+    stall_uid: int | None = None       # stalled-reader stream: tiny buffer
+    stall_cap: int = 4
 
     def injector(self) -> "PlanInjector":
         return PlanInjector(self)
@@ -305,3 +335,24 @@ class PlanInjector(FaultInjector):
             header = np.array(header)
             header[0] = 99                    # not a real opcode
         return header
+
+    def ingress_burst(self, rnd: int) -> list:
+        spec = self.plan.burst_rounds.pop(rnd, None) if self.plan.burst_rounds \
+            else None
+        if not spec:
+            return []
+        vocab = int(getattr(self.engine.cfg, "vocab", 256))
+        out = []
+        for i, (plen, max_new) in enumerate(spec):
+            rng = np.random.default_rng(1000 * rnd + i)
+            prompt = rng.integers(0, vocab, size=int(plen)).astype(np.int32)
+            out.append((prompt, int(max_new)))
+        return out
+
+    def drop_stream(self, uid: int, n_tokens: int) -> bool:
+        p = self.plan
+        return p.disconnect_uid == uid and n_tokens >= p.disconnect_after
+
+    def stream_cap(self, uid: int) -> int | None:
+        p = self.plan
+        return p.stall_cap if p.stall_uid == uid else None

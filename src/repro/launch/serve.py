@@ -99,6 +99,15 @@ def build_args(argv=None):
     ap.add_argument("--pdq-fallback", action="store_true",
                     help="guard every PDQ projection with a per-launch "
                          "fp-dequant fallback on non-finite output")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve an HTTP front door instead of a canned "
+                         "trace: POST /v1/completions (SSE streaming), "
+                         "GET /healthz, GET /v1/stats; 0 picks a free port "
+                         "(printed on startup).  SIGTERM/SIGINT drain, "
+                         "snapshot (--snapshot) and exit cleanly")
+    ap.add_argument("--max-pending", type=int, default=32,
+                    help="HTTP admission watermark: submits past this many "
+                         "queued requests are shed with 429 + Retry-After")
     return ap.parse_args(argv)
 
 
@@ -147,10 +156,15 @@ def spawn_processes(args, argv) -> int:
     live = dict(enumerate(procs))
 
     def forward_term(signum, frame):
+        # SIGINT rides the same path as SIGTERM: forward to the
+        # coordinator child BEFORE any reaping - it drains, snapshots and
+        # releases the workers through the command protocol, and the
+        # launcher's poll loop then collects everyone's clean exit
         if 0 in live:
             live[0].send_signal(signal.SIGTERM)     # coordinator drains
 
     prev = signal.signal(signal.SIGTERM, forward_term)
+    prev_int = signal.signal(signal.SIGINT, forward_term)
     try:
         while live:
             time.sleep(0.2)
@@ -182,8 +196,67 @@ def spawn_processes(args, argv) -> int:
         return 0
     finally:
         signal.signal(signal.SIGTERM, prev)
+        signal.signal(signal.SIGINT, prev_int)
         for t in tees:
             t.join(timeout=2)
+
+
+def serve_http(args, eng, multiproc: bool) -> None:
+    """``--http`` mode: the streaming front door (serve/service.py +
+    serve/frontend.py) drives the scheduler continuously; requests arrive
+    over HTTP instead of a canned trace.  SIGTERM and SIGINT both route
+    through ``request_drain()``: the loop stops at a round boundary,
+    unfinished streams get a typed ``drain`` finish, the snapshot is
+    written (--snapshot), and a later ``--resume`` run regenerates the
+    interrupted work token-exactly."""
+    import asyncio
+
+    from repro.serve import HttpFrontend, ServeService
+
+    svc = ServeService(eng, max_pending=args.max_pending)
+    if args.resume:
+        from repro.distributed.fault import load_snapshot
+        from repro.serve import resume_requests
+        done, reqs = resume_requests(load_snapshot(args.resume))
+        eng.pending.extend(reqs)       # headless requeue: no client holds
+        print(f"resuming {len(reqs)} unfinished requests "   # these streams
+              f"({len(done)} already finished) from {args.resume}",
+              flush=True)
+    svc.start()
+
+    async def amain():
+        fe = await HttpFrontend(svc, port=args.http).start()
+        print(f"serving HTTP on 127.0.0.1:{fe.port} "
+              f"(watermark {args.max_pending})", flush=True)
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+
+        def on_signal():
+            svc.request_drain()
+            stop.set()
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            loop.add_signal_handler(sig, on_signal)
+        await stop.wait()
+        # the drain must COMPLETE while this loop is still alive: open SSE
+        # handlers deliver their typed 'drain' finish through loop wakers,
+        # and closing the loop first would strand them mid-stream
+        await loop.run_in_executor(None, svc.join, 600.0)
+        await fe.stop()
+
+    asyncio.run(amain())
+    svc.join(timeout=600)
+    if multiproc:
+        eng.stop_workers()
+    if svc.error is not None:
+        raise SystemExit(f"serve loop failed: {svc.error!r}")
+    done = len(eng.finished)
+    left = len(eng.pending) + sum(r is not None for r in eng.active)
+    print(f"drained: {done} requests finished, {left} unfinished "
+          + (f"snapshotted to {eng.snapshot_path}" if eng.snapshot_path
+             else "(no --snapshot: progress dropped)"), flush=True)
+    print("  stats:  ", {k: v for k, v in eng.stats.items()
+                         if not k.startswith("replica_")})
 
 
 def main(argv=None):
@@ -270,6 +343,9 @@ def main(argv=None):
         print(f"[proc {args.process_id}] worker done", flush=True)
         return
 
+    if args.http is not None:
+        return serve_http(args, eng, multiproc)
+
     if args.resume:
         # requeue the previous run's unfinished work (progress cleared:
         # (uid, step)-keyed sampling regenerates the identical tokens)
@@ -285,10 +361,11 @@ def main(argv=None):
                         prompt=rng.integers(0, cfg.vocab,
                                             int(rng.integers(1, args.prompt_len + 1))),
                         max_new=args.max_new) for i in range(args.requests)]
-    # preemption: SIGTERM requests a drain - the scheduler finishes the
-    # round, snapshots (with --snapshot) and run() returns; the workers
-    # are then released through the normal CMD_STOP
+    # preemption: SIGTERM/SIGINT request a drain - the scheduler finishes
+    # the round, snapshots (with --snapshot) and run() returns; the
+    # workers are then released through the normal CMD_STOP
     signal.signal(signal.SIGTERM, lambda *_: eng.request_drain())
+    signal.signal(signal.SIGINT, lambda *_: eng.request_drain())
     t0 = time.perf_counter()
     eng.run(reqs)
     if multiproc:

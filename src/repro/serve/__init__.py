@@ -1,9 +1,14 @@
 from . import core, engine
-from .core import DEFAULT_BUCKETS, Request, SchedulerCore, resume_requests
+from .core import (DEFAULT_BUCKETS, EngineDraining, Request, SchedulerCore,
+                   resume_requests)
 from .engine import ServeEngine
+from .frontend import HttpFrontend
 from .multihost import CoordinatorAbort, MultiHostServeEngine, ProtocolError
+from .service import OverloadedError, ServeService, TokenStream
 from .sharded import ShardedServeEngine
 
 __all__ = ["DEFAULT_BUCKETS", "Request", "SchedulerCore", "ServeEngine",
            "ShardedServeEngine", "MultiHostServeEngine", "CoordinatorAbort",
-           "ProtocolError", "resume_requests", "core", "engine"]
+           "ProtocolError", "EngineDraining", "OverloadedError",
+           "ServeService", "TokenStream", "HttpFrontend", "resume_requests",
+           "core", "engine"]

@@ -47,6 +47,12 @@ from repro.distributed.fault import (FailureLog, FaultInjector,
 DEFAULT_BUCKETS = (32, 64, 128, 256)
 
 
+class EngineDraining(RuntimeError):
+    """``submit()``/``run()`` called after ``request_drain()``: the engine
+    is stopping and accepts no new work (the service front door maps this
+    to HTTP 503)."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -55,6 +61,13 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     error: str | None = None         # set iff the request FAILED (isolated)
+    # absolute deadline on the scheduler's clock (engine._clock, default
+    # time.monotonic); None = no deadline.  Checked at round boundaries:
+    # an expired request is evicted alone, peers untouched.
+    deadline: float | None = None
+    # how the request left the engine: 'complete' | 'failed' | 'cancel' |
+    # 'deadline' | 'disconnect' | 'slow_consumer' | 'drain' (service-side)
+    finish_reason: str | None = None
 
 
 @dataclasses.dataclass
@@ -77,14 +90,14 @@ class PrefillPlan:
 
 @dataclasses.dataclass
 class ChunkedPlan:
-    """A chunked prefill of ONE oversized prompt: the first chunk runs as
+    """A chunked prefill of one or more oversized prompts with the SAME
+    chunk count (equal-length launch sequences co-batch into shared rows -
+    solo chunking burned every dummy row's FLOPs): the first chunk runs as
     a normal bucketed prefill, later chunks continue against the
-    accumulating rows, then the finished row lands via ``src_map``."""
-    req: Request
-    replica: int
-    row: int                         # batch row carrying the prompt
-    slot: int
-    prompt_len: int
+    accumulating rows, then the finished rows land via ``src_map``."""
+    placed: list[tuple[int, int, Request]]   # (slot, batch row, request)
+    per_counts: list[int]            # admits per replica
+    real_tokens: int                 # prompt tokens (pads excluded)
     first: tuple[int, np.ndarray, np.ndarray]      # (bucket, tokens, seq_lens)
     chunks: list[tuple[int, np.ndarray, np.ndarray, np.ndarray]]
     #          (bucket, tokens, seq_lens, start_lens)
@@ -179,6 +192,19 @@ class SchedulerCore:
         self._round = 0
         self._draining = False
         self._inflight: list[Request] = []   # claimed by an unapplied plan
+        # deadline clock: overridable so tests pin expiry to scheduler
+        # rounds (e.g. ``eng._clock = lambda: float(eng._round)``) instead
+        # of wall time - deterministic on every engine including multihost
+        self._clock = time.monotonic
+        # uids cancelled while claimed by an in-flight plan: the apply
+        # handler releases the slot instead of activating (kind, reason)
+        self._cancelled: dict[int, tuple[str, str]] = {}
+        # token/finish observers for the streaming service (serve/service):
+        # on_token(req, tok) fires for every token the engine produces, in
+        # order, ON the scheduler thread; on_finish(req) fires exactly once
+        # when a request leaves the engine (complete or failed/evicted)
+        self.on_token = None
+        self.on_finish = None
         self.stats: dict[str, Any] = {
             "prefill_compiles": 0,     # distinct prefill executables traced
             "chunk_compiles": 0,       # distinct prefill_chunk executables
@@ -194,6 +220,10 @@ class SchedulerCore:
             "decode_tokens": 0,
             "completed": 0,
             "failed": 0,               # requests failed + evicted (isolated)
+            "cancelled": 0,            # client cancel / disconnect evictions
+            "deadline_expired": 0,     # per-request deadline evictions
+            "shed": 0,                 # admissions refused at the watermark
+                                       # (service front door: HTTP 429)
             "straggler_flags": 0,      # decode rounds flagged slow (EMA)
             # per-replica occupancy/admit accounting (single-replica engines
             # report one-element lists)
@@ -220,6 +250,26 @@ class SchedulerCore:
         raise NotImplementedError(
             "the legacy per-request path is single-device only")
 
+    def _fleet_abort(self, e: BaseException) -> None:
+        """A non-isolated scheduling error killed the driver loop: engines
+        with peers to release override this (multi-host broadcasts
+        CMD_ABORT + snapshots).  Single-process engines have nothing to do."""
+
+    def poll_ingress(self) -> list[Request]:
+        """Requests submitted OUTSIDE this process (multi-host workers
+        forward their local submits to the coordinator; see
+        multihost.submit_remote).  Single-process engines have none."""
+        return []
+
+    # --------------------------------------------------- stream observers
+    def _emit_token(self, req: Request, tok: int) -> None:
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
+    def _emit_finish(self, req: Request) -> None:
+        if self.on_finish is not None:
+            self.on_finish(req)
+
     # ------------------------------------------------------ request failure
     def _fail(self, req: Request, err: str, kind: str) -> None:
         """Fail ONE request in place: mark done with an error, surface it
@@ -227,9 +277,79 @@ class SchedulerCore:
         log.  The caller releases any claimed slot."""
         req.done = True
         req.error = str(err)
+        req.finish_reason = kind if kind in (
+            "cancel", "deadline", "disconnect", "slow_consumer") else "failed"
         self.finished.append(req)
         self.stats["failed"] += 1
         self.failures.record(self._round, kind, f"uid={req.uid}: {err}")
+        self._emit_finish(req)
+
+    # -------------------------------------------------------- cancellation
+    def cancel(self, uid: int, *, kind: str = "cancel",
+               reason: str = "cancelled by client") -> bool:
+        """First-class cancellation: drop a pending request, or evict an
+        in-flight one through the PR-6 ``_fail``/release path (per-slot
+        cache state and (uid, step) sampling keys keep peers bit-exact).
+        A uid claimed by an unapplied plan (e.g. mid-chunked-prefill) is
+        marked and reclaimed when the launch's result applies - within the
+        same round.  Cancelling an already-finished or unknown uid is a
+        no-op returning False."""
+        for r in self.pending:
+            if r.uid == uid:
+                self.pending.remove(r)
+                self._count_cancel(kind)
+                self._fail(r, reason, kind)
+                return True
+        for r in self._inflight:
+            if r.uid == uid and not r.done:
+                self._cancelled[uid] = (kind, reason)
+                return True
+        for slot, r in enumerate(self.active):
+            if r is not None and r.uid == uid:
+                self.active[slot] = None
+                self._release_slot(slot)
+                self._count_cancel(kind)
+                self._fail(r, reason, kind)
+                return True
+        return False
+
+    def _count_cancel(self, kind: str) -> None:
+        self.stats["deadline_expired" if kind == "deadline"
+                   else "cancelled"] += 1
+
+    def _take_cancel(self, req: Request, slot: int) -> bool:
+        """Apply-time arm of ``cancel``: if the uid was cancelled while its
+        plan was in flight, release the claimed slot instead of activating."""
+        ck = self._cancelled.pop(req.uid, None)
+        if ck is None:
+            return False
+        self._release_slot(slot)
+        self._count_cancel(ck[0])
+        self._fail(req, ck[1], ck[0])
+        return True
+
+    def _expire_deadlines(self) -> int:
+        """Round-boundary sweep: evict every pending/active request whose
+        deadline passed on the engine clock.  Each eviction is isolated
+        (same path as ``cancel``); returns the number evicted."""
+        now = self._clock()
+        n = 0
+        for r in [r for r in self.pending
+                  if r.deadline is not None and now >= r.deadline]:
+            self.pending.remove(r)
+            self._count_cancel("deadline")
+            self._fail(r, f"deadline expired before admission "
+                          f"(deadline={r.deadline:g})", "deadline")
+            n += 1
+        for slot, r in enumerate(self.active):
+            if r is not None and r.deadline is not None and now >= r.deadline:
+                self.active[slot] = None
+                self._release_slot(slot)
+                self._count_cancel("deadline")
+                self._fail(r, f"deadline expired after {len(r.generated)} "
+                              f"tokens (deadline={r.deadline:g})", "deadline")
+                n += 1
+        return n
 
     def _check_prompt(self, req: Request) -> None:
         """Structural validation at dequeue time: a malformed prompt must
@@ -278,7 +398,7 @@ class SchedulerCore:
             return {"uid": int(r.uid), "prompt": np.asarray(r.prompt),
                     "max_new": int(r.max_new),
                     "generated": [int(t) for t in r.generated],
-                    "error": r.error}
+                    "error": r.error, "finish_reason": r.finish_reason}
 
         inflight = [pack(self.active[s]) for s in range(self.slots)
                     if self.active[s] is not None]
@@ -351,15 +471,21 @@ class SchedulerCore:
             per[ri].append(r)
         return per
 
+    def _complete(self, req: Request) -> None:
+        req.done = True
+        req.finish_reason = "complete"
+        self.finished.append(req)
+        self.stats["completed"] += 1
+        self._emit_finish(req)
+
     def _activate(self, slot: int, req: Request, prompt_len: int, tok: int):
         req.generated.append(tok)
+        self._emit_token(req, tok)
         if len(req.generated) >= req.max_new:
             # prefill already produced the full budget: complete without
             # ever occupying a decode slot (max_new=1 = pure ingest)
-            req.done = True
-            self.finished.append(req)
             self._release_slot(slot)
-            self.stats["completed"] += 1
+            self._complete(req)
             return
         self.active[slot] = req
         self.lengths[slot] = prompt_len + self.patch_tokens
@@ -402,6 +528,8 @@ class SchedulerCore:
         for ri, c in enumerate(plan.per_counts):
             self.stats["replica_admits"][ri] += c
         for slot, row, r in plan.placed:
+            if self._take_cancel(r, slot):
+                continue
             if not ok[row]:
                 # poisoned row: fail + evict THIS request only; peers'
                 # rows are untouched (per-slot attention/cache state)
@@ -415,50 +543,62 @@ class SchedulerCore:
         self.stats["prefill_tokens"] += plan.real_tokens
         self.stats["prefill_padded_tokens"] += self.slots * plan.bucket
 
-    def _plan_chunked(self, req: Request) -> ChunkedPlan:
-        """Split ONE oversized prompt into bucket-sized chunks.  The
-        prompt rides row 0 of the least-loaded replica's block; all other
-        rows are dummies (seq_lens == 0)."""
+    def _plan_chunked(self, reqs: list[Request]) -> ChunkedPlan:
+        """Split oversized prompts with EQUAL chunk counts into one shared
+        launch sequence.  Each prompt rides its own row of the replica
+        blocks (least-loaded routing, like ``_plan_prefill``); every chunk
+        j < last is a full ``buckets[-1]`` window for every request, and
+        the ragged last chunks pad together to one shared bucket.  Rows no
+        request fills stay dummies (seq_lens == 0) - co-batching is what
+        reclaims their FLOPs vs the old one-prompt-per-sequence planning."""
         spr = self.slots_per_replica
         Bp = self.slots
         chunk = self.buckets[-1]
-        S = len(req.prompt)
-        ri = max(range(self.n_replicas),
-                 key=lambda i: (len(self._free_r[i]), -i))
-        row = ri * spr
-        prompt = np.asarray(req.prompt)
+        per = self._assign(reqs)
+        n_chunks = -(-len(reqs[0].prompt) // chunk)
+        assert all(-(-len(r.prompt) // chunk) == n_chunks for r in reqs)
 
+        rows: list[tuple[int, np.ndarray]] = []   # (row, prompt) per request
+        src_map = np.full((Bp,), -1, np.int32)
+        row_uids = np.full((Bp,), -1, np.int32)
+        row_steps = np.full((Bp,), -1, np.int32)
+        placed: list[tuple[int, int, Request]] = []
+        for ri, group in enumerate(per):
+            for i, r in enumerate(group):
+                row = ri * spr + i
+                rows.append((row, np.asarray(r.prompt)))
+                row_uids[row] = r.uid
+                row_steps[row] = len(r.generated)
+                slot = self._take_slot(ri)
+                src_map[slot] = i                        # replica-local row
+                placed.append((slot, row, r))
+
+        # first chunk: with n_chunks >= 2 every prompt fills a whole window
         tokens = np.zeros((Bp, chunk), np.int32)
         seq_lens = np.zeros((Bp,), np.int32)
-        tokens[row] = prompt[:chunk]
-        seq_lens[row] = chunk
+        for row, prompt in rows:
+            tokens[row] = prompt[:chunk]
+            seq_lens[row] = chunk
         first = (chunk, tokens, seq_lens)
 
         chunks: list[tuple[int, np.ndarray, np.ndarray, np.ndarray]] = []
-        off = chunk
-        while off < S:
-            rem = min(chunk, S - off)
-            b = self._bucket(rem)        # ragged last chunk pads to a bucket
+        for j in range(1, n_chunks):
+            off = j * chunk
+            rems = [min(chunk, p.size - off) for _, p in rows]
+            b = chunk if j < n_chunks - 1 else self._bucket(max(rems))
             tokens = np.zeros((Bp, b), np.int32)
             seq_lens = np.zeros((Bp,), np.int32)
             start_lens = np.zeros((Bp,), np.int32)
-            tokens[row, :rem] = prompt[off:off + rem]
-            seq_lens[row] = rem
-            start_lens[row] = off
+            for (row, prompt), rem in zip(rows, rems):
+                tokens[row, :rem] = prompt[off:off + rem]
+                seq_lens[row] = rem
+                start_lens[row] = off
             chunks.append((b, tokens, seq_lens, start_lens))
-            off += rem
 
-        slot = self._take_slot(ri)
-        src_map = np.full((Bp,), -1, np.int32)
-        src_map[slot] = 0                                 # replica-local row 0
-        row_uids = np.full((Bp,), -1, np.int32)
-        row_steps = np.full((Bp,), -1, np.int32)
-        row_uids[row] = req.uid
-        row_steps[row] = len(req.generated)
-        return ChunkedPlan(req=req, replica=ri, row=row, slot=slot,
-                           prompt_len=S, first=first, chunks=chunks,
-                           src_map=src_map, row_uids=row_uids,
-                           row_steps=row_steps)
+        return ChunkedPlan(placed=placed, per_counts=[len(g) for g in per],
+                           real_tokens=sum(p.size for _, p in rows),
+                           first=first, chunks=chunks, src_map=src_map,
+                           row_uids=row_uids, row_steps=row_steps)
 
     def _apply_chunked(self, plan: ChunkedPlan, res) -> None:
         nxt, ok = res
@@ -466,18 +606,21 @@ class SchedulerCore:
         self.stats["chunk_batches"] += len(plan.chunks)
         self.stats["prefill_padded_tokens"] += self.slots * (
             plan.first[0] + sum(c[0] for c in plan.chunks))
-        self.stats["replica_admits"][plan.replica] += 1
-        if not ok[plan.row]:
-            self._release_slot(plan.slot)
-            self._fail(plan.req, "non-finite logits at chunked prefill",
-                       "nonfinite")
-        else:
-            self._activate(plan.slot, plan.req, plan.prompt_len,
-                           int(nxt[plan.row]))
+        for ri, c in enumerate(plan.per_counts):
+            self.stats["replica_admits"][ri] += c
+        for slot, row, r in plan.placed:
+            if self._take_cancel(r, slot):
+                continue
+            if not ok[row]:
+                self._release_slot(slot)
+                self._fail(r, "non-finite logits at chunked prefill",
+                           "nonfinite")
+                continue
+            self._activate(slot, r, len(r.prompt), int(nxt[row]))
         self._inflight = []
-        self.stats["prefill_requests"] += 1
-        self.stats["chunked_requests"] += 1
-        self.stats["prefill_tokens"] += plan.prompt_len
+        self.stats["prefill_requests"] += len(plan.placed)
+        self.stats["chunked_requests"] += len(plan.placed)
+        self.stats["prefill_tokens"] += plan.real_tokens
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request, extras: dict[str, Any] | None = None) -> bool:
@@ -486,6 +629,10 @@ class SchedulerCore:
         On the bucketed path this may opportunistically co-admit queued
         same-bucket requests into the same prefill launch.
         """
+        if self._draining:
+            raise EngineDraining(
+                "engine is draining (request_drain() was called): new "
+                "submissions are rejected; resume from the snapshot")
         if not self._free_total():
             return False
         if not self.batch_prefill:
@@ -500,13 +647,14 @@ class SchedulerCore:
         """Bucket-grouped admission: ONE pass over the pending queue assigns
         the first len(free) requests (FIFO) to per-bucket groups, then each
         group prefills in ONE batched call spanning every replica (groups
-        launch in first-arrival order; a chunk-needing request flushes the
-        groups gathered so far and runs its chunk sequence solo).
-        O(pending) per admission call, not per batch.  Returns the number
-        of requests admitted."""
+        launch in first-arrival order).  Chunk-needing requests group by
+        CHUNK COUNT the same way: equal-count prompts co-batch into one
+        shared chunk sequence instead of each burning a whole
+        dummy-row-padded launch sequence alone.  O(pending) per admission
+        call, not per batch.  Returns the number of requests admitted."""
         free = self._free_total()
-        groups: dict[int, list[Request]] = {}
-        order: list[int] = []
+        groups: dict[tuple, list[Request]] = {}
+        order: list[tuple] = []
         admitted = 0
 
         def launch(kind, plan, slots_reqs, exec_fn, apply_fn):
@@ -526,12 +674,20 @@ class SchedulerCore:
                 apply_fn(plan, res)
 
         def flush():
-            for b in order:
-                plan = self._plan_prefill(self._assign(groups[b]), b)
-                launch("prefill", plan,
-                       [(s, r) for s, _, r in plan.placed],
-                       lambda p=plan: self._exec_prefill(p, extras),
-                       self._apply_prefill)
+            for key in order:
+                if key[0] == "chunk":
+                    plan = self._plan_chunked(groups[key])
+                    launch("chunked", plan,
+                           [(s, r) for s, _, r in plan.placed],
+                           lambda p=plan: self._exec_chunked(p, extras),
+                           self._apply_chunked)
+                else:
+                    plan = self._plan_prefill(self._assign(groups[key]),
+                                              key[1])
+                    launch("prefill", plan,
+                           [(s, r) for s, _, r in plan.placed],
+                           lambda p=plan: self._exec_prefill(p, extras),
+                           self._apply_prefill)
             groups.clear()
             order.clear()
 
@@ -548,18 +704,13 @@ class SchedulerCore:
                 # extras were rejected at submit()/run() entry
                 # (_validate_extras) - raising here would drop the
                 # dequeued peers and leak the planned slot
-                flush()                  # keep arrival order across launches
-                plan = self._plan_chunked(r)
-                launch("chunked", plan, [(plan.slot, r)],
-                       lambda p=plan: self._exec_chunked(p, extras),
-                       self._apply_chunked)
-                admitted += 1
-                continue
-            b = self._bucket(S)
-            if b not in groups:
-                groups[b] = []
-                order.append(b)
-            groups[b].append(r)
+                key = ("chunk", -(-S // self.buckets[-1]))
+            else:
+                key = ("bucket", self._bucket(S))
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(r)
             admitted += 1
         flush()
         return admitted
@@ -585,6 +736,8 @@ class SchedulerCore:
         self.stats["decode_tokens"] += len(plan.live)
         for i in plan.live:
             req = self.active[i]
+            if req is None:
+                continue              # evicted between plan and apply
             if not ok[i]:
                 # poisoned slot: evict this request alone; peers' rows in
                 # the cache pool are untouched (per-slot state)
@@ -595,13 +748,12 @@ class SchedulerCore:
             req.generated.append(int(nxt[i]))
             self.lengths[i] += 1
             self.last_tokens[i] = int(nxt[i])
+            self._emit_token(req, int(nxt[i]))
             if (len(req.generated) >= req.max_new
                     or self.lengths[i] >= self.max_len - 1):
-                req.done = True
-                self.finished.append(req)
                 self.active[i] = None
                 self._release_slot(i)   # slot freed for the next admission
-                self.stats["completed"] += 1
+                self._complete(req)
 
     def step(self) -> int:
         """One batched decode step over all active slots; returns #active.
@@ -643,6 +795,10 @@ class SchedulerCore:
         completion instead of rescanning the whole request list every
         decode step.
         """
+        if self._draining:
+            raise EngineDraining(
+                "engine is draining (request_drain() was called): new "
+                "submissions are rejected; resume from the snapshot")
         for r in requests:                 # validate upfront: an oversized
             self._validate(len(r.prompt))  # prompt must not dequeue peers
             self._validate_extras(len(r.prompt), extras)
@@ -654,6 +810,10 @@ class SchedulerCore:
             self.fault.on_round(self._round)
             if self._draining:
                 break
+            if self._expire_deadlines():
+                n_active = sum(r is not None for r in self.active)
+                if not (self.pending or n_active):
+                    break
             if self.batch_prefill:
                 self._admit(extras)
             else:
@@ -688,7 +848,9 @@ def resume_requests(snap: dict) -> tuple[list[Request], list[Request]]:
                        prompt=np.asarray(rec["prompt"]),
                        max_new=int(rec["max_new"]),
                        generated=[] if clear else list(rec["generated"]),
-                       done=not clear, error=rec.get("error"))
+                       done=not clear, error=rec.get("error"),
+                       finish_reason=None if clear
+                       else rec.get("finish_reason"))
 
     finished = [unpack(rec, clear=False) for rec in snap["finished"]]
     todo = [unpack(rec, clear=True)

@@ -56,6 +56,9 @@ fleet-fatal and recovery is drain-and-resume.
 """
 from __future__ import annotations
 
+import collections
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -66,17 +69,22 @@ from repro.distributed.fault import DeadlineWatchdog, _default_deadline_abort, \
 from repro.distributed.sharding import (make_global, pool_shardings,
                                         process_replicas, serve_pool_specs)
 
-from .core import ChunkedPlan, DecodePlan, PrefillPlan
+from .core import ChunkedPlan, DecodePlan, PrefillPlan, Request
 from .engine import DEFAULT_BUCKETS
 from .sharded import ShardedServeEngine
 
-# coordinator -> worker opcodes.  Header: int32[4 + n_processes] =
-# [op, arg, seq, 0, ack_0, ..., ack_{n-1}] - arg is the bucket length
-# (prefill/chunk) or the abort reason code; seq numbers every command;
-# ack_p is process p's last-completed command seq (the heartbeat).
+# coordinator -> worker opcodes.  Header: int32[4 + 2 * n_processes] =
+# [op, arg, seq, n_extras, ack_0..ack_{n-1}, ing_0..ing_{n-1}] - arg is
+# the bucket length (prefill/chunk), the abort reason code, or the source
+# process (ingress pull); seq numbers every command; ack_p is process p's
+# last-completed command seq (the heartbeat); ing_p is the length of
+# process p's local ingress queue (worker-side submits awaiting pickup),
+# so EVERY command exchange doubles as an ingress announcement and the
+# coordinator never needs a side channel to learn about remote submits.
 CMD_STOP = 0
 CMD_PREFILL = 1        # payload: tokens (slots, L), seq_lens, src_map,
-                       #          row_uids, row_steps
+                       #          row_uids, row_steps [+ n_extras arrays,
+                       #          each a shape-tag header then the values]
 CMD_CHUNK_FIRST = 2    # payload: tokens (slots, L), seq_lens, row_uids,
                        #          row_steps (kept for the later chunks)
 CMD_CHUNK_NEXT = 3     # payload: tokens (slots, L), seq_lens, start_lens
@@ -84,6 +92,18 @@ CMD_CHUNK_END = 4      # payload: src_map
 CMD_DECODE = 5         # payload: tokens (slots, 1), positions (slots, 1),
                        #          row_uids, row_steps
 CMD_ABORT = 6          # coordinator died: workers raise (arg = reason)
+CMD_INGRESS = 7        # pull process arg's queued submits: count int32[1]
+                       # from arg, then per request meta int32[4] =
+                       # [uid, prompt_len, max_new, deadline_ms] + prompt
+CMD_POLL = 8           # no-op rendezvous: harvest acks + ingress counts
+                       # while the scheduler is otherwise idle
+
+# extras keys the prefill payload can carry (shape-tag header word 0);
+# float32 values ride the int32 psum exchange losslessly via a bitcast
+# (every non-source process contributes zeros, and zeros-sum preserves
+# the source's bit pattern exactly)
+_EXTRA_KEYS = {"frames": 1, "patches": 2}
+_EXTRA_IDS = {v: k for k, v in _EXTRA_KEYS.items()}
 
 # typed abort reasons (CMD_ABORT arg)
 ABORT_EXC = 1          # coordinator raised while scheduling
@@ -118,8 +138,11 @@ class MultiHostServeEngine(ShardedServeEngine):
     ``stop_workers()`` on the coordinator when the engine is done so the
     workers' loops return.
 
-    Text-only (no vision/encdec extras: their side inputs are not part of
-    the command protocol yet).  Temperature sampling runs in-program with
+    Vision/encdec extras (patches/frames side inputs) ride the prefill
+    payload as shape-tagged float32 arrays bitcast over the int32
+    exchange; unsupported combinations (unknown keys, non-float dtypes,
+    chunked prefill + extras) are typed ``ProtocolError``s at submit
+    entry.  Temperature sampling runs in-program with
     per-request keys derived from (rng, uid, step) - the same derivation
     the single-process engines use - so sampled streams match them
     token-for-token, chunked prefill included (every process holds the
@@ -140,10 +163,6 @@ class MultiHostServeEngine(ShardedServeEngine):
                  pdq_fallback: bool = False,
                  launch_timeout: float | None = None,
                  snapshot_path: str | None = None):
-        if cfg.frontend == "vision" or cfg.family == "encdec":
-            raise NotImplementedError(
-                "multi-host serving is text-only: vision/encdec extras are "
-                "not part of the coordinator command protocol")
         self.n_processes = jax.process_count()
         self.process_id = jax.process_index()
         self.is_coordinator = self.process_id == 0
@@ -157,11 +176,20 @@ class MultiHostServeEngine(ShardedServeEngine):
                 f"{self.n_processes} jax.distributed processes")
         self._chunk_sub = None
         self._chunk_us = None          # (uids, steps) held across chunk cmds
+        self._chunk_track = None       # host (uids, steps) for _track_remote
+        self._chunk_nxt = None         # last chunk's sampled tokens
         self._stopped = False
         self.launch_timeout = launch_timeout
-        self._hdr = 4 + self.n_processes
+        self._hdr = 4 + 2 * self.n_processes
         self._seq = 1                  # next command number (coordinator)
         self._done_seq = 0             # last completed command (workers)
+        # worker-side ingress: local submits queued for coordinator pickup
+        # (announced as queue counts on every header exchange)
+        self._ingress_lock = threading.Lock()
+        self._out_q: collections.deque = collections.deque()
+        self._ingress_counts = [0] * self.n_processes
+        self._remote: dict[int, dict] = {}   # uid -> {'max_new', 'tokens'}
+        self._remote_seq = 1
         super().__init__(cfg, params, mesh=mesh,
                          slots_per_replica=slots_per_replica, max_len=max_len,
                          quantize_weights=quantize_weights,
@@ -169,6 +197,7 @@ class MultiHostServeEngine(ShardedServeEngine):
                          chunked_prefill=chunked_prefill, fault=fault,
                          pdq_fallback=pdq_fallback)
         self.snapshot_path = snapshot_path
+        self.stats["remote_ingress"] = 0   # requests pulled from workers
         # replica -> owning process, for per-host stats and routing debug
         self.host_replicas = process_replicas(self.mesh)
         if self.n_processes > 1:
@@ -306,21 +335,23 @@ class MultiHostServeEngine(ShardedServeEngine):
             lambda tree: jax.tree.map(lambda x: jnp.sum(x, axis=0), tree),
             out_shardings=NamedSharding(self._bc_mesh, P()))
 
-    def _broadcast(self, arrays: tuple, *,
-                   all_ranks: bool = False) -> list[np.ndarray]:
+    def _broadcast(self, arrays: tuple, *, all_ranks: bool = False,
+                   src: int = 0) -> list[np.ndarray]:
         """psum-exchange int32 arrays across the fleet.  All processes must
-        call with equal shapes.  Default: one-to-all (workers contribute
-        zero rows, everyone reads the coordinator's values).  With
-        ``all_ranks`` every process contributes its OWN row - the command
-        header uses this so worker acks ride the same exchange."""
+        call with equal shapes.  Default: one-to-all from ``src`` (every
+        other process contributes zero rows, everyone reads the source's
+        values; the coordinator ships plans with src=0, an ingress pull
+        reverses direction with src=worker).  With ``all_ranks`` every
+        process contributes its OWN row - the command header uses this so
+        worker acks + ingress counts ride the same exchange."""
         if self.n_processes == 1:
             return [np.asarray(a, np.int32) for a in arrays]
-        row = self.process_id if all_ranks else 0
+        row = self.process_id if all_ranks else src
 
         def pre(x):
             x = np.asarray(x, np.int32)
             full = np.zeros((self.n_processes,) + x.shape, np.int32)
-            if all_ranks or self.is_coordinator:
+            if all_ranks or self.process_id == src:
                 full[row] = x            # others sum in their zero rows
             return make_global(self._bc_mesh, P("proc"), full)
 
@@ -330,7 +361,7 @@ class MultiHostServeEngine(ShardedServeEngine):
         return [np.asarray(x.addressable_data(0)) for x in out]
 
     # ----------------------------------------------------- command stream
-    def _cmd(self, op: int, arg: int = 0) -> None:
+    def _cmd(self, op: int, arg: int = 0, n_extras: int = 0) -> None:
         if not self.is_coordinator:
             # a worker that drives scheduling (submit()/run()) would
             # contribute zero rows to its own command broadcast and hang
@@ -340,36 +371,81 @@ class MultiHostServeEngine(ShardedServeEngine):
                 "coordinator (process 0) issues commands; call "
                 "serve_worker() here")
         seq = self._seq
+        N = self.n_processes
         hdr = np.zeros((self._hdr,), np.int32)
-        hdr[0], hdr[1], hdr[2] = op, arg, seq
+        hdr[0], hdr[1], hdr[2], hdr[3] = op, arg, seq, n_extras
         hdr[4] = seq - 1                 # coordinator's own ack slot
         hdr = self.fault.on_broadcast(seq, hdr)
         out, = self._broadcast((hdr,), all_ranks=True)
         self._seq += 1
+        # piggybacked worker ingress announcement (see header layout)
+        self._ingress_counts = [int(out[4 + N + p]) for p in range(N)]
         # piggybacked heartbeat: the worker loop is sequential, so at this
         # rendezvous every live worker must have completed seq - 1 exactly
-        for p in range(1, self.n_processes):
+        for p in range(1, N):
             if int(out[4 + p]) != seq - 1:
                 raise ProtocolError(
                     f"worker {p} acked command seq {int(out[4 + p])} at "
                     f"command seq {seq} (expected {seq - 1}): the fleet is "
                     "desynchronized")
 
-    def _recv_cmd(self) -> tuple[int, int, int]:
+    def _recv_cmd(self) -> tuple[int, int, int, int]:
         hdr = np.zeros((self._hdr,), np.int32)
         hdr[4 + self.process_id] = self._done_seq      # heartbeat/ack
+        with self._ingress_lock:                       # queued submits
+            hdr[4 + self.n_processes + self.process_id] = len(self._out_q)
         hdr = self.fault.on_broadcast(self._done_seq + 1, hdr)
         out, = self._broadcast((hdr,), all_ranks=True)
-        op, arg, seq = int(out[0]), int(out[1]), int(out[2])
+        op, arg, seq, n_ex = (int(out[0]), int(out[1]), int(out[2]),
+                              int(out[3]))
         if op == CMD_ABORT:
             raise CoordinatorAbort(arg)
-        return op, arg, seq
+        return op, arg, seq, n_ex
 
     def _send(self, arrays: list[np.ndarray]) -> None:
         self._broadcast(tuple(arrays))
 
     def _recv(self, shapes: list[tuple[int, ...]]) -> list[np.ndarray]:
         return self._broadcast(tuple(np.zeros(s, np.int32) for s in shapes))
+
+    # ------------------------------------------------------ extras payload
+    # Vision patches / encdec frames are float32 side inputs shared across
+    # the batch (seed semantics, like the single-process engines).  They
+    # ride the int32 exchange as [shape-tag header, bitcast values] pairs:
+    # header int32[6] = [key_id, ndim, d0, d1, d2, d3], then the raveled
+    # float32 buffer reinterpreted as int32 (psum over zero contributions
+    # is bit-preserving, so no float rounding can occur in transit).
+    def _norm_extras(self, extras) -> list[tuple[str, np.ndarray]]:
+        if not extras:
+            return []
+        out = []
+        for key in sorted(dict(extras)):       # deterministic wire order
+            a = np.ascontiguousarray(np.asarray(extras[key], np.float32))
+            out.append((key, a))
+        return out
+
+    def _send_extras(self, ex: list[tuple[str, np.ndarray]]) -> None:
+        for key, a in ex:
+            hdr = np.zeros((6,), np.int32)
+            hdr[0], hdr[1] = _EXTRA_KEYS[key], a.ndim
+            hdr[2:2 + a.ndim] = a.shape
+            self._send([hdr])
+            self._send([a.ravel().view(np.int32)])
+
+    def _recv_extras(self, n: int) -> dict[str, np.ndarray]:
+        ex = {}
+        for _ in range(n):
+            hdr, = self._recv([(6,)])
+            key = _EXTRA_IDS.get(int(hdr[0]))
+            nd = int(hdr[1])
+            if key is None or not 1 <= nd <= 4:
+                raise ProtocolError(
+                    f"bad extras shape tag {hdr.tolist()} in prefill "
+                    "payload (unknown key id or ndim out of range)")
+            shape = tuple(int(d) for d in hdr[2:2 + nd])
+            flat, = self._recv([(int(np.prod(shape)),)])
+            ex[key] = flat.view(np.float32).reshape(shape)
+        return ex
 
     # ------------------------------------------------- shared launch bodies
     # Each _do_* runs on EVERY process with identical host arrays (the
@@ -380,20 +456,34 @@ class MultiHostServeEngine(ShardedServeEngine):
         return (self._glob(np.asarray(uids, np.int32), P()),
                 self._glob(np.asarray(steps, np.int32), P()))
 
-    def _do_prefill(self, tokens, seq_lens, src_map, uids, steps):
+    def _batch(self, tokens, extras) -> dict:
+        batch = {"tokens": self._glob(tokens, P("data"))}
+        for key, a in (extras or {}).items():
+            # shared across requests (seed semantics): broadcast the
+            # leading batch dim across the prefill rows, exactly like the
+            # single-process engines' _extras_batch
+            b = np.broadcast_to(a[:1], (self.slots,) + a.shape[1:])
+            batch[key] = self._glob(np.ascontiguousarray(b), P("data"))
+        return batch
+
+    def _do_prefill(self, tokens, seq_lens, src_map, uids, steps,
+                    extras=None):
         u, s = self._us(uids, steps)
         with self._deadline("prefill launch"):
             nxt, ok, sub = self._prefill_many(
-                u, s, self.params,
-                {"tokens": self._glob(tokens, P("data"))},
+                u, s, self.params, self._batch(tokens, extras),
                 self._prefill_pool, self._glob(seq_lens, P("data")))
             self.caches = self._scatter(self.caches, sub,
                                         self._glob(src_map, P("data")))
             jax.block_until_ready((nxt, ok, self.caches))
-        return np.asarray(nxt), np.asarray(ok)
+        nxt, ok = np.asarray(nxt), np.asarray(ok)
+        self._track_remote(nxt, ok, uids, steps)
+        return nxt, ok
 
     def _do_chunk_first(self, tokens, seq_lens, uids, steps):
         self._chunk_us = self._us(uids, steps)
+        self._chunk_track = (np.asarray(uids, np.int32),
+                             np.asarray(steps, np.int32))
         u, s = self._chunk_us
         with self._deadline("chunked-prefill launch"):
             nxt, ok, self._chunk_sub = self._prefill_many(
@@ -401,7 +491,8 @@ class MultiHostServeEngine(ShardedServeEngine):
                 {"tokens": self._glob(tokens, P("data"))},
                 self._prefill_pool, self._glob(seq_lens, P("data")))
             jax.block_until_ready((nxt, ok, self._chunk_sub))
-        return np.asarray(nxt), np.asarray(ok)
+        self._chunk_nxt = (np.asarray(nxt), np.asarray(ok))
+        return self._chunk_nxt
 
     def _do_chunk_next(self, tokens, seq_lens, start_lens):
         u, s = self._chunk_us
@@ -412,15 +503,24 @@ class MultiHostServeEngine(ShardedServeEngine):
                 self._chunk_sub, self._glob(seq_lens, P("data")),
                 self._glob(start_lens, P("data")))
             jax.block_until_ready((nxt, ok, self._chunk_sub))
-        return np.asarray(nxt), np.asarray(ok)
+        self._chunk_nxt = (np.asarray(nxt), np.asarray(ok))
+        return self._chunk_nxt
 
     def _do_chunk_end(self, src_map) -> None:
         with self._deadline("chunk cache scatter"):
             self.caches = self._scatter(self.caches, self._chunk_sub,
                                         self._glob(src_map, P("data")))
             jax.block_until_ready(self.caches)
+        if self._chunk_nxt is not None and self._chunk_track is not None:
+            # only the LAST chunk's sampled token is the request's first
+            # real token; commit it to remote trackers now that the
+            # sequence is complete
+            nxt, ok = self._chunk_nxt
+            self._track_remote(nxt, ok, *self._chunk_track)
         self._chunk_sub = None
         self._chunk_us = None
+        self._chunk_track = None
+        self._chunk_nxt = None
 
     def _do_decode(self, tokens, positions, uids, steps):
         u, s = self._us(uids, steps)
@@ -430,21 +530,45 @@ class MultiHostServeEngine(ShardedServeEngine):
                 self._glob(tokens, P("data")),
                 self._glob(positions, P("data")))
             jax.block_until_ready((nxt, ok, self.caches))
-        return np.asarray(nxt), np.asarray(ok)
+        nxt, ok = np.asarray(nxt), np.asarray(ok)
+        self._track_remote(nxt, ok, uids, steps)
+        return nxt, ok
+
+    def _track_remote(self, nxt, ok, uids, steps) -> None:
+        """Worker-side token mirror for its own remote submits: sampled
+        tokens are replicated to every process in-program, so a worker
+        reads its requests' streams straight off the plans it already
+        executes - no result backhaul.  The (uid, step)-keyed append makes
+        it robust to dummy rows and replays: a row only lands if its step
+        equals the tokens mirrored so far."""
+        if not self._remote:
+            return
+        for row, uid in enumerate(np.asarray(uids)):
+            rec = self._remote.get(int(uid))
+            if (rec is not None and bool(np.asarray(ok)[row])
+                    and int(np.asarray(steps)[row]) == len(rec["tokens"])
+                    and len(rec["tokens"]) < rec["max_new"]):
+                rec["tokens"].append(int(np.asarray(nxt)[row]))
 
     # --------------------------------------------------- coordinator driver
     def _exec_prefill(self, plan: PrefillPlan, extras):
-        if extras:
-            raise NotImplementedError("multi-host serving takes no extras")
-        self._cmd(CMD_PREFILL, plan.bucket)
+        ex = self._norm_extras(extras)
+        self._cmd(CMD_PREFILL, plan.bucket, n_extras=len(ex))
         self._send([plan.tokens, plan.seq_lens, plan.src_map,
                     plan.row_uids, plan.row_steps])
+        self._send_extras(ex)
+        # launch with the NORMALIZED (wire-format float32) arrays so the
+        # coordinator computes on bit-identical inputs to the workers
         return self._do_prefill(plan.tokens, plan.seq_lens, plan.src_map,
-                                plan.row_uids, plan.row_steps)
+                                plan.row_uids, plan.row_steps,
+                                extras=dict(ex))
 
     def _exec_chunked(self, plan: ChunkedPlan, extras):
         if extras:
-            raise NotImplementedError("multi-host serving takes no extras")
+            # unreachable for well-formed use: _validate_extras rejects the
+            # combination at submit()/run() entry, before any slot is held
+            raise ProtocolError(
+                "chunked-prefill commands carry no extras payload")
         b, tokens, seq_lens = plan.first
         self._cmd(CMD_CHUNK_FIRST, b)
         self._send([tokens, seq_lens, plan.row_uids, plan.row_steps])
@@ -467,11 +591,33 @@ class MultiHostServeEngine(ShardedServeEngine):
                                plan.row_uids, plan.row_steps)
 
     def _validate_extras(self, prompt_len: int, extras) -> None:
-        # entry-point rejection, BEFORE anything queues or a plan claims
-        # a slot (the _exec_* backstops would leak it); unreachable for
-        # well-formed use, since __init__ refuses vision/encdec configs
-        if extras:
-            raise NotImplementedError("multi-host serving takes no extras")
+        # entry-point rejection, BEFORE anything queues or a plan claims a
+        # slot (raising mid-admission would drop dequeued peers / leak the
+        # planned slot).  Unsupported combinations are typed protocol
+        # errors: they describe what the COMMAND STREAM cannot carry.
+        if not extras:
+            return
+        for key, v in dict(extras).items():
+            if key not in _EXTRA_KEYS:
+                raise ProtocolError(
+                    f"extras key {key!r} is not part of the multi-host "
+                    f"command protocol (known: {sorted(_EXTRA_KEYS)})")
+            a = np.asarray(v)
+            if a.dtype.kind != "f":
+                raise ProtocolError(
+                    f"extras[{key!r}] dtype {a.dtype} is not a float type: "
+                    "the prefill payload bitcasts float32 over the int32 "
+                    "exchange")
+            if not 1 <= a.ndim <= 4:
+                raise ProtocolError(
+                    f"extras[{key!r}] ndim {a.ndim} exceeds the shape-tag "
+                    "header (1..4 dims)")
+        if self.chunked_prefill and prompt_len > self.buckets[-1]:
+            raise ProtocolError(
+                "chunked-prefill commands carry no extras payload: "
+                f"oversized prompt ({prompt_len} > bucket "
+                f"{self.buckets[-1]}) cannot combine with vision/encdec "
+                "extras on a multi-host fleet")
 
     def run(self, requests, extras=None):
         if not self.is_coordinator:
@@ -483,34 +629,131 @@ class MultiHostServeEngine(ShardedServeEngine):
         try:
             return super().run(requests, extras)
         except BaseException as e:
-            # the fleet is lost: first persist the drain record (resume
-            # needs it even if the abort below hangs on a dead peer), then
-            # best-effort unblock workers waiting at the next header
-            # rendezvous (a worker already desynced inside a payload
-            # collective is covered by the deadline watchdog / CI timeout
-            # instead).  The workers then EXIT, so mark the fleet stopped -
-            # a `finally: stop_workers()` cleanup must not broadcast into
-            # dead peers and hang on the gloo timeout.
-            if self.snapshot_path:
-                try:
-                    save_snapshot(self.snapshot_path, self.snapshot())
-                except Exception:
-                    pass
-            reason = (ABORT_DESYNC if isinstance(e, ProtocolError)
-                      else ABORT_EXC)
-            try:
-                self._cmd(CMD_ABORT, reason)
-            except Exception:
-                pass               # peer already gone: keep the original error
-            finally:
-                self._stopped = True
+            self._fleet_abort(e)
             raise
+
+    def _fleet_abort(self, e: BaseException) -> None:
+        # the fleet is lost: first persist the drain record (resume
+        # needs it even if the abort below hangs on a dead peer), then
+        # best-effort unblock workers waiting at the next header
+        # rendezvous (a worker already desynced inside a payload
+        # collective is covered by the deadline watchdog / CI timeout
+        # instead).  The workers then EXIT, so mark the fleet stopped -
+        # a `finally: stop_workers()` cleanup must not broadcast into
+        # dead peers and hang on the gloo timeout.  Shared with the
+        # streaming service's step loop (serve/service.py), whose driver
+        # bypasses run().
+        if self.snapshot_path:
+            try:
+                save_snapshot(self.snapshot_path, self.snapshot())
+            except Exception:
+                pass
+        reason = (ABORT_DESYNC if isinstance(e, ProtocolError)
+                  else ABORT_EXC)
+        try:
+            self._cmd(CMD_ABORT, reason)
+        except Exception:
+            pass               # peer already gone: keep the original error
+        finally:
+            self._stopped = True
 
     def stop_workers(self) -> None:
         """Release the worker loops; the engine stays usable for stats."""
         if self.is_coordinator and not self._stopped:
             self._cmd(CMD_STOP)
             self._stopped = True
+
+    # ------------------------------------------------------ worker ingress
+    # The multi-host residual of the streaming front door: a request can
+    # enter the fleet through ANY process.  A worker's submit_remote()
+    # queues locally; the queue LENGTH rides every header exchange (see
+    # _recv_cmd), so the coordinator learns about remote submits at its
+    # next command - or at an explicit CMD_POLL when otherwise idle - and
+    # pulls the payload with CMD_INGRESS.  Tokens need no backhaul: the
+    # in-program broadcast already replicates every sampled token to every
+    # process, and _track_remote mirrors the worker's own uids off the
+    # plans it executes anyway.
+    def submit_remote(self, prompt, *, max_new: int = 16,
+                      deadline_ms: int = 0) -> int:
+        """Worker-side submit: queue a request for coordinator pickup.
+        Returns its fleet-unique uid (namespaced by process id so remote
+        uids never collide with the coordinator's counter).  ``deadline_ms``
+        is RELATIVE (processes share no clock): the coordinator arms the
+        absolute deadline at ingestion; 0 = none."""
+        assert not self.is_coordinator, \
+            "the coordinator submits locally (submit()/ServeService)"
+        uid = (self.process_id << 20) | self._remote_seq
+        self._remote_seq += 1
+        prompt = np.asarray(prompt, np.int32)
+        self._remote[uid] = {"max_new": int(max_new), "tokens": []}
+        with self._ingress_lock:
+            self._out_q.append((uid, prompt, int(max_new), int(deadline_ms)))
+        return uid
+
+    def remote_tokens(self, uid: int) -> list[int]:
+        """Tokens mirrored so far for a submit_remote() uid (worker-side)."""
+        return list(self._remote[uid]["tokens"])
+
+    def remote_done(self, uid: int) -> bool:
+        rec = self._remote[uid]
+        return len(rec["tokens"]) >= rec["max_new"]
+
+    def poll_ingress(self) -> list[Request]:
+        """Coordinator: pull every announced worker submit into Request
+        objects (the streaming service enqueues them like local traffic).
+        Issues a CMD_POLL rendezvous first when no counts are known yet -
+        an idle fleet still discovers remote submits."""
+        if (not self.is_coordinator or self.n_processes == 1
+                or self._stopped):
+            return []
+        if not any(self._ingress_counts[1:]):
+            self._cmd(CMD_POLL)          # refresh counts via the heartbeat
+        out: list[Request] = []
+        for p in range(1, self.n_processes):
+            if self._ingress_counts[p]:
+                out.extend(self._pull_ingress(p))
+        self.stats["remote_ingress"] += len(out)
+        return out
+
+    def _pull_ingress(self, p: int) -> list[Request]:
+        self._cmd(CMD_INGRESS, p)
+        cnt, = self._broadcast((np.zeros((1,), np.int32),), src=p)
+        reqs = []
+        for _ in range(int(cnt[0])):
+            meta, = self._broadcast((np.zeros((4,), np.int32),), src=p)
+            uid, L, max_new, dl_ms = (int(x) for x in meta)
+            prompt, = self._broadcast((np.zeros((L,), np.int32),), src=p)
+            r = Request(uid=uid, prompt=prompt.astype(np.int32),
+                        max_new=max_new)
+            if dl_ms > 0:
+                r.deadline = self._clock() + dl_ms / 1000.0
+            reqs.append(r)
+        return reqs
+
+    def _serve_ingress(self, src: int) -> None:
+        """Worker side of CMD_INGRESS: process ``src`` drains its queue
+        onto the wire; every other process contributes zeros and discards
+        the received requests (only the coordinator schedules)."""
+        mine = src == self.process_id
+        if mine:
+            with self._ingress_lock:
+                batch = list(self._out_q)
+                self._out_q.clear()
+        else:
+            batch = []
+        cnt, = self._broadcast(
+            (np.array([len(batch)], np.int32),), src=src)
+        for i in range(int(cnt[0])):
+            if mine:
+                uid, prompt, max_new, dl_ms = batch[i]
+                meta = np.array([uid, len(prompt), max_new, dl_ms],
+                                np.int32)
+            else:
+                meta = np.zeros((4,), np.int32)
+            meta, = self._broadcast((meta,), src=src)
+            L = int(meta[1])
+            pr = batch[i][1] if mine else np.zeros((L,), np.int32)
+            self._broadcast((pr,), src=src)
 
     # --------------------------------------------------------- worker loop
     def serve_worker(self) -> None:
@@ -523,13 +766,14 @@ class MultiHostServeEngine(ShardedServeEngine):
         assert not self.is_coordinator, "process 0 is the coordinator"
         S = self.slots
         while True:
-            op, arg, seq = self._recv_cmd()
+            op, arg, seq, n_ex = self._recv_cmd()
             if op == CMD_STOP:
                 return
             if op == CMD_PREFILL:
                 t, sl, m, u, st = self._recv([(S, arg), (S,), (S,), (S,),
                                               (S,)])
-                self._do_prefill(t, sl, m, u, st)
+                ex = self._recv_extras(n_ex)
+                self._do_prefill(t, sl, m, u, st, extras=ex)
             elif op == CMD_CHUNK_FIRST:
                 t, sl, u, st = self._recv([(S, arg), (S,), (S,), (S,)])
                 self._do_chunk_first(t, sl, u, st)
@@ -542,6 +786,10 @@ class MultiHostServeEngine(ShardedServeEngine):
             elif op == CMD_DECODE:
                 t, p, u, st = self._recv([(S, 1), (S, 1), (S,), (S,)])
                 self._do_decode(t, p, u, st)
+            elif op == CMD_INGRESS:
+                self._serve_ingress(arg)
+            elif op == CMD_POLL:
+                pass        # pure rendezvous: ack + counts already rode it
             else:
                 raise ProtocolError(
                     f"unknown multi-host serve opcode {op} at command seq "

@@ -22,10 +22,12 @@ Subprocess fleets ride the helpers in test_serve_multihost.py (ephemeral
 port with EADDRINUSE retry, per-topology compilation-cache subdirs, hard
 per-child timeouts).
 """
+import collections
 import dataclasses
 import json
 import os
 import tempfile
+import threading
 import time
 
 import jax
@@ -285,10 +287,15 @@ def _bare_mh(n_processes=2, process_id=0):
     eng.n_processes = n_processes
     eng.process_id = process_id
     eng.is_coordinator = process_id == 0
-    eng._hdr = 4 + n_processes
+    eng._hdr = 4 + 2 * n_processes    # acks + per-process ingress counts
     eng._seq = 1
     eng._done_seq = 0
     eng._stopped = False
+    eng._ingress_lock = threading.Lock()
+    eng._out_q = collections.deque()
+    eng._ingress_counts = [0] * n_processes
+    eng._remote = {}
+    eng._remote_seq = 1
     eng.fault = FaultInjector()
     return eng
 
@@ -570,3 +577,60 @@ def test_corrupt_header_is_typed_protocol_error():
         assert worker.returncode not in (0, None), outs[1][1][-2000:]
         assert "unknown multi-host serve opcode 99" in outs[1][1]
         assert coord.returncode not in (0, None), outs[0][1][-2000:]
+
+
+def test_extras_protocol_validation_is_typed():
+    """Unsupported extras are typed ProtocolErrors raised at the entry
+    point, BEFORE any command is issued (raising mid-admission would
+    desync the fleet or leak a planned slot)."""
+    eng = _bare_mh()
+    eng.chunked_prefill = False
+    eng.buckets = (8, 16)
+    ok = {"patches": np.zeros((1, 4, 8), np.float32)}
+    eng._validate_extras(5, ok)               # known key, float, 1..4 dims
+    with pytest.raises(ProtocolError, match="not part of the multi-host"):
+        eng._validate_extras(5, {"bogus": np.zeros((1, 2), np.float32)})
+    with pytest.raises(ProtocolError, match="not a float type"):
+        eng._validate_extras(5, {"frames": np.zeros((1, 2), np.int32)})
+    with pytest.raises(ProtocolError, match="shape-tag"):
+        eng._validate_extras(
+            5, {"frames": np.zeros((1, 2, 3, 4, 5), np.float32)})
+    eng.chunked_prefill = True                # oversized + extras: refused
+    with pytest.raises(ProtocolError, match="chunked-prefill"):
+        eng._validate_extras(40, ok)
+    eng._validate_extras(5, ok)               # in-bucket prompt still fine
+
+
+def test_worker_ingress_counts_ride_the_header_exchange():
+    """submit_remote() queues locally under a fleet-unique namespaced uid;
+    the queue LENGTH piggybacks on the very next header exchange (slot
+    4+N+pid), and the coordinator harvests it from any command."""
+    worker = _bare_mh(process_id=1)
+    u1 = worker.submit_remote(np.array([3, 1], np.int32), max_new=4)
+    u2 = worker.submit_remote(np.array([2], np.int32), max_new=2,
+                              deadline_ms=50)
+    assert (u1, u2) == ((1 << 20) | 1, (1 << 20) | 2)
+    shipped = {}
+
+    def exchange(arrays, all_ranks=False, src=0):
+        hdr = np.array(arrays[0], np.int32)
+        shipped["hdr"] = hdr.copy()
+        hdr[0] = 8                            # coordinator sent CMD_POLL
+        return [hdr]
+
+    worker._broadcast = exchange
+    op, arg, seq, n_ex = worker._recv_cmd()
+    assert op == 8 and n_ex == 0
+    assert shipped["hdr"][4 + 2 + 1] == 2     # 2 queued submits announced
+
+    coord = _bare_mh()
+
+    def cexchange(arrays, all_ranks=False, src=0):
+        hdr = np.array(arrays[0], np.int32)
+        hdr[4 + 1] = coord._seq - 1           # worker heartbeat in order
+        hdr[4 + 2 + 1] = 2                    # ... announcing 2 queued
+        return [hdr]
+
+    coord._broadcast = cexchange
+    coord._cmd(8)
+    assert coord._ingress_counts == [0, 2]

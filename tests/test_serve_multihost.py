@@ -277,3 +277,219 @@ def test_process_replicas_single_process_layout():
     n = jax.device_count()
     mesh = Mesh(np.asarray(jax.devices()).reshape(n, 1), ("data", "model"))
     assert process_replicas(mesh) == {jax.process_index(): list(range(n))}
+
+
+# ------------------------------------------------- PR-7: ingress front door
+# Three phases over one 2-process fleet, each vs a single-process
+# ShardedServeEngine reference on the SAME 4x2 logical mesh:
+#   a) vision extras ride the command stream (shape-tagged float32
+#      bitcast over the int32 exchange) token-exactly,
+#   b) worker-side submit_remote() traffic reaches the coordinator via
+#      queue counts on the header exchange + CMD_INGRESS pulls, and the
+#      worker mirrors the finished tokens without any backhaul,
+#   c) the streaming service over the multi-host coordinator: cancel and
+#      deadline evict ONLY their own request, peers bit-exact.
+
+_V7_COMMON = """
+    import json
+    import sys
+
+    def requests(cfg, lens, max_new, seed=0, uids=None):
+        rng = np.random.default_rng(seed)
+        return [Request(uid=(i if uids is None else uids[i]),
+                        prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                        max_new=max_new) for i, L in enumerate(lens)]
+
+    def ingress_prompt(cfg, i):
+        rng = np.random.default_rng(100 + i)
+        return rng.integers(0, cfg.vocab, 4 + 3 * i).astype(np.int32)
+
+    VIS_LENS, VIS_NEW = [3, 5, 9, 12], 4
+    ING_LENS, ING_NEW = [4, 7, 10], 5
+    SVC_LENS, SVC_NEW = [3, 9, 12, 5], 12
+    KW = dict(max_len=64, buckets=(8, 16, 32))
+"""
+
+_V7_REF = _V7_COMMON + """
+    import jax
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import build_model
+    from repro.serve import Request, ShardedServeEngine
+
+    mesh = make_serve_mesh(4, 2)
+    out = {}
+
+    cfg_v = reduced_config("phi-3-vision-4.2b")
+    params_v = build_model(cfg_v).init(jax.random.PRNGKey(0))
+    extras = {"patches": (0.01 * np.random.default_rng(7).standard_normal(
+        (1, cfg_v.frontend_tokens, cfg_v.d_model))).astype(np.float32)}
+    eng = ShardedServeEngine(cfg_v, params_v, mesh=mesh,
+                             slots_per_replica=2, **KW)
+    reqs = requests(cfg_v, VIS_LENS, VIS_NEW)
+    eng.run(reqs, extras=extras)
+    out["extras"] = {str(r.uid): list(map(int, r.generated)) for r in reqs}
+
+    cfg = reduced_config("stablelm-1.6b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = ShardedServeEngine(cfg, params, mesh=mesh,
+                             slots_per_replica=2, **KW)
+    reqs = [Request(uid=(1 << 20) | (i + 1), prompt=ingress_prompt(cfg, i),
+                    max_new=ING_NEW) for i in range(len(ING_LENS))]
+    eng.run(reqs)
+    out["ingress"] = {str(r.uid): list(map(int, r.generated)) for r in reqs}
+
+    eng = ShardedServeEngine(cfg, params, mesh=mesh,
+                             slots_per_replica=2, **KW)
+    reqs = requests(cfg, SVC_LENS, SVC_NEW)
+    eng.run(reqs)
+    out["svc"] = {str(r.uid): list(map(int, r.generated)) for r in reqs}
+
+    with open(sys.argv[1], "w") as f:
+        json.dump(out, f)
+    print("REF OK")
+"""
+
+_V7_MULTI = _V7_COMMON + """
+    proc, port, out_path = int(sys.argv[1]), sys.argv[2], sys.argv[3]
+    import time
+    import jax
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(f"127.0.0.1:{port}", num_processes=2,
+                               process_id=proc)
+    import numpy as np
+    from repro.configs import reduced_config
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import build_model
+    from repro.serve import (MultiHostServeEngine, ProtocolError, Request,
+                             ServeService)
+
+    mesh = make_serve_mesh(4, 2)
+    out = {}
+
+    # ---- phase a: vision extras over the command stream
+    cfg_v = reduced_config("phi-3-vision-4.2b")
+    params_v = build_model(cfg_v).init(jax.random.PRNGKey(0))
+    eng = MultiHostServeEngine(cfg_v, params_v, mesh=mesh,
+                               slots_per_replica=2, **KW)
+    if proc == 0:
+        extras = {"patches": (0.01 * np.random.default_rng(7)
+                              .standard_normal((1, cfg_v.frontend_tokens,
+                                                cfg_v.d_model))
+                              ).astype(np.float32)}
+        reqs = requests(cfg_v, VIS_LENS, VIS_NEW)
+        eng.run(reqs, extras=extras)
+        eng.stop_workers()
+        out["extras"] = {str(r.uid): list(map(int, r.generated))
+                         for r in reqs}
+        try:                       # unknown key: typed, BEFORE any command
+            eng._validate_extras(3, {"bogus": np.zeros((1, 2), np.float32)})
+            out["bad_extra_typed"] = False
+        except ProtocolError:
+            out["bad_extra_typed"] = True
+    else:
+        eng.serve_worker()
+
+    # ---- phase b: worker-side ingress
+    cfg = reduced_config("stablelm-1.6b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = MultiHostServeEngine(cfg, params, mesh=mesh,
+                               slots_per_replica=2, **KW)
+    if proc == 0:
+        got = []
+        while len(got) < len(ING_LENS):
+            got.extend(eng.poll_ingress())
+        eng.run(got)
+        eng.stop_workers()
+        out["ingress"] = {str(r.uid): list(map(int, r.generated))
+                          for r in got}
+        out["remote_ingress_stat"] = eng.stats["remote_ingress"]
+    else:
+        uids = [eng.submit_remote(ingress_prompt(cfg, i), max_new=ING_NEW)
+                for i in range(len(ING_LENS))]
+        eng.serve_worker()
+        out["worker_uids"] = uids
+        out["worker_mirror"] = {str(u): list(map(int, eng.remote_tokens(u)))
+                                for u in uids}
+        out["worker_done"] = all(eng.remote_done(u) for u in uids)
+
+    # ---- phase c: streaming service over the multi-host coordinator
+    eng = MultiHostServeEngine(cfg, params, mesh=mesh,
+                               slots_per_replica=2, **KW)
+    if proc == 0:
+        eng._clock = lambda: float(eng._round)     # deadlines in rounds
+        svc = ServeService(eng, max_pending=8).start()
+        prompts = [r.prompt for r in requests(cfg, SVC_LENS, SVC_NEW)]
+        streams = [svc.submit(p, max_new=SVC_NEW,
+                              deadline_s=(4.0 if i == 2 else None))
+                   for i, p in enumerate(prompts)]
+        got1 = []
+        while len(got1) < 2:                       # cancel uid 1 mid-flight
+            got1.extend(streams[1].drain()[0])
+            time.sleep(0.005)
+        svc.cancel(1, reason="client gone")
+        res = {s.uid: s.result(timeout=600) for s in streams}
+        svc.stop()
+        eng.stop_workers()
+        out["svc"] = {str(u): [list(map(int, t)), fin, err]
+                      for u, (t, fin, err) in res.items()}
+        out["svc_early1"] = list(map(int, got1))
+        out["svc_stats"] = {"cancelled": eng.stats["cancelled"],
+                            "deadline_expired": eng.stats["deadline_expired"],
+                            "free": eng._free_total(), "slots": eng.slots}
+    else:
+        eng.serve_worker()
+
+    suffix = "" if proc == 0 else ".worker"
+    with open(out_path + suffix, "w") as f:
+        json.dump(out, f)
+    print("PROC", proc, "OK")
+"""
+
+
+def test_multihost_ingress_extras_and_service_eviction():
+    with tempfile.TemporaryDirectory() as td:
+        ref_path = os.path.join(td, "ref.json")
+        ref = _run(_V7_REF, [ref_path], devices=8)
+        assert ref.returncode == 0, ref.stderr[-3000:]
+        mh_path = os.path.join(td, "mh.json")
+        procs, outs = _spawn_fleet(_V7_MULTI, [mh_path], n_procs=2,
+                                   devices=4)
+        for p, (so, se) in zip(procs, outs):
+            assert p.returncode == 0, (so[-2000:], se[-3000:])
+        with open(ref_path) as f:
+            want = json.load(f)
+        with open(mh_path) as f:
+            got = json.load(f)
+        with open(mh_path + ".worker") as f:
+            wrk = json.load(f)
+
+    # a) extras: token-exact across the fleet, bad key typed-refused
+    assert got["extras"] == want["extras"]
+    assert got["bad_extra_typed"] is True
+
+    # b) ingress: worker submits scheduled by the coordinator match the
+    # reference AND the worker's local mirror - uids fleet-namespaced
+    assert wrk["worker_uids"] == [(1 << 20) | (i + 1) for i in range(3)]
+    assert got["ingress"] == want["ingress"]
+    assert wrk["worker_mirror"] == want["ingress"]
+    assert wrk["worker_done"] is True
+    assert got["remote_ingress_stat"] == 3
+
+    # c) service: cancel (uid 1) + deadline (uid 2) evict alone; peers
+    # (0, 3) bit-exact vs the single-process reference run
+    svc = got["svc"]
+    for uid in ("0", "3"):
+        toks, fin, err = svc[uid]
+        assert fin == "complete" and toks == want["svc"][uid], uid
+    toks1, fin1, err1 = svc["1"]
+    all1 = got["svc_early1"] + toks1
+    assert fin1 == "cancel" and err1 == "client gone"
+    assert all1 == want["svc"]["1"][:len(all1)] and len(all1) < 12
+    toks2, fin2, err2 = svc["2"]
+    assert fin2 == "deadline" and len(toks2) < 12
+    assert toks2 == want["svc"]["2"][:len(toks2)]
+    st = got["svc_stats"]
+    assert st["cancelled"] == 1 and st["deadline_expired"] == 1
+    assert st["free"] == st["slots"]

@@ -334,6 +334,42 @@ def test_chunked_prefill_matches_unchunked(arch):
     assert eng.stats["chunk_compiles"] <= len(eng.buckets)
 
 
+def test_chunked_cobatch_shares_one_launch_sequence(small_model):
+    """Oversized prompts with EQUAL chunk counts co-batch into ONE shared
+    chunked launch sequence (one first-chunk launch + one continuation per
+    window), instead of each burning a dummy-row-padded sequence alone -
+    and the co-batched tokens stay bit-identical to an engine whose bucket
+    set admits each prompt unchunked."""
+    cfg, m, params = small_model
+    lens = [20, 28, 26]                   # all ceil(L/16) == 2 with chunk=16
+    whole = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16))
+    assert whole.buckets[-1] == 63        # capacity bucket admits unchunked
+    reqs = _requests(cfg, lens, max_new=5)
+    whole.run(reqs)
+    want = [tuple(r.generated) for r in reqs]
+
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16),
+                      chunked_prefill=True)
+    reqs = _requests(cfg, lens, max_new=5)
+    eng.run(reqs)
+    assert [tuple(r.generated) for r in reqs] == want
+    # the co-batch pin: all three requests rode ONE plan - a single
+    # batched first chunk plus a single shared continuation window
+    assert eng.stats["chunked_requests"] == 3
+    assert eng.stats["prefill_batches"] == 1
+    assert eng.stats["chunk_batches"] == 1
+    assert eng.stats["chunk_compiles"] <= 1
+    assert eng.stats["replica_occupancy"] == [0]        # nothing leaked
+
+    # mixed chunk counts do NOT co-batch: 40 needs 3 windows, 20 needs 2
+    eng2 = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16),
+                       chunked_prefill=True)
+    reqs2 = _requests(cfg, [20, 40], max_new=4)
+    eng2.run(reqs2)
+    assert all(r.done and r.error is None for r in reqs2)
+    assert eng2.stats["prefill_batches"] == 2           # one plan per count
+
+
 def test_chunked_extras_rejected_without_leaking_the_slot(small_model):
     """Chunked prefill is text-only; the rejection must fire at the
     run()/submit() ENTRY - raising mid-admission would leak the planned

@@ -220,3 +220,58 @@ def test_sharded_decode_block_is_eight_kernels_per_replica():
         print("OK", n)
     """)
     assert "OK 8" in out
+
+
+# --------------------------------------------- service eviction isolation
+def test_sharded_service_cancel_and_deadline_evict_in_isolation():
+    """The streaming service over a mesh engine (PR-7): a mid-flight
+    cancel and a round-clock deadline each evict exactly their own
+    request - every other stream stays token-for-token equal to the
+    single-device batch run, and all replica slots come back."""
+    out = _run_subprocess(_parity_case("""
+        import time
+        from repro.serve import ServeService
+
+        cfg = reduced_config("stablelm-1.6b")
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        lens = [3, 9, 12, 5, 17, 7]
+        ref = ServeEngine(cfg, params, slots=4, max_len=64,
+                          buckets=(8, 16, 32))
+        refs = requests(cfg, lens, max_new=16)
+        ref.run(refs)
+        want = {r.uid: tuple(r.generated) for r in refs}
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        eng = ShardedServeEngine(cfg, params, mesh=mesh, slots_per_replica=1,
+                                 max_len=64, buckets=(8, 16, 32))
+        eng._clock = lambda: float(eng._round)   # deadlines in rounds
+        svc = ServeService(eng, max_pending=16).start()
+        prompts = [r.prompt for r in requests(cfg, lens, max_new=16)]
+        streams = [svc.submit(p, max_new=16,
+                              deadline_s=(4.0 if i == 2 else None))
+                   for i, p in enumerate(prompts)]
+        got1 = []
+        while len(got1) < 2:                     # uid 1: cancel mid-flight
+            got1.extend(streams[1].drain()[0])
+            time.sleep(0.005)
+        svc.cancel(1, reason="client gone")
+        res = {s.uid: s.result(timeout=600) for s in streams}
+        svc.stop()
+
+        toks, fin, err = res[1]
+        assert fin == "cancel" and err == "client gone"
+        all1 = tuple(got1) + tuple(toks)
+        assert all1 == want[1][:len(all1)] and len(all1) < 16
+        toks2, fin2, err2 = res[2]
+        assert fin2 == "deadline" and len(toks2) < 16
+        assert tuple(toks2) == want[2][:len(toks2)]
+        for uid in (0, 3, 4, 5):                 # untouched peers: exact
+            toks, fin, _ = res[uid]
+            assert fin == "complete" and tuple(toks) == want[uid], uid
+        assert eng.stats["cancelled"] == 1
+        assert eng.stats["deadline_expired"] == 1
+        assert eng.stats["replica_occupancy"] == [0, 0, 0, 0]
+        assert eng._free_total() == eng.slots
+        print("OK")
+    """))
+    assert "OK" in out
