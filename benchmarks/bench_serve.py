@@ -38,6 +38,18 @@ engines is recorded informationally - on a 2-core CI host all processes
 share the cores, so the wall ratio measures coordination overhead plus
 core contention, not replica concurrency.
 
+Paged mode (``--paged``, BENCH_serve_paged.json): max concurrent users
+at a FIXED persistent-pool byte budget.  The slot-row engine reserves a
+full max_len row per slot, so its concurrency is slots = pool_bytes /
+row_bytes; the paged engine spends the SAME byte budget on a page pool
+and admits until the pages (not the rows) run out, so short-lived
+requests pack many more concurrent users into the budget.  Each cell
+serves a short-request workload through both engines (the paged pool is
+sized DOWN to fit inside the slot-row engine's measured pool bytes,
+asserted) and the GATED ``speedup`` is the ratio of peak concurrently
+admitted users paged / slot-row - a deterministic scheduler quantity, fp
+and int8-KV cells both.
+
 Writes the JSON next to this file; ``--quick`` runs the CI smoke cells
 only and ``--compare <baseline.json>`` fails on a >25% geomean speedup
 regression (see _compare.py).
@@ -64,7 +76,7 @@ from _compare import compare
 
 from repro.configs import reduced_config
 from repro.launch.mesh import make_serve_mesh, parse_mesh
-from repro.serve import Request, ServeEngine, ShardedServeEngine
+from repro.serve import Request, ServeConfig, build_engine
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                    "BENCH_serve.json")
@@ -72,6 +84,8 @@ OUT_SHARDED = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "BENCH_serve_sharded.json")
 OUT_MULTIHOST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_serve_multihost.json")
+OUT_PAGED = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_serve_paged.json")
 ARCH = "stablelm-1.6b"
 MULTIPROC_TIMEOUT = 1200       # hard cap on the spawned process pair (s)
 
@@ -88,9 +102,9 @@ def bench_cell(cfg, params, requests: int, slots: int, max_prompt: int) -> dict:
     out = {"requests": requests, "slots": slots, "max_prompt": max_prompt}
     for tag, batched in (("bucketed", True), ("legacy", False)):
         reqs, prompt_tokens = _workload(cfg, requests, max_prompt)
-        eng = ServeEngine(cfg, params, slots=slots,
-                          max_len=max(buckets) + 8, buckets=buckets,
-                          batch_prefill=batched)
+        eng = build_engine(ServeConfig(
+            slots=slots, max_len=max(buckets) + 8, buckets=buckets,
+            batch_prefill=batched), cfg=cfg, params=params)
         t0 = time.perf_counter()
         eng.run(reqs)
         dt = time.perf_counter() - t0
@@ -137,11 +151,10 @@ def bench_mesh_cell(cfg, params, *, data_hi: int, model: int, spr: int,
            "model": model, "data_hi": data_hi}
     per_round = {}
     for data in (1, data_hi):
-        eng = ShardedServeEngine(cfg, params,
-                                 mesh=make_serve_mesh(data, model),
-                                 slots_per_replica=spr,
-                                 max_len=max_prompt + 32,
-                                 buckets=(max_prompt,))
+        eng = build_engine(ServeConfig(
+            mesh=make_serve_mesh(data, model), slots_per_replica=spr,
+            max_len=max_prompt + 32, buckets=(max_prompt,)),
+            cfg=cfg, params=params)
         cell = _ingest_cell(eng, cfg, lo=max_prompt // 2, hi=max_prompt,
                             requests=requests)
         tag = f"d{data}"
@@ -205,20 +218,129 @@ def _ingest_cell(eng, cfg, *, lo: int, hi: int, requests: int) -> dict:
             "tokens_per_round": tokens / rounds}
 
 
+def _tree_bytes(tree) -> int:
+    return sum(np.dtype(x.dtype).itemsize * int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def _peak_users(eng, reqs) -> tuple[int, float]:
+    """Drain ``reqs`` through the engine round by round (the run() loop,
+    instrumented): peak concurrently active requests + wall seconds."""
+    eng.pending.extend(reqs)
+    peak = 0
+    t0 = time.perf_counter()
+    while eng.pending or any(r is not None for r in eng.active):
+        eng._admit(None)
+        peak = max(peak, sum(r is not None for r in eng.active))
+        eng.step()
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    return peak, dt
+
+
+def bench_paged_cell(cfg, params, *, requests: int, max_len: int,
+                     page_size: int, kv: str) -> dict:
+    """Max concurrent users at a fixed persistent-pool byte budget.
+
+    The budget is the slot-row engine's measured pool bytes (4 slots x
+    max_len rows).  The paged engine gets the same budget spent on pages:
+    its pool_pages is sized so its persistent pool fits INSIDE the
+    budget (asserted), with scheduler rows (slots) no longer tied to
+    row reservations.  The workload is short requests (one page of live
+    context each), so concurrency is limited by reserved bytes on the
+    slot-row engine and by actual usage on the paged one.
+    """
+    from repro.models import build_model
+
+    slot_slots = 4
+    buckets = (8, 16, 32)
+    ref = build_engine(ServeConfig(slots=slot_slots, max_len=max_len,
+                                   buckets=buckets), cfg=cfg, params=params)
+    budget = _tree_bytes(ref.caches)
+
+    # the paged pool's bytes are affine in pool_pages (page leaves scale
+    # with pages, flat leaves with slots): probe two shapes to solve for
+    # the largest pool_pages fitting the budget
+    paged_slots = requests
+    mem_len = 8 if cfg.family == "encdec" else 0
+    po = build_model(cfg).paged_cache(paged_slots, max_len, mem_len,
+                                     page_size)
+    bytes_at = lambda p: _tree_bytes(jax.eval_shape(lambda: po.init(p)))
+    per_page = bytes_at(3) - bytes_at(2)
+    base = bytes_at(2) - 2 * per_page
+    pool_pages = int((budget - base) // per_page)
+    assert pool_pages >= 2, "budget too small for a page pool"
+
+    eng = build_engine(ServeConfig(
+        slots=paged_slots, max_len=max_len, buckets=buckets, paged=True,
+        page_size=page_size, pool_pages=pool_pages), cfg=cfg, params=params)
+    paged_bytes = _tree_bytes(eng.caches)
+    assert paged_bytes <= budget, (paged_bytes, budget)
+
+    def workload(seed=0):
+        rng = np.random.default_rng(seed)
+        lens = rng.integers(8, page_size - 8, requests)
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                        max_new=4) for i, L in enumerate(lens)]
+
+    slot_peak, slot_s = _peak_users(ref, workload())
+    paged_peak, paged_s = _peak_users(eng, workload())
+    return {"requests": requests, "max_len": max_len,
+            "page_size": page_size, "kv": kv,
+            "pool_bytes": budget, "paged_pool_bytes": paged_bytes,
+            "pool_pages": pool_pages,
+            "slotrow_peak_users": slot_peak, "paged_peak_users": paged_peak,
+            "slotrow_s": slot_s, "paged_s": paged_s,
+            # deterministic scheduler quantity: concurrently admitted
+            # users at the same persistent-pool byte budget
+            "speedup": paged_peak / slot_peak}
+
+
+def run_paged_sweep(args) -> dict:
+    """fp + int8-KV cells (int8 halves the per-token KV bytes, so the
+    budget buys twice the rows on BOTH engines - the gated ratio pins
+    that paging keeps its packing advantage in the quantized layout)."""
+    import dataclasses
+
+    from repro.models import build_model
+
+    # (requests, max_len, page_size); quick == full: cells are seconds
+    cells_spec = [(24, 256, 32)]
+    cells = []
+    for kv in ("fp", "int8"):
+        cfg = reduced_config(ARCH)
+        if kv == "int8":
+            cfg = dataclasses.replace(cfg, quant_kv="dynamic")
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        for requests, max_len, page_size in cells_spec:
+            cell = bench_paged_cell(cfg, params, requests=requests,
+                                    max_len=max_len, page_size=page_size,
+                                    kv=kv)
+            cells.append(cell)
+            print(f"kv={kv:4s} requests={requests:3d} max_len={max_len} "
+                  f"page={page_size}  pool {cell['pool_bytes']/1e6:6.1f}MB  "
+                  f"slot-row {cell['slotrow_peak_users']:2d} users  "
+                  f"paged {cell['paged_peak_users']:2d} users "
+                  f"({cell['pool_pages']} pages)  "
+                  f"x{cell['speedup']:.2f}")
+    return {"cells": cells,
+            "keys": ("requests", "max_len", "page_size", "kv")}
+
+
 def run_multiproc_child(args, cfg, params) -> None:
     """One jax.distributed process of the --multiproc sweep (spawned by the
     parent with --process-id).  The coordinator (process 0) measures every
     cell and writes the partial JSON the parent merges."""
     from repro.launch.mesh import make_serve_mesh, parse_mesh
-    from repro.serve import MultiHostServeEngine
 
     data, model = parse_mesh(args.mesh)
     out = []
     for spr, max_prompt, requests in _multiproc_cells(args.quick):
-        eng = MultiHostServeEngine(cfg, params, mesh=make_serve_mesh(data, model),
-                                   slots_per_replica=spr,
-                                   max_len=max_prompt + 32,
-                                   buckets=(max_prompt,))
+        eng = build_engine(ServeConfig(
+            mesh=make_serve_mesh(data, model), slots_per_replica=spr,
+            max_len=max_prompt + 32, buckets=(max_prompt,),
+            multihost=True), cfg=cfg, params=params)
         if jax.process_index() == 0:
             cell = _ingest_cell(eng, cfg, lo=max_prompt // 2, hi=max_prompt,
                                 requests=requests)
@@ -246,11 +368,10 @@ def run_multiproc_sweep(args, cfg, params) -> dict:
     data, model = parse_mesh(args.mesh)
     singles = []
     for spr, max_prompt, requests in _multiproc_cells(args.quick):
-        eng = ShardedServeEngine(cfg, params,
-                                 mesh=make_serve_mesh(data, model),
-                                 slots_per_replica=spr,
-                                 max_len=max_prompt + 32,
-                                 buckets=(max_prompt,))
+        eng = build_engine(ServeConfig(
+            mesh=make_serve_mesh(data, model), slots_per_replica=spr,
+            max_len=max_prompt + 32, buckets=(max_prompt,)),
+            cfg=cfg, params=params)
         singles.append(_ingest_cell(eng, cfg, lo=max_prompt // 2,
                                     hi=max_prompt, requests=requests))
 
@@ -320,6 +441,10 @@ def main() -> None:
                     help="with --mesh: compare the single-process sharded "
                          "engine vs MultiHostServeEngine over N "
                          "jax.distributed processes")
+    ap.add_argument("--paged", action="store_true",
+                    help="max-concurrent-users sweep at a fixed "
+                         "persistent-pool byte budget: paged KV pool vs "
+                         "slot-row, fp and int8 KV")
     ap.add_argument("--num-processes", type=int, default=None,
                     help=argparse.SUPPRESS)   # accepted for env bootstrap symmetry
     ap.add_argument("--process-id", type=int, default=None,
@@ -345,6 +470,27 @@ def main() -> None:
 
     if args.process_id is not None:
         run_multiproc_child(args, cfg, params)
+        return
+
+    if args.paged:
+        sweep = run_paged_sweep(args)
+        out = {
+            "meta": {
+                "backend": jax.default_backend(),
+                "device": str(jax.devices()[0]),
+                "arch": ARCH,
+                "jax": jax.__version__,
+                "quick": bool(args.quick),
+            },
+            "cells": sweep["cells"],
+        }
+        out_path = args.out or OUT_PAGED
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out_path}")
+        if args.compare:
+            sys.exit(compare(out, args.compare, keys=sweep["keys"]))
         return
 
     if args.mesh and args.multiproc:

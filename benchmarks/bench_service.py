@@ -47,15 +47,16 @@ from _compare import compare
 
 from repro.configs import reduced_config
 from repro.distributed.fault import FaultPlan
-from repro.serve import Request, ServeEngine, ServeService
+from repro.serve import Request, ServeConfig, ServeService, build_engine
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                    "BENCH_service.json")
 ARCH = "stablelm-1.6b"
 
 
-def _engine(cfg, params, slots):
-    return ServeEngine(cfg, params, slots=slots, max_len=64, buckets=(8,))
+def _engine(cfg, params, slots, fault=None):
+    return build_engine(ServeConfig(slots=slots, max_len=64, buckets=(8,),
+                                    fault=fault), cfg=cfg, params=params)
 
 
 def _wait(pred, timeout=900.0):
@@ -75,8 +76,7 @@ def bench_cell(cfg, params, *, slots: int, watermark: int, rounds: int,
     burst = {r: [[3 + (r + i) % 6, max_new] for i in range(per_round)]
              for r in range(rounds)}
     plan = FaultPlan(burst_rounds=burst)
-    eng = ServeEngine(cfg, params, slots=slots, max_len=64, buckets=(8,),
-                      fault=plan.injector())
+    eng = _engine(cfg, params, slots, fault=plan.injector())
     svc = ServeService(eng, max_pending=watermark).start()
     offered = rounds * per_round
     t0 = time.perf_counter()

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the serving KV-cache pool: flash-decode attention
-over an int8-quantized cache, and the batched slot scatter-write the
-bucketed prefill scheduler uses to land a whole prefill batch into the
-pooled cache in one launch.
+over an int8-quantized cache, and the batched scatter-write the bucketed
+prefill scheduler uses to land a whole prefill batch into the pooled cache
+in one launch - over whole-sequence slot rows (``cache_scatter_p``) or
+fixed-size pages of the paged pool (``cache_scatter_pages_p``).
 
 Beyond-paper extension (DESIGN.md Sec. 2): the KV cache is stored int8 with
 PDQ-predicted per-token-per-head scales, halving (vs bf16) the decode
@@ -162,3 +163,29 @@ def cache_scatter_p(
         out_shape=jax.ShapeDtypeStruct((B, R), dst.dtype),
         interpret=interpret,
     )(src_map.astype(jnp.int32), dst, src)
+
+
+def cache_scatter_pages_p(
+    page_map: jax.Array,  # (N,) int32: source page-row per pool page, or -1
+    dst: jax.Array,       # (N, R) physical page pool, R = one page's elements
+    src: jax.Array,       # (M, R) page-rows (a logical cache leaf reshaped)
+    *,
+    br: int = 8192,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged generalization of ``cache_scatter_p``: rows are fixed-size
+    cache PAGES instead of whole-sequence slot rows.
+
+    The scalar-prefetched machinery is identical - the map is prefetched,
+    the src BlockSpec chases ``max(page_map[n], 0)``, and -1 entries keep
+    the dst page bit-exactly - but the row extent R is one page's elements
+    (page_size x heads x head_dim), so a single launch moves an arbitrary
+    subset of pool pages with no host round-trip.  Both directions of the
+    paged pool ride this one kernel: LANDING a prefill (dst = pool pages,
+    src = the prefill batch reshaped to page-rows, map = the allocator's
+    page tables) and GATHERING for decode (dst = a zeroed per-slot scratch
+    in page-rows, src = pool pages, map = the flattened page tables; -1
+    table entries leave the scratch zero, matching the never-written
+    region of a slot-row cache bit-exactly).
+    """
+    return cache_scatter_p(page_map, dst, src, br=br, interpret=interpret)

@@ -19,7 +19,8 @@ import numpy as np
 
 from . import ref
 from .act_stats import act_stats_p
-from .kv_cache import cache_scatter_p, decode_attend_i8kv_p
+from .kv_cache import (cache_scatter_p, cache_scatter_pages_p,
+                       decode_attend_i8kv_p)
 from .pdq_prologue import pdq_prologue_p
 from .quantize import dequantize_p, quantize_p
 from .w8a8_matmul import w8a8_matmul_p
@@ -569,7 +570,7 @@ def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256):
     return jax.vmap(one)(q, k_q, v_q, k_scale, v_scale, length)
 
 
-def cache_scatter_rows(dst, src, src_map, *, batch_axis: int = 0):
+def cache_scatter_rows(dst, src, src_map, *, batch_axis: int = 0, _entry=None):
     """Batched cache-row scatter: out row s = src[src_map[s]] when
     src_map[s] >= 0, else dst[s] kept bit-exactly.  Any dtype (the int8
     kernel-layout KV leaves included) and any trailing shape.
@@ -578,6 +579,10 @@ def cache_scatter_rows(dst, src, src_map, *, batch_axis: int = 0):
     the stack is folded into the row axis and src_map is expanded per
     stack entry, so the kernel still sees a flat (rows, R) copy problem
     with no transposes.
+
+    ``_entry`` picks the Pallas launch on the kernel path (slot-row
+    ``cache_scatter_p`` by default; ``cache_scatter_pages`` routes the
+    paged entry through here - same machinery, page-sized rows).
     """
     src_map = jnp.asarray(src_map, jnp.int32)
     if batch_axis == 1:
@@ -587,7 +592,8 @@ def cache_scatter_rows(dst, src, src_map, *, batch_axis: int = 0):
                       src_map[None, :] + Bs * jnp.arange(n)[:, None],
                       -1).reshape(n * B)
         out = cache_scatter_rows(dst.reshape((n * B,) + dst.shape[2:]),
-                                 src.reshape((n * Bs,) + src.shape[2:]), m)
+                                 src.reshape((n * Bs,) + src.shape[2:]), m,
+                                 _entry=_entry)
         return out.reshape(dst.shape)
     assert batch_axis == 0, batch_axis
     B = dst.shape[0]
@@ -600,5 +606,57 @@ def cache_scatter_rows(dst, src, src_map, *, batch_axis: int = 0):
         return jnp.where(keep, take, dst)
     d2 = _pad_to(dst.reshape(B, R), 1, 128)
     s2 = _pad_to(src.reshape(src.shape[0], R), 1, 128)
-    out = cache_scatter_p(src_map, d2, s2, interpret=_interpret())
+    entry = cache_scatter_p if _entry is None else _entry
+    out = entry(src_map, d2, s2, interpret=_interpret())
     return out[:, :R].reshape(dst.shape)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache pool: page-rows views + paged scatter (serve/pages.py's
+# device half).  A cache leaf's seq axis is split into fixed-size pages and
+# the page index is folded into the batch/row axis, after which every pool
+# movement (prefill landing, decode gather, COW copy, spill restore) is the
+# SAME row-scatter problem cache_scatter_rows already solves.
+# ---------------------------------------------------------------------------
+
+
+def to_page_rows(x, seq_axis: int, page: int, *, batch_axis: int = 0):
+    """Reshape a logical cache leaf to PAGE-ROWS: the seq axis (length S,
+    S % page == 0) splits into (S//page, page) and the page index merges
+    into the batch axis, giving (..., B * S//page, *page_block) with the
+    page block laid out exactly like a physical pool page.  ``batch_axis``
+    is 0 for head/tail leaves (B leading) and 1 for stacked block leaves
+    (n_blocks, B, ...)."""
+    S = x.shape[seq_axis]
+    assert S % page == 0, (S, page)
+    n_pp = S // page
+    split = x.shape[:seq_axis] + (n_pp, page) + x.shape[seq_axis + 1:]
+    x = jnp.reshape(x, split)
+    lead = batch_axis + 1
+    x = jnp.moveaxis(x, seq_axis, lead)          # page index next to batch
+    B = x.shape[batch_axis]
+    return jnp.reshape(
+        x, x.shape[:batch_axis] + (B * n_pp,) + x.shape[lead + 1:])
+
+
+def from_page_rows(x, shape, seq_axis: int, page: int, *, batch_axis: int = 0):
+    """Inverse of ``to_page_rows``: page-rows back to the logical leaf
+    layout ``shape``."""
+    S = shape[seq_axis]
+    n_pp = S // page
+    B = shape[batch_axis]
+    lead = batch_axis + 1
+    x = jnp.reshape(x, x.shape[:batch_axis] + (B, n_pp) + x.shape[lead:])
+    x = jnp.moveaxis(x, lead, seq_axis)
+    return jnp.reshape(x, shape)
+
+
+def cache_scatter_pages(dst, src, page_map, *, batch_axis: int = 0):
+    """Row scatter over PAGES: ``dst``/``src`` are page-rows arrays (a
+    physical pool, or a logical leaf through ``to_page_rows``) and
+    ``page_map[p] = q`` moves src page-row q into dst page-row p (-1
+    keeps dst bit-exactly).  Kernel path launches
+    ``kv_cache.cache_scatter_pages_p`` - the paged front door of the same
+    scalar-prefetched scatter machinery."""
+    return cache_scatter_rows(dst, src, page_map, batch_axis=batch_axis,
+                              _entry=cache_scatter_pages_p)

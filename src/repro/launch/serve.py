@@ -32,7 +32,6 @@ bootstrap_mesh_env(sys.argv)
 
 import argparse
 import collections
-import dataclasses
 import os
 import signal
 import subprocess
@@ -69,6 +68,21 @@ def build_args(argv=None):
     ap.add_argument("--chunked-prefill", action="store_true",
                     help="split prompts beyond the largest bucket into "
                          "bucket-sized chunks instead of rejecting them")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool: fixed-size pages + indirection "
+                         "tables instead of slot rows (prefix sharing, "
+                         "preempt-and-requeue under pressure)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical pages per replica (--paged; default "
+                         "sizes the pool for slot-row parity)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-write prompt-prefix sharing "
+                         "(--paged)")
+    ap.add_argument("--spill", action="store_true",
+                    help="spill preempted pages to host memory for warm "
+                         "resume (--paged, single-device only)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve over a data x model device mesh "
                          "(ShardedServeEngine)")
@@ -281,60 +295,52 @@ def main(argv=None):
         init_distributed(args.coordinator, args.num_processes,
                          args.process_id)
 
-    import jax
-
-    from repro.configs import ALL_ARCHS, get_config, reduced_config
+    from repro.configs import ALL_ARCHS
     from repro.launch.mesh import make_serve_mesh, parse_mesh
-    from repro.models import build_model
-    from repro.serve import (MultiHostServeEngine, Request, ServeEngine,
-                             ShardedServeEngine)
+    from repro.serve import Request, ServeConfig, build_engine
 
     if args.arch not in ALL_ARCHS:
         raise SystemExit(f"unknown --arch {args.arch!r}; "
                          f"choose from {sorted(ALL_ARCHS)}")
-    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    if args.int8_kv:
-        cfg = dataclasses.replace(cfg, quant_kv="dynamic")
-    bundle = build_model(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
+    if args.paged and args.legacy_prefill:
+        raise SystemExit("--paged needs the bucketed prefill path")
 
-    buckets = tuple(int(b) for b in args.buckets.split(","))
+    mesh = None
     if args.mesh:
         data, model = parse_mesh(args.mesh)
         if data % max(args.num_processes, 1):
             raise SystemExit(f"--mesh data axis ({data}) must divide over "
                              f"--num-processes ({args.num_processes})")
         mesh = make_serve_mesh(data, model)
+
+    sc = ServeConfig(
+        arch=args.arch, reduced=args.reduced, int8_kv=args.int8_kv,
+        slots=args.slots, max_len=args.max_len,
+        quantize_weights=args.int8, temperature=args.temperature,
+        buckets=tuple(int(b) for b in args.buckets.split(",")),
+        batch_prefill=not args.legacy_prefill,
+        chunked_prefill=args.chunked_prefill,
+        pdq_fallback=args.pdq_fallback, mesh=mesh,
+        slots_per_replica=args.slots_per_replica or args.slots,
+        multihost=multiproc, launch_timeout=args.launch_timeout,
+        snapshot_path=args.snapshot, paged=args.paged,
+        page_size=args.page_size, pool_pages=args.pool_pages,
+        prefix_sharing=not args.no_prefix_sharing, spill=args.spill)
+    try:
+        eng = build_engine(sc)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    cfg = eng.cfg
+
+    if mesh is not None:
         spr = args.slots_per_replica or args.slots
-        if multiproc:
-            eng = MultiHostServeEngine(
-                cfg, params, mesh=mesh, slots_per_replica=spr,
-                max_len=args.max_len, quantize_weights=args.int8,
-                temperature=args.temperature, buckets=buckets,
-                chunked_prefill=args.chunked_prefill,
-                pdq_fallback=args.pdq_fallback,
-                launch_timeout=args.launch_timeout,
-                snapshot_path=args.snapshot)
-        else:
-            eng = ShardedServeEngine(
-                cfg, params, mesh=mesh, slots_per_replica=spr,
-                max_len=args.max_len, quantize_weights=args.int8,
-                temperature=args.temperature, buckets=buckets,
-                chunked_prefill=args.chunked_prefill,
-                pdq_fallback=args.pdq_fallback)
-            eng.snapshot_path = args.snapshot
         mode = f"sharded {data}x{model} ({spr} slots/replica)"
         if multiproc:
             mode += f" x{args.num_processes}proc"
     else:
-        eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                          quantize_weights=args.int8,
-                          temperature=args.temperature, buckets=buckets,
-                          batch_prefill=not args.legacy_prefill,
-                          chunked_prefill=args.chunked_prefill,
-                          pdq_fallback=args.pdq_fallback)
-        eng.snapshot_path = args.snapshot
         mode = "legacy" if args.legacy_prefill else "bucketed"
+    if args.paged:
+        mode += f" paged/{args.page_size}"
 
     if multiproc and not eng.is_coordinator:
         print(f"[proc {args.process_id}] worker following the coordinator "

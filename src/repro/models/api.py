@@ -13,10 +13,12 @@ Shapes (assignment):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kernel_ops
 
@@ -64,6 +66,43 @@ class ModelBundle:
     prefill_many: Callable[..., Any] = None
     cache_scatter: Callable[..., Any] = None
     prefill_chunk: Callable[..., Any] = None
+    paged_cache: Callable[..., Any] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _PageMeta:
+    """Per-leaf paging classification (a pytree leaf of the meta tree)."""
+    kind: str            # 'seq' (pageable) | 'flat' (stays per-slot rows)
+    seq_axis: int = -1
+    n_leaf: int = 0      # this leaf's pages per sequence (>= pool n_pp)
+    shape: tuple = ()
+    dtype: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheOps:
+    """Device half of the paged KV-cache pool (serve/pages.py holds the
+    allocator): closures that move data between the physical page pool and
+    the logical (B, ...) cache layout the step functions consume.  Every
+    movement is one fused row scatter per leaf (``ops.cache_scatter_pages``
+    - the same scalar-prefetched machinery as the slot-row scatter), so
+    the paged engine adds no host round-trips.
+
+    Leaves whose shape does not grow with ``max_len`` (SSM/conv state,
+    windowed rings shorter than max_len, encdec memories, the flat ``len``
+    leaf) classify 'flat' and keep their per-slot rows inside the pool
+    tree untouched - paging is per-leaf, not per-family.
+    """
+    page: int
+    n_pp: int            # page-table width: max_len // page
+    meta: Any            # cache-shaped tree of _PageMeta
+    init: Callable[..., Any]       # (n_pages) -> physical pool tree
+    gather: Callable[..., Any]     # (pool, pt, lengths) -> logical caches
+    writeback: Callable[..., Any]  # (pool, logical, pt, positions) -> pool
+    land: Callable[..., Any]       # (pool, sub, src_map, rows, js) -> pool
+    copy: Callable[..., Any]       # (pool, copy_map) -> pool (COW)
+    capture: Callable[..., Any]    # (pool, slot, page_ids) -> host record
+    restore: Callable[..., Any]    # (pool, rec, pmap, src_map) -> pool
 
 
 def build_model(cfg: ArchConfig) -> ModelBundle:
@@ -213,6 +252,189 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
                                    caches["blocks"], sub["blocks"]),
         }
 
+    # ------------------------------------------------------ paged cache pool
+    def paged_cache(batch: int, max_len: int, mem_len: int = 0,
+                    page: int = 64) -> PagedCacheOps:
+        """Build the device ops for a paged cache pool (see PagedCacheOps).
+
+        Pageable leaves are found structurally: a leaf whose shape differs
+        between ``init_caches(max_len)`` and ``init_caches(2 * max_len)``
+        grows with the sequence, and the differing axis is its seq axis;
+        everything else (SSM/conv state, sub-max_len window rings, encdec
+        memories, ``len``) stays flat per-slot rows.  The physical pool
+        replaces (batch, seq) with a single leading page axis: head/tail
+        leaves become (n_pages, ..., page, ...), stacked block leaves
+        (n_blocks, n_pages, ..., page, ...), so the existing
+        ``distributed/sharding.serve_pool_specs`` row-axis specs shard the
+        paged pool over 'data' unchanged.
+        """
+        assert max_len % page == 0, (
+            f"page size {page} must divide max_len {max_len}")
+        n_pp = max_len // page
+        a = jax.eval_shape(lambda: init_caches(batch, max_len, mem_len))
+        b = jax.eval_shape(lambda: init_caches(batch, 2 * max_len, mem_len))
+
+        def classify(sa, sb, ba):
+            diffs = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                     if x != y]
+            if not diffs:
+                return _PageMeta("flat", shape=sa.shape, dtype=sa.dtype)
+            assert len(diffs) == 1, (sa.shape, sb.shape)
+            ax = diffs[0]
+            S = sa.shape[ax]
+            assert S % page == 0, (
+                f"page size {page} does not divide seq extent {S} of cache "
+                f"leaf {sa.shape}; pick a power-of-two page <= 128 that "
+                f"divides max_len")
+            assert S // page >= n_pp, (sa.shape, ax, page, n_pp)
+            return _PageMeta("seq", seq_axis=ax, n_leaf=S // page,
+                             shape=sa.shape, dtype=sa.dtype)
+
+        secs = (("head", 0), ("tail", 0), ("blocks", 1))
+        meta = {sec: jax.tree.map(functools.partial(classify, ba=ba),
+                                  a[sec], b[sec]) for sec, ba in secs}
+        # batch-1 pristine init: the gather scratch must start from each
+        # leaf's INIT fill (``pos`` fills with -1 = empty-slot sentinel, not
+        # zero), so unallocated page regions read bit-exactly like the
+        # never-written region of a slot-row cache
+        base1 = init_caches(1, max_len, mem_len)
+
+        def tmap(fn, *trees):
+            return {sec: jax.tree.map(functools.partial(fn, ba=ba),
+                                      meta[sec], *(t[sec] for t in trees))
+                    for sec, ba in secs}
+
+        def init(n_pages: int):
+            def one(m, *, ba):
+                if m.kind == "flat":
+                    return jnp.zeros(m.shape, m.dtype)
+                shape = list(m.shape)
+                shape[ba] = n_pages
+                shape[m.seq_axis] = page
+                return jnp.zeros(tuple(shape), m.dtype)
+            return tmap(one)
+
+        def gather(pool, pt, lengths):
+            """Physical pages -> a (B, ...) logical tree the unmodified
+            decode step runs on.  pt: (B, n_pp) int32 page tables;
+            lengths: (B,) written tokens per row.  -1 entries and pages at
+            or beyond the write frontier gather nothing, leaving the
+            scratch at the leaf's INIT fill - bit-exactly the
+            never-written region of a slot-row cache.  The frontier mask
+            also launders recycled pages: a page freshly allocated for
+            decode growth (still holding its previous owner's bytes) is
+            masked on first gather, written through the logical scratch,
+            and comes back fully cleaned by ``writeback``."""
+            B = pt.shape[0]
+            keep = (jnp.arange(pt.shape[1], dtype=jnp.int32)[None, :] * page
+                    ) < lengths[:, None]
+            pt = jnp.where(keep, pt, -1)
+
+            def one(m, pool_leaf, b1, *, ba):
+                if m.kind == "flat":
+                    return pool_leaf
+                shape = list(m.shape)
+                shape[ba] = B                  # local batch under shard_map
+                z = jnp.broadcast_to(b1, tuple(shape))
+                zp = kernel_ops.to_page_rows(z, m.seq_axis, page,
+                                             batch_axis=ba)
+                gmap = jnp.full((B, m.n_leaf), -1, jnp.int32)
+                gmap = gmap.at[:, :pt.shape[1]].set(pt).reshape(B * m.n_leaf)
+                out = kernel_ops.cache_scatter_pages(zp, pool_leaf, gmap,
+                                                     batch_axis=ba)
+                return kernel_ops.from_page_rows(out, tuple(shape),
+                                                 m.seq_axis, page,
+                                                 batch_axis=ba)
+            return tmap(one, pool, base1)
+
+        def writeback(pool, logical, pt, positions):
+            """Scatter each live row's decode-written page (the one holding
+            ``positions[b]``) back into the pool.  Free slots (-1 table
+            entries) land on the write-only DUMP page 0."""
+            B = pt.shape[0]
+            jb = jnp.clip(positions[:, 0] // page, 0, pt.shape[1] - 1)
+            ent = pt[jnp.arange(B), jb]
+            tgt = jnp.where(ent > 0, ent, 0)
+
+            def one(m, pool_leaf, lg, *, ba):
+                if m.kind == "flat":
+                    return lg                  # flat state IS the new rows
+                N = pool_leaf.shape[ba]
+                wmap = jnp.full((N,), -1, jnp.int32)
+                wmap = wmap.at[tgt].set(jnp.arange(B) * m.n_leaf + jb)
+                lp = kernel_ops.to_page_rows(lg, m.seq_axis, page,
+                                             batch_axis=ba)
+                return kernel_ops.cache_scatter_pages(pool_leaf, lp, wmap,
+                                                      batch_axis=ba)
+            return tmap(one, pool, logical)
+
+        def land(pool, sub, src_map, land_rows, land_js):
+            """Land a bucketed prefill batch: flat leaves scatter whole
+            slot rows through ``src_map`` (the existing semantics); paged
+            leaves scatter pages - pool page p takes page ``land_js[p]``
+            of scratch row ``land_rows[p]`` (-1 keeps; shared prefix pages
+            are excluded by the planner)."""
+            def one(m, pool_leaf, s, *, ba):
+                if m.kind == "flat":
+                    return kernel_ops.cache_scatter_rows(pool_leaf, s,
+                                                         src_map,
+                                                         batch_axis=ba)
+                lmap = jnp.where(land_rows >= 0,
+                                 land_rows * m.n_leaf + land_js, -1)
+                sp = kernel_ops.to_page_rows(s, m.seq_axis, page,
+                                             batch_axis=ba)
+                return kernel_ops.cache_scatter_pages(pool_leaf, sp, lmap,
+                                                      batch_axis=ba)
+            return tmap(one, pool, sub)
+
+        def copy(pool, copy_map):
+            """Pool-internal page copy (the COW arm): page p takes page
+            ``copy_map[p]`` (-1 keeps)."""
+            def one(m, pool_leaf, *, ba):
+                if m.kind == "flat":
+                    return pool_leaf
+                return kernel_ops.cache_scatter_pages(pool_leaf, pool_leaf,
+                                                      copy_map,
+                                                      batch_axis=ba)
+            return tmap(one, pool)
+
+        def capture(pool, slot: int, page_ids):
+            """Host (numpy) copy of one request's pages - padded to n_pp
+            so the restore program compiles once - plus its flat per-slot
+            rows: the spill record's payload."""
+            ids = jnp.asarray(np.asarray(page_ids, np.int32))
+            k = int(ids.shape[0])
+
+            def one(m, pool_leaf, *, ba):
+                if m.kind == "flat":
+                    sel = pool_leaf[slot:slot + 1] if ba == 0 else \
+                        pool_leaf[:, slot:slot + 1]
+                    return np.asarray(sel)
+                sel = np.asarray(jnp.take(pool_leaf, ids, axis=ba))
+                pad = list(sel.shape)
+                pad[ba] = n_pp - k
+                return np.concatenate(
+                    [sel, np.zeros(pad, sel.dtype)], axis=ba)
+            return tmap(one, pool)
+
+        def restore(pool, rec, pmap, src_map):
+            """Scatter a spill record back in: paged leaves from its
+            captured (n_pp-padded) pages through ``pmap`` (pool page ->
+            record page index, -1 keeps), flat leaves from its captured
+            rows through ``src_map`` (slot -> record row 0, -1 keeps)."""
+            def one(m, pool_leaf, rv, *, ba):
+                if m.kind == "flat":
+                    return kernel_ops.cache_scatter_rows(pool_leaf, rv,
+                                                         src_map,
+                                                         batch_axis=ba)
+                return kernel_ops.cache_scatter_pages(pool_leaf, rv, pmap,
+                                                      batch_axis=ba)
+            return tmap(one, pool, rec)
+
+        return PagedCacheOps(page=page, n_pp=n_pp, meta=meta, init=init,
+                             gather=gather, writeback=writeback, land=land,
+                             copy=copy, capture=capture, restore=restore)
+
     # ------------------------------------------------------------ dry-run IO
     def input_specs(shape_name: str) -> dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every input of the step function."""
@@ -256,4 +478,4 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
                        init_caches=init_caches, input_specs=input_specs,
                        cache_slice=cache_slice, cache_merge=cache_merge,
                        prefill_many=prefill_many, cache_scatter=cache_scatter,
-                       prefill_chunk=prefill_chunk)
+                       prefill_chunk=prefill_chunk, paged_cache=paged_cache)

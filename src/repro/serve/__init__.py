@@ -1,14 +1,26 @@
+"""Public serving surface.
+
+Construct engines through ``ServeConfig`` + ``build_engine`` (the one
+factory every launcher/benchmark/test shares); the engine classes remain
+importable for subclassing and isinstance checks.  Everything in
+``__all__`` is covered by the cross-PR compatibility expectation -
+anything else under ``repro.serve.*`` is internal.
+"""
 from . import core, engine
+from .config import ServeConfig, build_engine, resolve_model
 from .core import (DEFAULT_BUCKETS, EngineDraining, Request, SchedulerCore,
                    resume_requests)
 from .engine import ServeEngine
 from .frontend import HttpFrontend
 from .multihost import CoordinatorAbort, MultiHostServeEngine, ProtocolError
+from .pages import PageError, PagePool, PrefixStore
 from .service import OverloadedError, ServeService, TokenStream
 from .sharded import ShardedServeEngine
 
-__all__ = ["DEFAULT_BUCKETS", "Request", "SchedulerCore", "ServeEngine",
+__all__ = ["ServeConfig", "build_engine", "resolve_model",
+           "DEFAULT_BUCKETS", "Request", "SchedulerCore", "ServeEngine",
            "ShardedServeEngine", "MultiHostServeEngine", "CoordinatorAbort",
            "ProtocolError", "EngineDraining", "OverloadedError",
+           "PagePool", "PrefixStore", "PageError",
            "ServeService", "TokenStream", "HttpFrontend", "resume_requests",
            "core", "engine"]

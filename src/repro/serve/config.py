@@ -1,0 +1,137 @@
+"""One construction surface for every serving engine: ``ServeConfig``.
+
+The three engines (single-device, sharded, multi-host) historically grew
+near-identical keyword lists, and every call site - the launcher, the
+benchmarks, the tests - re-spelled them.  ``ServeConfig`` is the single
+declarative record of a serving deployment; ``build_engine(config)``
+resolves it to the right engine class:
+
+  * no ``mesh``                  -> ``ServeEngine`` (single device)
+  * ``mesh``                     -> ``ShardedServeEngine``
+  * ``mesh`` + ``multihost=True``-> ``MultiHostServeEngine`` (the caller
+    must already have joined the ``jax.distributed`` job)
+
+The model config/params can be passed explicitly (the common case when a
+caller sweeps engines over one warm param tree), or resolved from
+``arch``/``reduced``/``int8_kv`` when omitted - the launcher's flags map
+1:1 onto these fields.
+
+``ServeConfig`` is a frozen dataclass: a value, not a builder.  Use
+``dataclasses.replace`` to derive variants (the benchmarks derive the
+paged/unpaged cells from one base config this way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from .core import DEFAULT_BUCKETS
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Declarative description of one serving deployment."""
+
+    # ---- model selection (used only when build_engine gets no cfg/params)
+    arch: str = "stablelm-1.6b"
+    reduced: bool = True            # reduced_config() vs full get_config()
+    int8_kv: bool = False           # quant_kv="dynamic" on the model config
+
+    # ---- engine knobs (shared by all engines)
+    slots: int = 4                  # total slots (single-device engines)
+    max_len: int = 256
+    quantize_weights: bool = False  # PDQ int8 weights
+    temperature: float = 0.0
+    seed: int | None = None         # sampling PRNGKey seed (None -> engine default)
+    buckets: tuple[int, ...] = DEFAULT_BUCKETS
+    batch_prefill: bool = True
+    chunked_prefill: bool = False
+    fault: Any = None               # FaultInjector (tests only)
+    pdq_fallback: bool = False
+
+    # ---- topology
+    mesh: Any = None                # a jax ('data','model') Mesh -> sharded
+    slots_per_replica: int | None = None   # mesh engines (default: slots)
+    multihost: bool = False         # mesh + jax.distributed -> MultiHost
+    launch_timeout: float | None = None    # multihost collective watchdog
+    snapshot_path: str | None = None
+
+    # ---- paged KV pool
+    paged: bool = False
+    page_size: int = 64
+    pool_pages: int | None = None   # per-replica physical pages (None: parity)
+    prefix_sharing: bool = True
+    spill: bool = False             # host spill (single-device only)
+
+    def validate(self) -> "ServeConfig":
+        if self.multihost and self.mesh is None:
+            raise ValueError("multihost=True needs a mesh")
+        if self.mesh is not None and self.spill:
+            raise ValueError("host spill is single-device only")
+        if self.paged and not self.batch_prefill:
+            raise ValueError("the paged pool needs batch_prefill=True")
+        return self
+
+
+def resolve_model(config: ServeConfig):
+    """(cfg, params) for ``config``'s model selection fields."""
+    import jax
+
+    from repro.configs import get_config, reduced_config
+    from repro.models import build_model
+
+    cfg = (reduced_config(config.arch) if config.reduced
+           else get_config(config.arch))
+    if config.int8_kv:
+        cfg = dataclasses.replace(cfg, quant_kv="dynamic")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def build_engine(config: ServeConfig, *, cfg=None, params=None):
+    """Construct the engine ``config`` describes.
+
+    ``cfg``/``params`` override the model-selection fields when given
+    (both or neither): sweeping engine variants over one warm param tree
+    is the common case in benchmarks and tests.
+    """
+    config.validate()
+    if (cfg is None) != (params is None):
+        raise ValueError("pass both cfg and params, or neither")
+    if cfg is None:
+        cfg, params = resolve_model(config)
+
+    import jax
+
+    rng = None if config.seed is None else jax.random.PRNGKey(config.seed)
+    common = dict(max_len=config.max_len,
+                  quantize_weights=config.quantize_weights,
+                  temperature=config.temperature, rng=rng,
+                  buckets=config.buckets,
+                  chunked_prefill=config.chunked_prefill,
+                  fault=config.fault, pdq_fallback=config.pdq_fallback,
+                  paged=config.paged, page_size=config.page_size,
+                  pool_pages=config.pool_pages,
+                  prefix_sharing=config.prefix_sharing)
+
+    if config.mesh is None:
+        from .engine import ServeEngine
+        eng = ServeEngine(cfg, params, slots=config.slots,
+                          batch_prefill=config.batch_prefill,
+                          spill=config.spill, **common)
+    else:
+        spr = (config.slots_per_replica if config.slots_per_replica
+               is not None else config.slots)
+        if config.multihost:
+            from .multihost import MultiHostServeEngine
+            eng = MultiHostServeEngine(
+                cfg, params, mesh=config.mesh, slots_per_replica=spr,
+                launch_timeout=config.launch_timeout,
+                snapshot_path=config.snapshot_path, **common)
+        else:
+            from .sharded import ShardedServeEngine
+            eng = ShardedServeEngine(cfg, params, mesh=config.mesh,
+                                     slots_per_replica=spr, **common)
+    if config.snapshot_path and not config.multihost:
+        eng.snapshot_path = config.snapshot_path
+    return eng

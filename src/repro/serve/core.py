@@ -44,6 +44,8 @@ import numpy as np
 from repro.distributed.fault import (FailureLog, FaultInjector,
                                      StragglerWatchdog, save_snapshot)
 
+from .pages import PageError, PagePool, PrefixStore, pages_for
+
 DEFAULT_BUCKETS = (32, 64, 128, 256)
 
 
@@ -68,6 +70,10 @@ class Request:
     # how the request left the engine: 'complete' | 'failed' | 'cancel' |
     # 'deadline' | 'disconnect' | 'slow_consumer' | 'drain' (service-side)
     finish_reason: str | None = None
+    # tokens already delivered to stream observers: a preempted request
+    # regenerates its tokens bit-exactly ((uid, step) sampling keys), and
+    # this watermark keeps ``_emit_token`` from delivering them twice
+    emitted: int = 0
 
 
 @dataclasses.dataclass
@@ -86,6 +92,12 @@ class PrefillPlan:
     real_tokens: int                 # prompt tokens (pads excluded)
     row_uids: np.ndarray = None      # (slots,) int32; -1 = dummy row
     row_steps: np.ndarray = None     # (slots,) int32 token index; -1 = dummy
+    # paged pool landing maps (None on slot-row engines): pool page p takes
+    # page ``land_js[p]`` of replica-local scratch row ``land_rows[p]``;
+    # -1 keeps the page (unallocated, or a shared prefix page)
+    land_rows: np.ndarray = None     # (n_replicas * pool_pages,) int32
+    land_js: np.ndarray = None       # (n_replicas * pool_pages,) int32
+    share_ok: bool = False           # apply may register prefix pages
 
 
 @dataclasses.dataclass
@@ -104,6 +116,9 @@ class ChunkedPlan:
     src_map: np.ndarray              # (slots,) int32
     row_uids: np.ndarray = None      # (slots,) int32; -1 = dummy row
     row_steps: np.ndarray = None     # (slots,) int32; -1 = dummy row
+    land_rows: np.ndarray = None     # (n_replicas * pool_pages,) int32
+    land_js: np.ndarray = None       # (n_replicas * pool_pages,) int32
+    share_ok: bool = False
 
 
 @dataclasses.dataclass
@@ -113,6 +128,9 @@ class DecodePlan:
     positions: np.ndarray            # (slots, 1) int32
     row_uids: np.ndarray = None      # (slots,) int32; -1 = free slot
     row_steps: np.ndarray = None     # (slots,) int32; -1 = free slot
+    # paged pool: per-slot page-table rows with replica-LOCAL page ids
+    # (-1 beyond each row's allocation; free slots all -1)
+    page_tables: np.ndarray = None   # (slots, n_pp) int32
 
 
 class SchedulerCore:
@@ -205,6 +223,11 @@ class SchedulerCore:
         # when a request leaves the engine (complete or failed/evicted)
         self.on_token = None
         self.on_finish = None
+        # paged-pool defaults: engines opt in via _init_paging() AFTER this
+        self.paged = False
+        self.page_pools: list[PagePool] = []
+        self._slot_uids: list[int | None] = [None] * slots
+        self._spilled: dict[int, Any] = {}      # uid -> SpillRecord
         self.stats: dict[str, Any] = {
             "prefill_compiles": 0,     # distinct prefill executables traced
             "chunk_compiles": 0,       # distinct prefill_chunk executables
@@ -231,6 +254,48 @@ class SchedulerCore:
             "replica_occupancy": [0] * n_replicas,
         }
 
+    def _init_paging(self, *, page_size: int, pool_pages: int, n_pp: int,
+                     prefix_sharing: bool = True, spill: bool = False) -> None:
+        """Turn the slot pool into a paged pool: one ``PagePool`` allocator
+        (+ ``PrefixStore``) per replica, driven entirely at plan time - the
+        device side consumes page tables and land maps shipped inside the
+        plans.  ``pool_pages`` is per replica and INCLUDES the dump page;
+        ``pool_pages >= n_pp + 1`` (asserted by PagePool) guarantees a
+        sole live request can always grow to max_len, which is what makes
+        the preemption loop terminate."""
+        self.paged = True
+        self.page_size = int(page_size)
+        self.n_pp = int(n_pp)
+        self.pool_pages = int(pool_pages)
+        # sharing keys on token prefixes; patch tokens (vision) shift every
+        # position, and per-request extras change cache content - disable
+        self.prefix_sharing = bool(prefix_sharing) and self.patch_tokens == 0
+        self.spill_enabled = bool(spill)
+        self.page_pools = [PagePool(pool_pages, n_pp, page_size)
+                           for _ in range(self.n_replicas)]
+        self.prefix_stores = [PrefixStore(page_size)
+                              for _ in range(self.n_replicas)]
+        for pool, store in zip(self.page_pools, self.prefix_stores):
+            pool.on_free = store.drop_page
+        self._slot_seq = [0] * self.slots    # activation order (preempt LIFO)
+        self._act_seq = 0
+        self._shared_k: dict[int, int] = {}  # uid -> shared prefix pages
+        self.stats.update(
+            pages_total=(pool_pages - 1) * self.n_replicas,
+            pages_used=0, preemptions=0, spills=0, spill_restores=0,
+            prefix_hits=0, prefix_shared_pages=0, cow_copies=0)
+
+    def _refresh_page_stats(self) -> None:
+        if not self.paged:
+            return
+        self.stats["pages_used"] = sum(p.used_pages() for p in self.page_pools)
+        self.stats["cow_copies"] = sum(p.stats["cow_copies"]
+                                       for p in self.page_pools)
+        self.stats["prefix_hits"] = sum(s.stats["prefix_hits"]
+                                        for s in self.prefix_stores)
+        self.stats["prefix_shared_pages"] = sum(
+            s.stats["prefix_shared_pages"] for s in self.prefix_stores)
+
     # ------------------------------------------------------------ exec hooks
     def _exec_prefill(self, plan: PrefillPlan, extras):
         """Run ONE bucketed prefill + cache scatter; return ``(nxt, ok)``:
@@ -250,6 +315,22 @@ class SchedulerCore:
         raise NotImplementedError(
             "the legacy per-request path is single-device only")
 
+    # paged-pool hooks (engines with paged=True implement these)
+    def _exec_page_copy(self, replica: int, pairs) -> None:
+        """Device copy of pool pages [(src, dst), ...] on one replica (the
+        COW arm of ``PagePool.ensure_writable``)."""
+        raise NotImplementedError
+
+    def _exec_spill(self, slot: int, uid: int, page_ids):
+        """Capture a preempted request's pages + flat rows to host memory;
+        returns a ``pages.SpillRecord`` (warm resume) or raises."""
+        raise NotImplementedError
+
+    def _exec_restore(self, slot: int, rec, page_ids) -> None:
+        """Scatter a SpillRecord back into freshly allocated pages + the
+        claimed slot's flat rows."""
+        raise NotImplementedError
+
     def _fleet_abort(self, e: BaseException) -> None:
         """A non-isolated scheduling error killed the driver loop: engines
         with peers to release override this (multi-host broadcasts
@@ -263,6 +344,10 @@ class SchedulerCore:
 
     # --------------------------------------------------- stream observers
     def _emit_token(self, req: Request, tok: int) -> None:
+        idx = len(req.generated) - 1
+        if idx < req.emitted:
+            return      # preempt-regenerated token: already delivered
+        req.emitted = idx + 1
         if self.on_token is not None:
             self.on_token(req, tok)
 
@@ -279,6 +364,7 @@ class SchedulerCore:
         req.error = str(err)
         req.finish_reason = kind if kind in (
             "cancel", "deadline", "disconnect", "slow_consumer") else "failed"
+        self._spilled.pop(req.uid, None)    # drop any host-spilled pages
         self.finished.append(req)
         self.stats["failed"] += 1
         self.failures.record(self._round, kind, f"uid={req.uid}: {err}")
@@ -458,6 +544,14 @@ class SchedulerCore:
         r = slot // self.slots_per_replica
         self._free_r[r].append(slot)
         self.stats["replica_occupancy"][r] -= 1
+        if self.paged:
+            # THE page-freeing choke point: every slot-release path
+            # (complete, fail, cancel, deadline, preempt) funnels here
+            uid = self._slot_uids[slot]
+            if uid is not None:
+                self.page_pools[r].release(uid)
+                self._shared_k.pop(uid, None)
+                self._slot_uids[slot] = None
 
     def _assign(self, reqs: list[Request]) -> list[list[Request]]:
         """Route same-bucket admits to replicas, least-loaded first (most
@@ -516,12 +610,102 @@ class SchedulerCore:
                 row_steps[ri * spr + i] = len(r.generated)
                 slot = self._take_slot(ri)
                 src_map[slot] = i                        # replica-local row
+                self._bind_slot(slot, r)
                 placed.append((slot, ri * spr + i, r))
+        land_rows, land_js = self._land_maps(placed, src_map)
         return PrefillPlan(bucket=bucket, tokens=tokens, seq_lens=seq_lens,
                            src_map=src_map, placed=placed,
                            per_counts=[len(g) for g in per],
                            real_tokens=int(seq_lens.sum()),
-                           row_uids=row_uids, row_steps=row_steps)
+                           row_uids=row_uids, row_steps=row_steps,
+                           land_rows=land_rows, land_js=land_js)
+
+    def _bind_slot(self, slot: int, req: Request) -> None:
+        """Bind the placed request's uid to its slot (page freeing rides
+        ``_release_slot``) and stamp the activation sequence the
+        preemption policy orders victims by (youngest first)."""
+        if not self.paged:
+            return
+        self._slot_uids[slot] = req.uid
+        self._act_seq += 1
+        self._slot_seq[slot] = self._act_seq
+
+    def _land_maps(self, placed, src_map):
+        """Landing maps for a prefill/chunked plan: pool page p (replica-
+        local id, laid out per replica block) takes page ``land_js[p]`` of
+        replica-local scratch row ``land_rows[p]``.  ALL allocated pages
+        land - including the tail beyond the prompt, whose scratch content
+        is the pristine init fill, bit-exactly the never-written region of
+        a slot-row cache.  Shared prefix pages are excluded (their content
+        is already in the pool; first writer landed it)."""
+        if not self.paged:
+            return None, None
+        spr = self.slots_per_replica
+        N = self.pool_pages * self.n_replicas
+        land_rows = np.full((N,), -1, np.int32)
+        land_js = np.zeros((N,), np.int32)
+        for slot, _, r in placed:
+            ri = slot // spr
+            base = ri * self.pool_pages
+            row = int(src_map[slot])                     # local scratch row
+            k = self._shared_k.get(r.uid, 0)
+            for j, p in enumerate(self.page_pools[ri].pages(r.uid)):
+                if j < k:
+                    continue                             # shared prefix page
+                land_rows[base + p] = row
+                land_js[base + p] = j
+        return land_rows, land_js
+
+    def _register_prefix(self, plan, slot: int, req: Request) -> None:
+        """Publish the landed prompt's full pages for COW sharing.  Runs
+        after the ok check (poisoned rows never publish) and before
+        ``_activate`` - if activation completes the request immediately
+        (max_new == 1) the release fires ``on_free`` and the entry drops
+        again, so the store never outlives the pages."""
+        if not (self.paged and plan.share_ok):
+            return
+        ri = slot // self.slots_per_replica
+        self.prefix_stores[ri].register(
+            np.asarray(req.prompt), self.page_pools[ri].pages(req.uid))
+
+    def _claim_pages(self, ri: int, req: Request, extras) -> bool:
+        """Claim this request's prompt pages on replica ``ri`` at PLAN
+        time: longest registered prefix is aliased read-only (refcounted),
+        the rest allocated fresh.  On PageError nothing is held (alloc is
+        side-effect free + release drops the shared refs) and the caller
+        defers the request instead of admitting it."""
+        pool = self.page_pools[ri]
+        need = pages_for(len(req.prompt) + self.patch_tokens, self.page_size)
+        k, shared = ((0, []) if not self.prefix_sharing or extras
+                     else self.prefix_stores[ri].lookup(np.asarray(req.prompt)))
+        pool.attach(req.uid)
+        pool.share(req.uid, shared)
+        try:
+            pool.alloc(req.uid, need - k)
+        except PageError:
+            pool.release(req.uid)
+            return False
+        if k:
+            self._shared_k[req.uid] = k
+        return True
+
+    def _claim_per(self, per: list[list[Request]], extras):
+        """Page-claim filter over an assigned admission group: requests
+        whose pages do not fit are pushed BACK to the queue front (FIFO
+        preserved) and retried next round - decode completions and
+        preemptions free pages between rounds."""
+        kept: list[list[Request]] = []
+        deferred: list[Request] = []
+        for ri, group in enumerate(per):
+            kept.append([])
+            for r in group:
+                if self._claim_pages(ri, r, extras):
+                    kept[ri].append(r)
+                else:
+                    deferred.append(r)
+        for r in reversed(deferred):
+            self.pending.appendleft(r)
+        return kept, len(deferred)
 
     def _apply_prefill(self, plan: PrefillPlan, res) -> None:
         nxt, ok = res
@@ -536,6 +720,7 @@ class SchedulerCore:
                 self._release_slot(slot)
                 self._fail(r, "non-finite logits at prefill", "nonfinite")
                 continue
+            self._register_prefix(plan, slot, r)
             self._activate(slot, r, int(plan.seq_lens[row]), int(nxt[row]))
         self._inflight = []
         self.stats["prefill_batches"] += 1
@@ -543,7 +728,8 @@ class SchedulerCore:
         self.stats["prefill_tokens"] += plan.real_tokens
         self.stats["prefill_padded_tokens"] += self.slots * plan.bucket
 
-    def _plan_chunked(self, reqs: list[Request]) -> ChunkedPlan:
+    def _plan_chunked(self, reqs: list[Request],
+                      per: list[list[Request]] | None = None) -> ChunkedPlan:
         """Split oversized prompts with EQUAL chunk counts into one shared
         launch sequence.  Each prompt rides its own row of the replica
         blocks (least-loaded routing, like ``_plan_prefill``); every chunk
@@ -554,7 +740,10 @@ class SchedulerCore:
         spr = self.slots_per_replica
         Bp = self.slots
         chunk = self.buckets[-1]
-        per = self._assign(reqs)
+        if per is None:
+            per = self._assign(reqs)
+        else:
+            reqs = [r for g in per for r in g]
         n_chunks = -(-len(reqs[0].prompt) // chunk)
         assert all(-(-len(r.prompt) // chunk) == n_chunks for r in reqs)
 
@@ -571,7 +760,9 @@ class SchedulerCore:
                 row_steps[row] = len(r.generated)
                 slot = self._take_slot(ri)
                 src_map[slot] = i                        # replica-local row
+                self._bind_slot(slot, r)
                 placed.append((slot, row, r))
+        land_rows, land_js = self._land_maps(placed, src_map)
 
         # first chunk: with n_chunks >= 2 every prompt fills a whole window
         tokens = np.zeros((Bp, chunk), np.int32)
@@ -598,7 +789,8 @@ class SchedulerCore:
         return ChunkedPlan(placed=placed, per_counts=[len(g) for g in per],
                            real_tokens=sum(p.size for _, p in rows),
                            first=first, chunks=chunks, src_map=src_map,
-                           row_uids=row_uids, row_steps=row_steps)
+                           row_uids=row_uids, row_steps=row_steps,
+                           land_rows=land_rows, land_js=land_js)
 
     def _apply_chunked(self, plan: ChunkedPlan, res) -> None:
         nxt, ok = res
@@ -616,6 +808,7 @@ class SchedulerCore:
                 self._fail(r, "non-finite logits at chunked prefill",
                            "nonfinite")
                 continue
+            self._register_prefix(plan, slot, r)
             self._activate(slot, r, len(r.prompt), int(nxt[row]))
         self._inflight = []
         self.stats["prefill_requests"] += len(plan.placed)
@@ -674,16 +867,27 @@ class SchedulerCore:
                 apply_fn(plan, res)
 
         def flush():
+            nonlocal admitted
+            share = self.paged and self.prefix_sharing and not extras
             for key in order:
+                per = self._assign(groups[key])
+                if self.paged:
+                    # claim pages at plan time; requests that don't fit go
+                    # back to the queue front and wait for frees/preempts
+                    per, n_deferred = self._claim_per(per, extras)
+                    admitted -= n_deferred
+                    if not any(per):
+                        continue
                 if key[0] == "chunk":
-                    plan = self._plan_chunked(groups[key])
+                    plan = self._plan_chunked(groups[key], per=per)
+                    plan.share_ok = share
                     launch("chunked", plan,
                            [(s, r) for s, _, r in plan.placed],
                            lambda p=plan: self._exec_chunked(p, extras),
                            self._apply_chunked)
                 else:
-                    plan = self._plan_prefill(self._assign(groups[key]),
-                                              key[1])
+                    plan = self._plan_prefill(per, key[1])
+                    plan.share_ok = share
                     launch("prefill", plan,
                            [(s, r) for s, _, r in plan.placed],
                            lambda p=plan: self._exec_prefill(p, extras),
@@ -691,8 +895,17 @@ class SchedulerCore:
             groups.clear()
             order.clear()
 
+        holdback: list[Request] = []   # spilled uids that couldn't restore
         while self.pending and admitted < free:   # consumes a queue prefix
             r = self.pending.popleft()
+            if self.paged and r.uid in self._spilled:
+                # preempted-and-spilled: warm resume from the host copy
+                # instead of re-prefilling (no pages -> wait at the front)
+                if self._try_restore(r):
+                    admitted += 1
+                else:
+                    holdback.append(r)
+                continue
             try:
                 self._check_prompt(r)
             except Exception as e:
@@ -712,7 +925,10 @@ class SchedulerCore:
                 order.append(key)
             groups[key].append(r)
             admitted += 1
+        for r in reversed(holdback):
+            self.pending.appendleft(r)
         flush()
+        self._refresh_page_stats()
         return admitted
 
     # ---------------------------------------------------------------- decode
@@ -725,10 +941,19 @@ class SchedulerCore:
         for i in live:
             row_uids[i] = self.active[i].uid
             row_steps[i] = len(self.active[i].generated)
+        page_tables = None
+        if self.paged:
+            spr = self.slots_per_replica
+            page_tables = np.full((self.slots, self.n_pp), -1, np.int32)
+            for s in live:
+                uid = self._slot_uids[s]
+                if uid is not None:
+                    page_tables[s] = self.page_pools[s // spr].table_row(uid)
         return DecodePlan(live=live,
                           tokens=self.last_tokens[:, None].astype(np.int32),
                           positions=self.lengths[:, None].astype(np.int32),
-                          row_uids=row_uids, row_steps=row_steps)
+                          row_uids=row_uids, row_steps=row_steps,
+                          page_tables=page_tables)
 
     def _apply_decode(self, plan: DecodePlan, res) -> None:
         nxt, ok = res
@@ -755,12 +980,118 @@ class SchedulerCore:
                 self._release_slot(i)   # slot freed for the next admission
                 self._complete(req)
 
+    # ----------------------------------------------- paged decode growth
+    def _ensure_decode_pages(self) -> None:
+        """Make every live slot own (writably) the page its next decode
+        write hits - ``lengths[slot] // page + 1`` pages - BEFORE the page
+        tables are snapshotted into the decode plan.  Growth allocations
+        happen exactly when a length crosses a page boundary; a COW copy
+        fires when the frontier page is prefix-shared.  Under pool
+        pressure the YOUNGEST request on the replica is preempted (LIFO:
+        oldest-first iteration + youngest victim keeps head-of-line work
+        moving); ``pool_pages >= n_pp + 1`` guarantees a sole survivor can
+        always grow, so the victim loop terminates."""
+        spr = self.slots_per_replica
+        copies: dict[int, list[tuple[int, int]]] = {}
+        order = sorted((s for s in range(self.slots)
+                        if self.active[s] is not None),
+                       key=lambda s: self._slot_seq[s])
+        for slot in order:
+            if self.active[slot] is None:
+                continue                  # preempted earlier in this sweep
+            ri = slot // spr
+            pool = self.page_pools[ri]
+            uid = self._slot_uids[slot]
+            need = int(self.lengths[slot]) // self.page_size + 1
+            while True:
+                try:
+                    while pool.n_owned(uid) < need:
+                        pool.alloc(uid, 1)
+                    cp = pool.ensure_writable(uid, need - 1)
+                    if cp is not None:
+                        copies.setdefault(ri, []).append(cp)
+                    break
+                except PageError:
+                    victim = max((s for s in range(ri * spr, (ri + 1) * spr)
+                                  if self.active[s] is not None),
+                                 key=lambda s: self._slot_seq[s])
+                    self._preempt(victim)
+                    if victim == slot:
+                        break             # preempted ourselves: give up
+        for ri, pairs in copies.items():
+            self._exec_page_copy(ri, pairs)
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a request under pool pressure: pages free, the request
+        goes back to the queue FRONT.  Without spill it restarts from
+        prefill and regenerates its tokens bit-exactly ((uid, step)
+        sampling keys; the ``emitted`` watermark stops double delivery);
+        with spill the pages are captured to host memory first and resume
+        is a device scatter instead of recompute."""
+        req = self.active[slot]
+        uid = self._slot_uids[slot]
+        ri = slot // self.slots_per_replica
+        self.stats["preemptions"] += 1
+        if self.spill_enabled:
+            try:
+                rec = self._exec_spill(slot, uid,
+                                       self.page_pools[ri].pages(uid))
+            except Exception as e:     # spill is best-effort: fall back to
+                self.failures.record(  # cold regeneration, stay bit-exact
+                    self._round, "spill", f"uid={uid}: {e!r}")
+            else:
+                self._spilled[uid] = rec
+                self.stats["spills"] += 1
+        if uid not in self._spilled:
+            del req.generated[:]       # keep list identity (stream holds it)
+        self.active[slot] = None
+        self._release_slot(slot)
+        self.pending.appendleft(req)
+        self.failures.record(self._round, "preempt", f"uid={uid} slot={slot}")
+
+    def _try_restore(self, req: Request) -> bool:
+        """Warm-resume a spilled request into a free slot + fresh pages.
+        Returns True when the request was consumed (restored OR failed in
+        isolation); False defers it at the queue front."""
+        rec = self._spilled[req.uid]
+        ri = max(range(self.n_replicas), key=lambda i: len(self._free_r[i]))
+        if not self._free_r[ri]:
+            return False
+        pool = self.page_pools[ri]
+        pool.attach(req.uid)
+        try:
+            ids = pool.alloc(req.uid, rec.n_pages)
+        except PageError:
+            pool.release(req.uid)
+            return False
+        slot = self._take_slot(ri)
+        self._bind_slot(slot, req)
+        try:
+            self._exec_restore(slot, rec, ids)
+        except Exception as e:
+            if not self._isolate_exec:
+                raise
+            self._release_slot(slot)
+            del self._spilled[req.uid]
+            self._fail(req, f"spill restore failed: {e!r}", "exec")
+            return True
+        del self._spilled[req.uid]
+        self.active[slot] = req
+        self.lengths[slot] = rec.length
+        self.last_tokens[slot] = rec.last_token
+        self.stats["spill_restores"] += 1
+        return True
+
     def step(self) -> int:
         """One batched decode step over all active slots; returns #active.
 
         The launch is timed into the straggler EMA (plus any injected
         virtual delay) and guarded by request isolation: a raising decode
         launch fails the live requests and keeps the engine serving."""
+        if self.paged:
+            # every live slot must own the page its next write hits BEFORE
+            # the page tables are snapshotted into the plan
+            self._ensure_decode_pages()
         plan = self._plan_decode()
         if plan is None:
             return 0
@@ -784,6 +1115,7 @@ class SchedulerCore:
                     f"EMA {self.straggler.ema:.4f}s")
             self.stats["straggler_flags"] = self.straggler.flagged
             self._apply_decode(plan, res)
+        self._refresh_page_stats()
         return len([r for r in self.active if r is not None])
 
     def run(self, requests: list[Request], extras=None) -> list[Request]:

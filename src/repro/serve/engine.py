@@ -54,6 +54,7 @@ from repro.models.linops import quantize_param_tree
 
 from .core import (DEFAULT_BUCKETS, ChunkedPlan, DecodePlan, PrefillPlan,
                    Request, SchedulerCore)
+from .pages import SpillRecord
 
 __all__ = ["DEFAULT_BUCKETS", "Request", "ServeEngine"]
 
@@ -67,7 +68,12 @@ class ServeEngine(SchedulerCore):
                  chunked_prefill: bool = False,
                  n_replicas: int = 1,
                  fault: FaultInjector | None = None,
-                 pdq_fallback: bool = False):
+                 pdq_fallback: bool = False,
+                 paged: bool = False,
+                 page_size: int = 64,
+                 pool_pages: int | None = None,
+                 prefix_sharing: bool = True,
+                 spill: bool = False):
         self.cfg = cfg
         self.bundle = build_model(cfg)
         self.params = (quantize_param_tree(params) if quantize_weights
@@ -90,6 +96,18 @@ class ServeEngine(SchedulerCore):
                           else 0),
             buckets=buckets, batch_prefill=batch_prefill,
             chunked_prefill=chunked_prefill, fault=fault)
+        if paged:
+            assert batch_prefill, "the paged pool needs the bucketed path"
+            self._paged_ops = self.bundle.paged_cache(
+                slots, max_len, mem_len, page_size)
+            n_pp = self._paged_ops.n_pp
+            if pool_pages is None:
+                # headroom parity with the slot-row pool (+1 dump page):
+                # every slot can hold a full sequence simultaneously
+                pool_pages = self.slots_per_replica * n_pp + 1
+            self._init_paging(page_size=page_size, pool_pages=pool_pages,
+                              n_pp=n_pp, prefix_sharing=prefix_sharing,
+                              spill=spill)
         self._init_pools()
         self._build_sampler()
         self._build_jitted()
@@ -99,8 +117,14 @@ class ServeEngine(SchedulerCore):
         overrides this with shape-only stand-ins (its pools are created
         directly on the global mesh, so host allocations would be waste).
         """
-        self.caches = self.bundle.init_caches(self.slots, self.max_len,
-                                              self.mem_len)
+        if self.paged:
+            # physical page pool: (pool_pages, ..., page, ...) per paged
+            # leaf, (slots, ...) rows for flat leaves (see models/api.py)
+            self.caches = self._paged_ops.init(
+                self.pool_pages * self.n_replicas)
+        else:
+            self.caches = self.bundle.init_caches(self.slots, self.max_len,
+                                                  self.mem_len)
         # one spare cache pool fed to every prefill_many call: prefill is
         # functional, so the same zero pool is reused forever and the
         # written rows are landed into self.caches by cache_scatter.
@@ -143,8 +167,29 @@ class ServeEngine(SchedulerCore):
         # donate it: the update lands in place instead of copying the whole
         # pool per admission (no-op off-TPU, where donation is unsupported)
         self._scatter = jax.jit(self.bundle.cache_scatter, donate_argnums=(0,))
+        if self.paged:
+            self._build_paged_jitted()
 
-    def _traced_jit(self, fn, counter: str):
+    def _build_paged_jitted(self):
+        """Paged-pool device programs: ONE fused decode launch gathers the
+        live rows' pages into the logical layout, steps, and writes each
+        row's frontier page back - no host round-trips beyond the numpy
+        page tables the plan already ships."""
+        po = self._paged_ops
+        step = self.bundle.decode_step
+
+        def decode_paged(params, pool, pt, tokens, positions):
+            logical = po.gather(pool, pt, positions[:, 0])
+            logits, logical = step(params, logical, tokens, positions)
+            return logits, po.writeback(pool, logical, pt, positions)
+
+        self._decode_paged = self._traced_jit(decode_paged, "decode_compiles",
+                                              donate=(1,))
+        self._land = jax.jit(po.land, donate_argnums=(0,))
+        self._page_copy = jax.jit(po.copy, donate_argnums=(0,))
+        self._restore_prog = jax.jit(po.restore, donate_argnums=(0,))
+
+    def _traced_jit(self, fn, counter: str, donate: tuple = ()):
         """jit(fn) that bumps ``stats[counter]`` once per (re)trace - i.e.
         once per compiled executable, the quantity the bucket design caps."""
         stats = self.stats
@@ -155,7 +200,7 @@ class ServeEngine(SchedulerCore):
             with ops.pdq_guard(guard):
                 return fn(*args)
 
-        return jax.jit(wrapped)
+        return jax.jit(wrapped, donate_argnums=donate)
 
     # -------------------------------------------------------------- sampling
     def _build_sampler(self):
@@ -212,9 +257,20 @@ class ServeEngine(SchedulerCore):
         logits, sub = self._prefill_many(self.params, batch,
                                          self._prefill_pool,
                                          jnp.asarray(plan.seq_lens))
-        self.caches = self._scatter(self.caches, sub,
-                                    jnp.asarray(plan.src_map))
+        self._land_sub(plan, sub)
         return self._sample_rows("prefill", plan, logits)
+
+    def _land_sub(self, plan, sub) -> None:
+        """Land a finished prefill batch in the pool: page-wise through the
+        plan's land maps (paged), or whole slot rows (slot-row pool)."""
+        if self.paged:
+            self.caches = self._land(self.caches, sub,
+                                     jnp.asarray(plan.src_map),
+                                     jnp.asarray(plan.land_rows),
+                                     jnp.asarray(plan.land_js))
+        else:
+            self.caches = self._scatter(self.caches, sub,
+                                        jnp.asarray(plan.src_map))
 
     def _exec_chunked(self, plan: ChunkedPlan, extras):
         if extras:
@@ -230,15 +286,51 @@ class ServeEngine(SchedulerCore):
                                               {"tokens": jnp.asarray(tokens)},
                                               sub, jnp.asarray(seq_lens),
                                               jnp.asarray(start_lens))
-        self.caches = self._scatter(self.caches, sub,
-                                    jnp.asarray(plan.src_map))
+        self._land_sub(plan, sub)
         return self._sample_rows("chunked", plan, logits)
 
     def _exec_decode(self, plan: DecodePlan):
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           jnp.asarray(plan.tokens),
-                                           jnp.asarray(plan.positions))
+        if self.paged:
+            logits, self.caches = self._decode_paged(
+                self.params, self.caches, jnp.asarray(plan.page_tables),
+                jnp.asarray(plan.tokens), jnp.asarray(plan.positions))
+        else:
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               jnp.asarray(plan.tokens),
+                                               jnp.asarray(plan.positions))
         return self._sample_rows("decode", plan, logits)
+
+    # ------------------------------------------------------ paged-pool hooks
+    def _copy_map(self, replica: int, pairs) -> np.ndarray:
+        # positions are global (the 'data' shard split localizes them);
+        # VALUES stay replica-local page ids - the copy body indexes the
+        # replica's own pool shard
+        cmap = np.full((self.pool_pages * self.n_replicas,), -1, np.int32)
+        base = replica * self.pool_pages
+        for src, dst in pairs:
+            cmap[base + dst] = src
+        return cmap
+
+    def _exec_page_copy(self, replica: int, pairs) -> None:
+        cmap = self._copy_map(replica, pairs)
+        self.caches = self._page_copy(self.caches, jnp.asarray(cmap))
+
+    def _exec_spill(self, slot: int, uid: int, page_ids) -> SpillRecord:
+        return SpillRecord(uid=uid, n_pages=len(page_ids),
+                           length=int(self.lengths[slot]),
+                           last_token=int(self.last_tokens[slot]),
+                           data=self._paged_ops.capture(self.caches, slot,
+                                                        page_ids))
+
+    def _exec_restore(self, slot: int, rec: SpillRecord, page_ids) -> None:
+        pmap = np.full((self.pool_pages * self.n_replicas,), -1, np.int32)
+        for i, p in enumerate(page_ids):
+            pmap[p] = i                       # pool page p <- record page i
+        smap = np.full((self.slots,), -1, np.int32)
+        smap[slot] = 0                        # flat leaves: record row 0
+        self.caches = self._restore_prog(self.caches, rec.data,
+                                         jnp.asarray(pmap),
+                                         jnp.asarray(smap))
 
     # ------------------------------------------------- legacy per-request path
     def _submit_one(self, req: Request, extras) -> bool:

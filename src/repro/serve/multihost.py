@@ -97,6 +97,8 @@ CMD_INGRESS = 7        # pull process arg's queued submits: count int32[1]
                        # [uid, prompt_len, max_new, deadline_ms] + prompt
 CMD_POLL = 8           # no-op rendezvous: harvest acks + ingress counts
                        # while the scheduler is otherwise idle
+CMD_PAGE_COPY = 9      # paged pool COW copy: payload copy map
+                       # (n_replicas * pool_pages,) int32, -1 = keep
 
 # extras keys the prefill payload can carry (shape-tag header word 0);
 # float32 values ride the int32 psum exchange losslessly via a bitcast
@@ -162,7 +164,10 @@ class MultiHostServeEngine(ShardedServeEngine):
                  chunked_prefill: bool = False, fault=None,
                  pdq_fallback: bool = False,
                  launch_timeout: float | None = None,
-                 snapshot_path: str | None = None):
+                 snapshot_path: str | None = None,
+                 paged: bool = False, page_size: int = 64,
+                 pool_pages: int | None = None,
+                 prefix_sharing: bool = True):
         self.n_processes = jax.process_count()
         self.process_id = jax.process_index()
         self.is_coordinator = self.process_id == 0
@@ -195,7 +200,9 @@ class MultiHostServeEngine(ShardedServeEngine):
                          quantize_weights=quantize_weights,
                          temperature=temperature, rng=rng, buckets=buckets,
                          chunked_prefill=chunked_prefill, fault=fault,
-                         pdq_fallback=pdq_fallback)
+                         pdq_fallback=pdq_fallback, paged=paged,
+                         page_size=page_size, pool_pages=pool_pages,
+                         prefix_sharing=prefix_sharing)
         self.snapshot_path = snapshot_path
         self.stats["remote_ingress"] = 0   # requests pulled from workers
         # replica -> owning process, for per-host stats and routing debug
@@ -209,10 +216,15 @@ class MultiHostServeEngine(ShardedServeEngine):
         structure (specs/shardings) and then allocates the real pools
         directly on the global mesh - materializing host zeros here would
         be two full pool allocations thrown away per process."""
-        self.caches = jax.eval_shape(
+        self._prefill_pool = jax.eval_shape(
             lambda: self.bundle.init_caches(self.slots, self.max_len,
                                             self.mem_len))
-        self._prefill_pool = self.caches
+        if self.paged:
+            self.caches = jax.eval_shape(
+                lambda: self._paged_ops.init(
+                    self.pool_pages * self.n_replicas))
+        else:
+            self.caches = self._prefill_pool
 
     def _build_jitted(self):
         cs = serve_pool_specs(self.caches)
@@ -227,12 +239,22 @@ class MultiHostServeEngine(ShardedServeEngine):
         # cannot address the other processes' shards.
         self.params = jax.tree.map(
             lambda x: make_global(self.mesh, P(), np.asarray(x)), self.params)
-        mk_pool = jax.jit(
+        # the paged pool tree has the same structure and per-leaf ranks as
+        # the slot-row scratch (page axis where the slot axis was), so ONE
+        # specs/shardings tree serves both
+        mk_scratch = jax.jit(
             lambda: self.bundle.init_caches(self.slots, self.max_len,
                                             self.mem_len),
             out_shardings=pool_sh)
+        if self.paged:
+            mk_pool = jax.jit(
+                lambda: self._paged_ops.init(
+                    self.pool_pages * self.n_replicas),
+                out_shardings=pool_sh)
+        else:
+            mk_pool = mk_scratch
         self.caches = mk_pool()
-        self._prefill_pool = mk_pool()
+        self._prefill_pool = mk_scratch()
 
         temp = float(self.temperature)
         base_rng = np.asarray(self.rng)   # identical on every process
@@ -289,6 +311,27 @@ class MultiHostServeEngine(ShardedServeEngine):
             self.bundle.cache_scatter, None,
             in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
         self._prefill_one = None
+
+        if self.paged:
+            # paged decode with IN-PROGRAM sampling (same collective fast
+            # path as _decode); land/copy ride the plain sharded launches
+            po = self._paged_ops
+            step = self.bundle.decode_step
+            pts = P("data", None)
+
+            def decode_paged(params, pool, pt, tokens, positions):
+                logical = po.gather(pool, pt, positions[:, 0])
+                logits, logical = step(params, logical, tokens, positions)
+                return logits, po.writeback(pool, logical, pt, positions)
+
+            self._decode_paged = traced(
+                sampled(decode_paged, (P(), cs, pts, dp, dp)),
+                "decode_compiles", out_shardings=(repl, repl, pool_sh))
+            self._land = self._traced_sharded_jit(
+                po.land, None, in_specs=(cs, cs, dp, dp, dp), out_specs=cs,
+                donate=(0,))
+            self._page_copy = self._traced_sharded_jit(
+                po.copy, None, in_specs=(cs, dp), out_specs=cs, donate=(0,))
 
     # --------------------------------------------------------- the protocol
     # Coordinator -> worker shipping is a psum-based one-to-all broadcast
@@ -466,15 +509,26 @@ class MultiHostServeEngine(ShardedServeEngine):
             batch[key] = self._glob(np.ascontiguousarray(b), P("data"))
         return batch
 
+    def _land_global(self, sub, src_map, land_rows, land_js) -> None:
+        """Land a finished prefill: page-wise through the plan's land maps
+        (paged pool) or whole slot rows (slot-row pool)."""
+        if self.paged:
+            self.caches = self._land(self.caches, sub,
+                                     self._glob(src_map, P("data")),
+                                     self._glob(land_rows, P("data")),
+                                     self._glob(land_js, P("data")))
+        else:
+            self.caches = self._scatter(self.caches, sub,
+                                        self._glob(src_map, P("data")))
+
     def _do_prefill(self, tokens, seq_lens, src_map, uids, steps,
-                    extras=None):
+                    extras=None, land_rows=None, land_js=None):
         u, s = self._us(uids, steps)
         with self._deadline("prefill launch"):
             nxt, ok, sub = self._prefill_many(
                 u, s, self.params, self._batch(tokens, extras),
                 self._prefill_pool, self._glob(seq_lens, P("data")))
-            self.caches = self._scatter(self.caches, sub,
-                                        self._glob(src_map, P("data")))
+            self._land_global(sub, src_map, land_rows, land_js)
             jax.block_until_ready((nxt, ok, self.caches))
         nxt, ok = np.asarray(nxt), np.asarray(ok)
         self._track_remote(nxt, ok, uids, steps)
@@ -506,10 +560,9 @@ class MultiHostServeEngine(ShardedServeEngine):
         self._chunk_nxt = (np.asarray(nxt), np.asarray(ok))
         return self._chunk_nxt
 
-    def _do_chunk_end(self, src_map) -> None:
+    def _do_chunk_end(self, src_map, land_rows=None, land_js=None) -> None:
         with self._deadline("chunk cache scatter"):
-            self.caches = self._scatter(self.caches, self._chunk_sub,
-                                        self._glob(src_map, P("data")))
+            self._land_global(self._chunk_sub, src_map, land_rows, land_js)
             jax.block_until_ready(self.caches)
         if self._chunk_nxt is not None and self._chunk_track is not None:
             # only the LAST chunk's sampled token is the request's first
@@ -522,17 +575,30 @@ class MultiHostServeEngine(ShardedServeEngine):
         self._chunk_track = None
         self._chunk_nxt = None
 
-    def _do_decode(self, tokens, positions, uids, steps):
+    def _do_decode(self, tokens, positions, uids, steps, page_tables=None):
         u, s = self._us(uids, steps)
         with self._deadline("decode launch"):
-            nxt, ok, self.caches = self._decode(
-                u, s, self.params, self.caches,
-                self._glob(tokens, P("data")),
-                self._glob(positions, P("data")))
+            if self.paged:
+                nxt, ok, self.caches = self._decode_paged(
+                    u, s, self.params, self.caches,
+                    self._glob(page_tables, P("data", None)),
+                    self._glob(tokens, P("data")),
+                    self._glob(positions, P("data")))
+            else:
+                nxt, ok, self.caches = self._decode(
+                    u, s, self.params, self.caches,
+                    self._glob(tokens, P("data")),
+                    self._glob(positions, P("data")))
             jax.block_until_ready((nxt, ok, self.caches))
         nxt, ok = np.asarray(nxt), np.asarray(ok)
         self._track_remote(nxt, ok, uids, steps)
         return nxt, ok
+
+    def _do_page_copy(self, cmap) -> None:
+        with self._deadline("page copy launch"):
+            self.caches = self._page_copy(self.caches,
+                                          self._glob(cmap, P("data")))
+            jax.block_until_ready(self.caches)
 
     def _track_remote(self, nxt, ok, uids, steps) -> None:
         """Worker-side token mirror for its own remote submits: sampled
@@ -554,14 +620,18 @@ class MultiHostServeEngine(ShardedServeEngine):
     def _exec_prefill(self, plan: PrefillPlan, extras):
         ex = self._norm_extras(extras)
         self._cmd(CMD_PREFILL, plan.bucket, n_extras=len(ex))
-        self._send([plan.tokens, plan.seq_lens, plan.src_map,
-                    plan.row_uids, plan.row_steps])
+        payload = [plan.tokens, plan.seq_lens, plan.src_map,
+                   plan.row_uids, plan.row_steps]
+        if self.paged:          # page landing maps ride the same payload
+            payload += [plan.land_rows, plan.land_js]
+        self._send(payload)
         self._send_extras(ex)
         # launch with the NORMALIZED (wire-format float32) arrays so the
         # coordinator computes on bit-identical inputs to the workers
         return self._do_prefill(plan.tokens, plan.seq_lens, plan.src_map,
                                 plan.row_uids, plan.row_steps,
-                                extras=dict(ex))
+                                extras=dict(ex), land_rows=plan.land_rows,
+                                land_js=plan.land_js)
 
     def _exec_chunked(self, plan: ChunkedPlan, extras):
         if extras:
@@ -579,16 +649,29 @@ class MultiHostServeEngine(ShardedServeEngine):
             self._send([tokens, seq_lens, start_lens])
             res = self._do_chunk_next(tokens, seq_lens, start_lens)
         self._cmd(CMD_CHUNK_END)
-        self._send([plan.src_map])
-        self._do_chunk_end(plan.src_map)
+        payload = [plan.src_map]
+        if self.paged:
+            payload += [plan.land_rows, plan.land_js]
+        self._send(payload)
+        self._do_chunk_end(plan.src_map, plan.land_rows, plan.land_js)
         return res
 
     def _exec_decode(self, plan: DecodePlan):
         self._cmd(CMD_DECODE)
-        self._send([plan.tokens, plan.positions,
-                    plan.row_uids, plan.row_steps])
+        payload = [plan.tokens, plan.positions,
+                   plan.row_uids, plan.row_steps]
+        if self.paged:          # (slots, n_pp) replica-local page tables
+            payload += [plan.page_tables]
+        self._send(payload)
         return self._do_decode(plan.tokens, plan.positions,
-                               plan.row_uids, plan.row_steps)
+                               plan.row_uids, plan.row_steps,
+                               page_tables=plan.page_tables)
+
+    def _exec_page_copy(self, replica: int, pairs) -> None:
+        cmap = self._copy_map(replica, pairs)
+        self._cmd(CMD_PAGE_COPY)
+        self._send([cmap])
+        self._do_page_copy(cmap)
 
     def _validate_extras(self, prompt_len: int, extras) -> None:
         # entry-point rejection, BEFORE anything queues or a plan claims a
@@ -765,15 +848,20 @@ class MultiHostServeEngine(ShardedServeEngine):
         ``ProtocolError``."""
         assert not self.is_coordinator, "process 0 is the coordinator"
         S = self.slots
+        # paged payloads: land maps (Np,), page tables (S, n_pp)
+        Np = self.pool_pages * self.n_replicas if self.paged else 0
+        lnd = [(Np,), (Np,)] if self.paged else []
         while True:
             op, arg, seq, n_ex = self._recv_cmd()
             if op == CMD_STOP:
                 return
             if op == CMD_PREFILL:
-                t, sl, m, u, st = self._recv([(S, arg), (S,), (S,), (S,),
-                                              (S,)])
+                recv = self._recv([(S, arg), (S,), (S,), (S,), (S,)] + lnd)
+                t, sl, m, u, st = recv[:5]
                 ex = self._recv_extras(n_ex)
-                self._do_prefill(t, sl, m, u, st, extras=ex)
+                self._do_prefill(t, sl, m, u, st, extras=ex,
+                                 land_rows=recv[5] if self.paged else None,
+                                 land_js=recv[6] if self.paged else None)
             elif op == CMD_CHUNK_FIRST:
                 t, sl, u, st = self._recv([(S, arg), (S,), (S,), (S,)])
                 self._do_chunk_first(t, sl, u, st)
@@ -781,11 +869,18 @@ class MultiHostServeEngine(ShardedServeEngine):
                 t, sl, st = self._recv([(S, arg), (S,), (S,)])
                 self._do_chunk_next(t, sl, st)
             elif op == CMD_CHUNK_END:
-                m, = self._recv([(S,)])
-                self._do_chunk_end(m)
+                recv = self._recv([(S,)] + lnd)
+                self._do_chunk_end(recv[0],
+                                   recv[1] if self.paged else None,
+                                   recv[2] if self.paged else None)
             elif op == CMD_DECODE:
-                t, p, u, st = self._recv([(S, 1), (S, 1), (S,), (S,)])
-                self._do_decode(t, p, u, st)
+                recv = self._recv([(S, 1), (S, 1), (S,), (S,)]
+                                  + ([(S, self.n_pp)] if self.paged else []))
+                self._do_decode(*recv[:4],
+                                page_tables=recv[4] if self.paged else None)
+            elif op == CMD_PAGE_COPY:
+                cmap, = self._recv([(Np,)])
+                self._do_page_copy(cmap)
             elif op == CMD_INGRESS:
                 self._serve_ingress(arg)
             elif op == CMD_POLL:

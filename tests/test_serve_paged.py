@@ -1,0 +1,287 @@
+"""Paged KV-cache pool: bit-exactness against the slot-row engine.
+
+Pins the PR-8 contract.  The paged pool (serve/pages.py + the paged ops
+in models/api.py) changes the cache LAYOUT - fixed-size pages addressed
+through per-slot indirection tables - but must never change a single
+token: the decode step gathers the logical rows, runs the identical
+program, and writes the frontier page back.  Every test here is a parity
+pin against the slot-row engine on the SAME params:
+
+  * mixed-length greedy + temperature workloads, across the GQA KV
+    cache, the MLA compressed cache + SSM/conv tails, and the int8
+    kernel-layout KV cache;
+  * chunked prefill landing chunk by chunk into pages;
+  * copy-on-write prefix sharing (a shared prompt page must produce the
+    exact unshared stream, and the share must actually happen);
+  * preempt-and-requeue under pool pressure ((uid, step)-keyed sampling
+    regenerates the evicted tokens exactly);
+  * host spill + warm restore (the resumed request continues from its
+    spilled pages, same stream, without regenerating).
+
+Plus the redesigned construction surface: ServeConfig/build_engine is
+how every engine gets built, and the page-pool counters ride
+engine.stats into ServeService.stats() (the GET /v1/stats payload).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.serve import (PageError, PagePool, Request, ServeConfig,
+                         ServeEngine, ServeService, build_engine)
+
+MIXED_LENS = [3, 5, 8, 9, 12, 16, 17, 23, 30, 4, 11, 27]
+
+_MODELS = {}
+
+
+def _model(arch, quant_kv=None):
+    key = (arch, quant_kv)
+    if key not in _MODELS:
+        cfg = reduced_config(arch)
+        if quant_kv:
+            cfg = dataclasses.replace(cfg, quant_kv=quant_kv)
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        _MODELS[key] = (cfg, params)
+    return _MODELS[key]
+
+
+def _requests(cfg, lens, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                    max_new=max_new) for i, L in enumerate(lens)]
+
+
+def _outputs(reqs):
+    return {r.uid: (tuple(r.generated), r.finish_reason, r.error)
+            for r in reqs}
+
+
+def _run(cfg, params, lens, *, max_new=4, seed=0, **kw):
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      **kw)
+    reqs = _requests(cfg, lens, max_new=max_new, seed=seed)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    return eng, _outputs(reqs)
+
+
+# ---------------------------------------------------------------------------
+# layout parity: paged == slot-row, token for token
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b",      # GQA KV
+                                  "deepseek-v2-236b"])  # MLA + extra leaves
+def test_paged_matches_slot_row(arch):
+    cfg, params = _model(arch)
+    _, want = _run(cfg, params, MIXED_LENS)
+    eng, got = _run(cfg, params, MIXED_LENS, paged=True, page_size=16)
+    assert got == want
+    assert eng.stats["pages_total"] > 0
+
+
+def test_paged_int8_kv_matches_slot_row():
+    cfg, params = _model("gemma2-2b", quant_kv="dynamic")
+    _, want = _run(cfg, params, MIXED_LENS)
+    _, got = _run(cfg, params, MIXED_LENS, paged=True, page_size=16)
+    assert got == want
+
+
+def test_paged_temperature_matches_slot_row():
+    """(uid, step)-keyed sampling is layout-independent: the paged engine
+    draws the identical non-greedy stream."""
+    cfg, params = _model("stablelm-1.6b")
+    _, want = _run(cfg, params, MIXED_LENS, temperature=0.9)
+    _, got = _run(cfg, params, MIXED_LENS, temperature=0.9,
+                  paged=True, page_size=16)
+    assert got == want
+
+
+def test_paged_chunked_prefill_matches_slot_row():
+    """Chunk continuations land page by page (prefill-pool rows scattered
+    through the land map) and still reproduce the unchunked stream."""
+    cfg, params = _model("stablelm-1.6b")
+    lens = [3, 20, 40, 12, 33]            # beyond the 16 bucket
+    ref = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16),
+                      chunked_prefill=True)
+    reqs = _requests(cfg, lens, max_new=5)
+    ref.run(reqs)
+    want = _outputs(reqs)
+
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16),
+                      chunked_prefill=True, paged=True, page_size=16)
+    reqs = _requests(cfg, lens, max_new=5)
+    eng.run(reqs)
+    assert _outputs(reqs) == want
+    assert eng.stats["chunked_requests"] == 3
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_share_hit_is_bit_exact():
+    """A request arriving while an earlier one with the same prompt still
+    holds its pages must SHARE the full prompt pages (copy-on-write) and
+    still produce the exact unshared stream.  Liveness is staggered: A
+    (long max_new) holds its prompt page while short fillers churn the
+    other slots; B lands on a freed slot while A is live."""
+    cfg, params = _model("stablelm-1.6b")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, 200, size=20).astype(np.int32)
+
+    def mk():
+        reqs = [Request(uid=100, prompt=prompt.copy(), max_new=16)]
+        r2 = np.random.default_rng(5)
+        for i in range(3):
+            reqs.append(Request(
+                uid=101 + i,
+                prompt=r2.integers(1, 200, size=5).astype(np.int32),
+                max_new=2))
+        reqs.append(Request(uid=104, prompt=prompt.copy(), max_new=8))
+        return reqs
+
+    ref = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.7)
+    ref.run(mk())
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.7, paged=True, page_size=16)
+    eng.run(mk())
+    assert _outputs(eng.finished) == _outputs(ref.finished)
+    assert eng.stats["prefix_hits"] > 0
+    assert eng.stats["prefix_shared_pages"] > 0
+    # no COW expected: only FULL prompt pages are ever shared, so the
+    # write frontier of both sharers sits past the shared region by
+    # construction - ensure_writable is the invariant guard, not a hot
+    # path (cow_copies counts it if a future sharing scheme trips it)
+    assert eng.stats["cow_copies"] == 0
+
+
+def test_prefix_sharing_can_be_disabled():
+    cfg, params = _model("stablelm-1.6b")
+    eng, _ = _run(cfg, params, MIXED_LENS, paged=True, page_size=16,
+                  prefix_sharing=False)
+    assert eng.stats["prefix_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# preemption + host spill
+# ---------------------------------------------------------------------------
+
+
+def _grow_reqs():
+    # 17-token prompts claim 2 pages; max_new=30 forces a 3rd page
+    # mid-decode, colliding in a 6-usable-page pool with 3 live rows
+    rng = np.random.default_rng(7)
+    return [Request(uid=50 + i,
+                    prompt=rng.integers(1, 200, size=17).astype(np.int32),
+                    max_new=30) for i in range(4)]
+
+
+def _grow_ref(cfg, params):
+    ref = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.9)
+    reqs = _grow_reqs()
+    ref.run(reqs)
+    return _outputs(reqs)
+
+
+def test_preempt_and_requeue_is_token_exact():
+    """Pool pressure mid-decode evicts the youngest victim; its requeue
+    regenerates the dropped tokens exactly ((uid, step) sampling keys),
+    so the client-visible stream is indistinguishable from no preemption."""
+    cfg, params = _model("stablelm-1.6b")
+    want = _grow_ref(cfg, params)
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.9, paged=True, page_size=16,
+                      pool_pages=7)
+    reqs = _grow_reqs()
+    eng.run(reqs)
+    assert _outputs(reqs) == want
+    assert eng.stats["preemptions"] > 0
+
+
+def test_spill_warm_resume_is_token_exact():
+    """With host spill on, the preempted request's pages round-trip
+    through host memory and decode CONTINUES (no regeneration) - same
+    stream, and the spill/restore counters prove the warm path ran."""
+    cfg, params = _model("stablelm-1.6b")
+    want = _grow_ref(cfg, params)
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.9, paged=True, page_size=16,
+                      pool_pages=7, spill=True)
+    reqs = _grow_reqs()
+    eng.run(reqs)
+    assert _outputs(reqs) == want
+    assert eng.stats["spills"] > 0
+    assert eng.stats["spill_restores"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the construction surface: ServeConfig + build_engine
+# ---------------------------------------------------------------------------
+
+
+def test_build_engine_single_device_paged():
+    cfg, params = _model("stablelm-1.6b")
+    sc = ServeConfig(slots=4, max_len=64, buckets=(8, 16, 32),
+                     paged=True, page_size=16)
+    eng = build_engine(sc, cfg=cfg, params=params)
+    assert isinstance(eng, ServeEngine) and eng.paged
+    reqs = _requests(cfg, MIXED_LENS)
+    eng.run(reqs)
+    _, want = _run(cfg, params, MIXED_LENS)
+    assert _outputs(reqs) == want
+
+
+def test_build_engine_resolves_model_from_config():
+    sc = ServeConfig(arch="stablelm-1.6b", reduced=True, slots=2,
+                     max_len=32, buckets=(8,))
+    eng = build_engine(sc)
+    assert isinstance(eng, ServeEngine)
+    assert eng.cfg.name == reduced_config("stablelm-1.6b").name
+
+
+def test_serve_config_validates():
+    with pytest.raises(ValueError):
+        ServeConfig(multihost=True).validate()          # multihost sans mesh
+    with pytest.raises(ValueError):
+        ServeConfig(mesh=object(), spill=True).validate()
+    with pytest.raises(ValueError):
+        ServeConfig(paged=True, batch_prefill=False).validate()
+    with pytest.raises(ValueError):
+        build_engine(ServeConfig(), cfg=object(), params=None)
+
+
+# ---------------------------------------------------------------------------
+# observability: page-pool counters ride stats into the service payload
+# ---------------------------------------------------------------------------
+
+
+def test_page_stats_surface_in_service_stats():
+    cfg, params = _model("stablelm-1.6b")
+    eng, _ = _run(cfg, params, MIXED_LENS, paged=True, page_size=16)
+    page_keys = {"pages_total", "pages_used", "preemptions", "spills",
+                 "spill_restores", "prefix_hits", "prefix_shared_pages",
+                 "cow_copies"}
+    assert page_keys <= set(eng.stats)
+    # usable pages: pool minus the write-only dump page, per replica
+    assert eng.stats["pages_total"] == (eng.pool_pages - 1) * eng.n_replicas
+    assert eng.stats["pages_used"] == 0          # drained
+    svc = ServeService(eng)                      # stats() needs no thread
+    assert page_keys <= set(svc.stats())
+
+
+def test_page_pool_reexported_from_serve():
+    pool = PagePool(8, pages_per_seq=4, page=16)
+    pool.attach(1)
+    ids = pool.alloc(1, 3)
+    assert pool.n_owned(1) == 3 and 0 not in ids
+    with pytest.raises(PageError):
+        pool.alloc(1, 99)

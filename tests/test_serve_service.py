@@ -38,7 +38,7 @@ from repro.configs import reduced_config
 from repro.distributed.fault import FaultInjector, FaultPlan
 from repro.models import build_model
 from repro.serve import (EngineDraining, HttpFrontend, OverloadedError,
-                         Request, ServeEngine, ServeService)
+                         Request, ServeConfig, ServeService, build_engine)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -55,7 +55,9 @@ def _engine(cfg, params, **kw):
     kw.setdefault("slots", 4)
     kw.setdefault("max_len", 64)
     kw.setdefault("buckets", (8, 16, 32))
-    return ServeEngine(cfg, params, **kw)
+    # the supported construction surface (PR 8): every engine through
+    # ServeConfig + build_engine
+    return build_engine(ServeConfig(**kw), cfg=cfg, params=params)
 
 
 def _prompts(cfg, lens, seed=0):

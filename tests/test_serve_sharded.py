@@ -163,6 +163,52 @@ def test_sharded_quantized_and_chunked_parity():
     assert "OK int8" in out and "OK chunked" in out
 
 
+def test_sharded_paged_pool_parity_and_preemption():
+    """The paged KV pool on a 4x2 mesh: replica-local page tables ride
+    the decode plan into ONE shard_map-ed gather/step/writeback launch,
+    and a pool small enough to force mid-decode growth preempts + requeues
+    with (uid, step)-keyed regeneration - both token-for-token equal to
+    the single-device slot-row engine."""
+    out = _run_subprocess(_parity_case("""
+        MIXED = [3, 5, 8, 9, 12, 16, 17, 23, 30]
+        cfg = reduced_config("stablelm-1.6b")
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+        ref = ServeEngine(cfg, params, slots=8, max_len=64,
+                          buckets=(8, 16, 32), temperature=0.9)
+        want = outputs(ref, cfg, MIXED, max_new=6)
+        eng = ShardedServeEngine(cfg, params, mesh=mesh, slots_per_replica=2,
+                                 max_len=64, buckets=(8, 16, 32),
+                                 temperature=0.9, paged=True, page_size=16)
+        got = outputs(eng, cfg, MIXED, max_new=6)
+        assert got == want, [i for i, (a, b) in enumerate(zip(got, want))
+                             if a != b]
+        print("OK paged parity")
+
+        # 17-token prompts claim 2 pages each, max_new=30 forces a 3rd
+        # mid-decode; 5 usable pages/replica under 2 slots -> preemption
+        def grow():
+            rng = np.random.default_rng(7)
+            return [Request(uid=50 + i,
+                            prompt=rng.integers(1, 200, 17).astype(np.int32),
+                            max_new=30) for i in range(8)]
+        ref2 = ServeEngine(cfg, params, slots=8, max_len=64,
+                           buckets=(8, 16, 32), temperature=0.9)
+        g0 = grow(); ref2.run(g0)
+        eng2 = ShardedServeEngine(cfg, params, mesh=mesh, slots_per_replica=2,
+                                  max_len=64, buckets=(8, 16, 32),
+                                  temperature=0.9, paged=True, page_size=16,
+                                  pool_pages=6)
+        g1 = grow(); eng2.run(g1)
+        assert ([tuple(r.generated) for r in g1]
+                == [tuple(r.generated) for r in g0])
+        assert eng2.stats["preemptions"] > 0
+        print("OK paged preempt", eng2.stats["preemptions"])
+    """))
+    assert "OK paged parity" in out and "OK paged preempt" in out
+
+
 # --------------------------------------------------------- kernel-count pin
 def test_sharded_decode_block_is_eight_kernels_per_replica():
     """A quantized GQA block inside the shard_map body (TP over 'model')
