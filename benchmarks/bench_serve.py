@@ -117,6 +117,70 @@ def bench_cell(cfg, params, requests: int, slots: int, max_prompt: int) -> dict:
     return out
 
 
+def bench_telemetry_cell(cfg, params, requests: int, slots: int,
+                         max_prompt: int,
+                         trace_out: str | None = None) -> dict:
+    """Telemetry-overhead A/B: the identical mixed prefill+decode workload
+    through an instrumented engine (telemetry=True; span capture too when
+    ``--trace-out`` asks for the sample trace) and a bare one
+    (telemetry=False, the ServeConfig A/B switch).
+
+    The GATED ``speedup`` is per-round token capacity instrumented/bare:
+    tokens landed (prompt + decoded) per device launch.  The hook points
+    observe timings but never touch admission, sampling or launch
+    shapes, so the deterministic expectation is exactly 1.0 - the cell
+    hard-asserts the <=2% overhead budget from DESIGN.md
+    "Observability", and a telemetry change that alters the schedule (an
+    extra host sync, a blocking collection) fails here rather than in
+    production.  Wall tok/s both ways is recorded informationally: the
+    2-core CI hosts' wall clock is far noisier than 2%.
+    """
+    buckets = (8, 16, 32)
+    out = {"requests": requests, "slots": slots, "max_prompt": max_prompt}
+    tokens_served: dict[str, list] = {}
+    for tag, instrumented in (("on", True), ("off", False)):
+        rng = np.random.default_rng(3)
+        lens = rng.integers(2, max_prompt + 1, requests)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                        max_new=8) for i, L in enumerate(lens)]
+        eng = build_engine(ServeConfig(
+            slots=slots, max_len=max(buckets) + 16, buckets=buckets,
+            telemetry=instrumented,
+            trace=instrumented and trace_out is not None),
+            cfg=cfg, params=params)
+        warm = [Request(uid=1000 + i, prompt=p, max_new=2) for i, p in
+                enumerate(r.prompt for r in reqs[:slots])]
+        eng.run(warm)                   # compile prefill AND decode
+        base_rounds = (eng.stats["prefill_batches"]
+                       + eng.stats["decode_steps"])
+        base_tokens = (eng.stats["prefill_tokens"]
+                       + eng.stats["decode_tokens"])
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        tokens_served[tag] = [list(map(int, r.generated)) for r in reqs]
+        rounds = (eng.stats["prefill_batches"] + eng.stats["decode_steps"]
+                  - base_rounds)
+        tokens = (eng.stats["prefill_tokens"] + eng.stats["decode_tokens"]
+                  - base_tokens)
+        out[f"{tag}_tok_s"] = sum(len(t) for t in tokens_served[tag]) / dt
+        out[f"{tag}_rounds"] = rounds
+        out[f"{tag}_tokens_per_round"] = tokens / rounds
+        if instrumented and trace_out:
+            eng.tel.tracer.write(trace_out)
+            print(f"wrote sample trace ({len(eng.tel.tracer.events())} "
+                  f"spans) -> {trace_out}")
+    assert tokens_served["on"] == tokens_served["off"], \
+        "telemetry changed the served tokens"
+    out["speedup"] = out["on_tokens_per_round"] / out["off_tokens_per_round"]
+    assert 0.98 <= out["speedup"] <= 1.02, \
+        f"telemetry overhead gate: capacity ratio {out['speedup']} " \
+        f"outside [0.98, 1.02]"
+    return out
+
+
 def _mesh_workload(cfg, requests: int, lo: int, hi: int, seed: int = 0):
     """Uniform-bucket prompts (lo, hi]: one prefill executable per engine."""
     rng = np.random.default_rng(seed)
@@ -453,6 +517,10 @@ def main() -> None:
                     help="jax.distributed coordinator for --multiproc "
                          "(default: a free local port)")
     ap.add_argument("--multiproc-out", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a sample Perfetto trace from the "
+                         "instrumented engine of the telemetry A/B cell "
+                         "(single-device sweep only)")
     args = ap.parse_args()
 
     if args.process_id is not None:
@@ -557,6 +625,16 @@ def main() -> None:
               f"legacy {cell['legacy_s']:6.2f}s "
               f"({cell['legacy_prefill_compiles']} compiles)  "
               f"x{cell['speedup']:.2f}")
+
+    # telemetry-overhead A/B (distinct cell key; quick AND full, so the
+    # <=2% gate runs on every CI smoke)
+    cell = bench_telemetry_cell(cfg, params, 16, 4, 32,
+                                trace_out=args.trace_out)
+    cells.append(cell)
+    print(f"telemetry A/B requests= 16 slots=4 max_prompt= 32  "
+          f"on {cell['on_tok_s']:7.0f} tok/s  "
+          f"off {cell['off_tok_s']:7.0f} tok/s  "
+          f"capacity x{cell['speedup']:.2f} (gate [0.98, 1.02])")
 
     out = {
         "meta": {

@@ -260,9 +260,12 @@ class FaultPlan:
     # raise RuntimeError right before a launch of this kind at this round
     raise_kind: str | None = None
     raise_round: int = 0
-    # virtual straggler delays: {round: extra_seconds} added to decode
-    # launch timings (never actually slept)
+    # virtual straggler delays: {round: extra_seconds} added to launch
+    # timings (never actually slept); ``delay_kind`` scopes them to one
+    # launch kind ('prefill' | 'chunked' | 'decode') so prefill- and
+    # decode-straggler EMAs can be exercised independently
     delay_rounds: dict = dataclasses.field(default_factory=dict)
+    delay_kind: str = "any"
     # coordinator preemption (SIGTERM stand-in): request a drain at round N
     preempt_at_round: int | None = None
     # multi-host process faults, gated on (process id, command seq):
@@ -304,6 +307,8 @@ class PlanInjector(FaultInjector):
             raise RuntimeError(f"injected {kind} launch fault at round {rnd}")
 
     def exec_delay(self, kind: str, rnd: int) -> float:
+        if self.plan.delay_kind not in (kind, "any"):
+            return 0.0
         return float(self.plan.delay_rounds.get(rnd, 0.0))
 
     def poison_rows(self, kind: str, plan) -> list[int]:

@@ -102,6 +102,7 @@ def _interpret() -> bool:
 
 _PDQ_GUARD = False
 _PDQ_FAULT = False      # test hook: corrupt every fast-path result
+_PDQ_TEL: "PdqTelemetryCollector | None" = None
 
 
 @contextlib.contextmanager
@@ -114,6 +115,74 @@ def pdq_guard(enable: bool = True):
         yield
     finally:
         _PDQ_GUARD = prev
+
+
+class PdqTelemetryCollector:
+    """Trace-time accumulator for quantization-health scalars.
+
+    While ``pdq_telemetry`` is active, every PDQ projection appends jnp
+    SCALARS here as it traces: the guard's fallback-activation flag (the
+    same fused finiteness reduction the guard's ``cond`` already
+    computes), int8 clip-saturation hit counts and the elements checked.
+    ``summary()`` folds them into ONE (3,) float32 the launch returns
+    alongside its tokens - the host reads it in the existing token
+    gather, so quantization health costs zero extra round-trips and adds
+    no pallas_calls (pure jnp reductions; the kernel census is pinned
+    unchanged)."""
+
+    def __init__(self):
+        self.fallbacks: list = []
+        self.clip_hits: list = []
+        self.clip_total: list = []
+
+    def summary(self):
+        def tot(xs):
+            acc = jnp.float32(0.0)
+            for x in xs:
+                acc = acc + x
+            return acc
+
+        return jnp.stack([tot(self.fallbacks), tot(self.clip_hits),
+                          tot(self.clip_total)])
+
+
+# the summary layout engines unpack: [fallbacks, clip_hits, clip_total]
+PDQ_TEL_WIDTH = 3
+
+
+@contextlib.contextmanager
+def pdq_telemetry(enable: bool = True):
+    """Collect PDQ health scalars from every projection traced inside
+    (nests with ``pdq_guard``/``tp_shard``).  ``enable=False`` yields a
+    collector whose summary is zeros - launch signatures stay uniform."""
+    global _PDQ_TEL
+    col = PdqTelemetryCollector()
+    prev = _PDQ_TEL
+    _PDQ_TEL = col if enable else None
+    try:
+        yield col
+    finally:
+        _PDQ_TEL = prev
+
+
+def _tel_clip(y, lo, hi):
+    """Record clip saturation of a clamped fp output: elements sitting on
+    either interval edge were clipped by the epilogue (or landed exactly
+    on the representable boundary, which the rate treats the same)."""
+    if _PDQ_TEL is None:
+        return
+    hits = jnp.sum(((y <= lo) | (y >= hi)).astype(jnp.float32))
+    _PDQ_TEL.clip_hits.append(hits)
+    _PDQ_TEL.clip_total.append(jnp.float32(y.size))
+
+
+def _tel_clip_q(y_q):
+    """Int8-out flavor: saturation is the grid's edge codes."""
+    if _PDQ_TEL is None:
+        return
+    hits = jnp.sum(((y_q == 127) | (y_q == -128)).astype(jnp.float32))
+    _PDQ_TEL.clip_hits.append(hits)
+    _PDQ_TEL.clip_total.append(jnp.float32(y_q.size))
 
 
 @contextlib.contextmanager
@@ -143,7 +212,12 @@ def _guard_pdq(y, x, w_q, scale, out_dtype):
         return y
     if _PDQ_FAULT:
         y = y + jnp.float32(jnp.nan).astype(y.dtype)
-    return jax.lax.cond(jnp.isfinite(y).all(),
+    ok = jnp.isfinite(y).all()
+    if _PDQ_TEL is not None:
+        # the fallback-activation count rides the SAME fused reduction the
+        # cond consumes: telemetry reuses it, costing nothing extra
+        _PDQ_TEL.fallbacks.append(1.0 - ok.astype(jnp.float32))
+    return jax.lax.cond(ok,
                         lambda: y,
                         lambda: _fp_dequant_matmul(x, w_q, scale, out_dtype))
 
@@ -341,6 +415,7 @@ def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
         y_q = w8a8_matmul(x_q, wrec["q"], s_x, 0, wrec["scale"],
                           s_out, z_out.astype(jnp.int32),
                           colsum=wrec["colsum"], block=block)
+        _tel_clip_q(y_q)
         return y_q, s_out, z_out.astype(jnp.int32)
     # clamp to the representable extent of the int8 grid rather than the raw
     # interval, so fp-out matches requant->dequant at the clip boundaries.
@@ -358,6 +433,9 @@ def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
         y = w8a8_matmul(x_q, wq_l, s_x, 0, sc_l,
                         colsum=_tp_cols(wrec["colsum"], Nl, idx, 1),
                         fp_range=(lo_g, hi_g), out_dtype=out_dtype, block=block)
+        # telemetry counts this shard's columns; the engine psums the
+        # collector summary over the mesh to recover fleet-wide counts
+        _tel_clip(y, lo_g, hi_g)
         # guard BEFORE the all-gather: each shard checks and (if needed)
         # recomputes only its own columns, so one corrupted shard cannot
         # spread non-finite values through the gathered concatenation.
@@ -366,6 +444,7 @@ def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
     y = w8a8_matmul(x_q, wrec["q"], s_x, 0, wrec["scale"],
                     colsum=wrec["colsum"], fp_range=(lo_g, hi_g),
                     out_dtype=out_dtype, block=block)
+    _tel_clip(y, lo_g, hi_g)
     return _guard_pdq(y, x, wrec["q"], wrec["scale"], out_dtype)
 
 
@@ -408,6 +487,7 @@ def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
         y_q = w8a8_matmul(x_q, grec["q"], s_x, 0, grec["scale"],
                           blockwise(s_out), blockwise(z_out).astype(jnp.int32),
                           colsum=grec["colsum"], block=block)
+        _tel_clip_q(y_q)
         ys = tuple(y_q[..., o:o + n] for o, n in bounds)
         return ys, s_out, z_out.astype(jnp.int32)
     lo_g = (-128.0 - z_out) * s_out
@@ -422,11 +502,15 @@ def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
         lo_b, hi_b = blockwise(lo_g), blockwise(hi_g)
         wq_l = _tp_cols(grec["q"], Nl, idx, 1)
         sc_l = _tp_cols(grec["scale"], Nl, idx, 0)
+        lo_l = _tp_cols(lo_b, nb_l, idx, lo_b.ndim - 1)
+        hi_l = _tp_cols(hi_b, nb_l, idx, hi_b.ndim - 1)
         y = w8a8_matmul(x_q, wq_l, s_x, 0, sc_l,
                         colsum=_tp_cols(grec["colsum"], Nl, idx, 1),
-                        fp_range=(_tp_cols(lo_b, nb_l, idx, lo_b.ndim - 1),
-                                  _tp_cols(hi_b, nb_l, idx, hi_b.ndim - 1)),
+                        fp_range=(lo_l, hi_l),
                         out_dtype=out_dtype, block=block)
+        if _PDQ_TEL is not None:
+            _tel_clip(y, jnp.repeat(lo_l, bn, axis=-1),
+                      jnp.repeat(hi_l, bn, axis=-1))
         y = _guard_pdq(y, x, wq_l, sc_l, out_dtype)
         y = jax.lax.all_gather(y, ax, axis=y.ndim - 1, tiled=True)
         return tuple(y[..., o:o + n] for o, n in bounds)
@@ -434,6 +518,9 @@ def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
                     colsum=grec["colsum"],
                     fp_range=(blockwise(lo_g), blockwise(hi_g)),
                     out_dtype=out_dtype, block=block)
+    if _PDQ_TEL is not None:
+        _tel_clip(y, jnp.repeat(blockwise(lo_g), bn, axis=-1),
+                  jnp.repeat(blockwise(hi_g), bn, axis=-1))
     y = _guard_pdq(y, x, grec["q"], grec["scale"], out_dtype)
     return tuple(y[..., o:o + n] for o, n in bounds)
 

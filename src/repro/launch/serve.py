@@ -122,7 +122,42 @@ def build_args(argv=None):
     ap.add_argument("--max-pending", type=int, default=32,
                     help="HTTP admission watermark: submits past this many "
                          "queued requests are shed with 429 + Retry-After")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON (Perfetto-"
+                         "loadable) of request/phase spans here on exit; "
+                         "with --num-processes the coordinator writes ONE "
+                         "merged trace with a process row per jax process")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the metrics registry + lifecycle timing "
+                         "(the <=2%% overhead A/B switch; /metrics then "
+                         "renders empty)")
     return ap.parse_args(argv)
+
+
+def _fmt_ms(seconds: float) -> str:
+    return f"{seconds * 1e3:.1f}ms"
+
+
+def report_telemetry(eng, args) -> None:
+    """Drain/exit printout: latency histogram summaries (p50/p90/p99) and
+    the shed rate, plus the --trace-out write.  Shared by the canned-trace
+    and --http exits."""
+    summ = eng.tel.summary()
+    for key, label in (("ttft", "ttft"), ("per_token", "per-token"),
+                       ("queue_wait", "queue wait")):
+        s = summ.get(key)
+        if s and s["count"]:
+            print(f"  {label}: n={s['count']} p50={_fmt_ms(s['p50'])} "
+                  f"p90={_fmt_ms(s['p90'])} p99={_fmt_ms(s['p99'])}")
+    shed = eng.stats.get("shed", 0)
+    served = len(eng.finished)
+    if shed:
+        print(f"  shed: {shed} requests "
+              f"({shed / max(shed + served, 1):.1%} of submitted)")
+    if args.trace_out:
+        eng.tel.tracer.write(args.trace_out)
+        n = len(eng.tel.tracer.events())
+        print(f"  trace: {n} spans -> {args.trace_out}", flush=True)
 
 
 def _tee_stderr(proc, ring) -> threading.Thread:
@@ -271,6 +306,7 @@ def serve_http(args, eng, multiproc: bool) -> None:
              else "(no --snapshot: progress dropped)"), flush=True)
     print("  stats:  ", {k: v for k, v in eng.stats.items()
                          if not k.startswith("replica_")})
+    report_telemetry(eng, args)
 
 
 def main(argv=None):
@@ -325,7 +361,8 @@ def main(argv=None):
         multihost=multiproc, launch_timeout=args.launch_timeout,
         snapshot_path=args.snapshot, paged=args.paged,
         page_size=args.page_size, pool_pages=args.pool_pages,
-        prefix_sharing=not args.no_prefix_sharing, spill=args.spill)
+        prefix_sharing=not args.no_prefix_sharing, spill=args.spill,
+        telemetry=not args.no_telemetry, trace=args.trace_out is not None)
     try:
         eng = build_engine(sc)
     except ValueError as e:
@@ -389,6 +426,7 @@ def main(argv=None):
     print("  buckets:", eng.buckets)
     print("  stats:  ", {k: v for k, v in eng.stats.items()
                          if not k.startswith("replica_")})
+    report_telemetry(eng, args)
     for r, (adm, occ) in enumerate(zip(eng.stats["replica_admits"],
                                        eng.stats["replica_occupancy"])):
         print(f"  replica {r}: admits={adm} occupied={occ}/"

@@ -6,7 +6,7 @@ importable for subclassing and isinstance checks.  Everything in
 ``__all__`` is covered by the cross-PR compatibility expectation -
 anything else under ``repro.serve.*`` is internal.
 """
-from . import core, engine
+from . import core, engine, telemetry
 from .config import ServeConfig, build_engine, resolve_model
 from .core import (DEFAULT_BUCKETS, EngineDraining, Request, SchedulerCore,
                    resume_requests)
@@ -16,6 +16,7 @@ from .multihost import CoordinatorAbort, MultiHostServeEngine, ProtocolError
 from .pages import PageError, PagePool, PrefixStore
 from .service import OverloadedError, ServeService, TokenStream
 from .sharded import ShardedServeEngine
+from .telemetry import MetricsRegistry, Telemetry, Tracer
 
 __all__ = ["ServeConfig", "build_engine", "resolve_model",
            "DEFAULT_BUCKETS", "Request", "SchedulerCore", "ServeEngine",
@@ -23,4 +24,5 @@ __all__ = ["ServeConfig", "build_engine", "resolve_model",
            "ProtocolError", "EngineDraining", "OverloadedError",
            "PagePool", "PrefixStore", "PageError",
            "ServeService", "TokenStream", "HttpFrontend", "resume_requests",
+           "Telemetry", "Tracer", "MetricsRegistry", "telemetry",
            "core", "engine"]

@@ -63,6 +63,12 @@ class ServeConfig:
     prefix_sharing: bool = True
     spill: bool = False             # host spill (single-device only)
 
+    # ---- telemetry (serve/telemetry.py)
+    telemetry: bool = True          # metrics registry + lifecycle timing;
+                                    # the <=2% overhead A/B switch
+    trace: bool = False             # span capture for --trace-out (opt-in:
+                                    # ring memory + clock reads per phase)
+
     def validate(self) -> "ServeConfig":
         if self.multihost and self.mesh is None:
             raise ValueError("multihost=True needs a mesh")
@@ -112,7 +118,8 @@ def build_engine(config: ServeConfig, *, cfg=None, params=None):
                   fault=config.fault, pdq_fallback=config.pdq_fallback,
                   paged=config.paged, page_size=config.page_size,
                   pool_pages=config.pool_pages,
-                  prefix_sharing=config.prefix_sharing)
+                  prefix_sharing=config.prefix_sharing,
+                  telemetry=config.telemetry, trace=config.trace)
 
     if config.mesh is None:
         from .engine import ServeEngine

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Any
 
@@ -44,6 +45,7 @@ import numpy as np
 from repro.distributed.fault import (FailureLog, FaultInjector,
                                      StragglerWatchdog, save_snapshot)
 
+from . import telemetry as tmod
 from .pages import PageError, PagePool, PrefixStore, pages_for
 
 DEFAULT_BUCKETS = (32, 64, 128, 256)
@@ -74,6 +76,14 @@ class Request:
     # regenerates its tokens bit-exactly ((uid, step) sampling keys), and
     # this watermark keeps ``_emit_token`` from delivering them twice
     emitted: int = 0
+    # telemetry lifecycle stamps (time.perf_counter; None until reached):
+    # TTFT = first_token_at - submitted_at, queue wait = admitted_at -
+    # submitted_at, inter-token gaps stream off last_token_at.  Excluded
+    # from snapshots - a resumed request re-times from scratch.
+    submitted_at: float | None = None
+    admitted_at: float | None = None
+    first_token_at: float | None = None
+    last_token_at: float | None = None
 
 
 @dataclasses.dataclass
@@ -151,7 +161,8 @@ class SchedulerCore:
     def _init_scheduler(self, *, slots: int, n_replicas: int, max_len: int,
                         patch_tokens: int, buckets: tuple[int, ...],
                         batch_prefill: bool, chunked_prefill: bool,
-                        fault: FaultInjector | None = None) -> None:
+                        fault: FaultInjector | None = None,
+                        tel: tmod.Telemetry | None = None) -> None:
         assert slots % n_replicas == 0, (slots, n_replicas)
         assert batch_prefill or n_replicas == 1, (
             "the legacy per-request prefill baseline is single-replica only")
@@ -205,7 +216,17 @@ class SchedulerCore:
         self.fault = fault if fault is not None else FaultInjector()
         self.fault.bind(self)
         self.straggler = StragglerWatchdog()
+        # prefill/chunked launches get their OWN EMA: a bucketed prefill is
+        # legitimately 10-100x a decode step, so sharing the decode EMA
+        # would either flag every prefill or never flag a slow one
+        self.prefill_straggler = StragglerWatchdog()
         self.failures = FailureLog()
+        # telemetry plane (serve/telemetry.py): metrics registry + tracer;
+        # engines thread enabled/trace through from ServeConfig
+        self.tel = tel if tel is not None else tmod.Telemetry()
+        # guards stats_snapshot()/events_snapshot() against the serving
+        # loop thread mutating while an HTTP scrape serializes
+        self.stats_lock = threading.Lock()
         self.snapshot_path: str | None = None
         self._round = 0
         self._draining = False
@@ -248,6 +269,10 @@ class SchedulerCore:
             "shed": 0,                 # admissions refused at the watermark
                                        # (service front door: HTTP 429)
             "straggler_flags": 0,      # decode rounds flagged slow (EMA)
+            "prefill_straggler_flags": 0,   # prefill/chunk launches flagged
+            "pdq_fallbacks": 0,        # guarded-projection fp fallbacks fired
+            "pdq_clip_hits": 0,        # int8 outputs saturated at clip edges
+            "pdq_clip_total": 0,       # int8 outputs checked
             # per-replica occupancy/admit accounting (single-replica engines
             # report one-element lists)
             "replica_admits": [0] * n_replicas,
@@ -277,6 +302,13 @@ class SchedulerCore:
                               for _ in range(self.n_replicas)]
         for pool, store in zip(self.page_pools, self.prefix_stores):
             pool.on_free = store.drop_page
+        if self.tel.enabled:
+            cow = self.tel.metrics.counter(
+                "serve_cow_copies_total",
+                "shared frontier pages broken by copy-on-write")
+            for ri, pool in enumerate(self.page_pools):
+                pool.on_cow = (lambda uid, src, dst, _r=ri, _c=cow:
+                               _c.inc())
         self._slot_seq = [0] * self.slots    # activation order (preempt LIFO)
         self._act_seq = 0
         self._shared_k: dict[int, int] = {}  # uid -> shared prefix pages
@@ -295,6 +327,35 @@ class SchedulerCore:
                                         for s in self.prefix_stores)
         self.stats["prefix_shared_pages"] = sum(
             s.stats["prefix_shared_pages"] for s in self.prefix_stores)
+
+    # ------------------------------------------------------- telemetry taps
+    def stats_snapshot(self) -> dict[str, Any]:
+        """Deep-enough copy of ``stats`` taken under ``stats_lock``: the
+        HTTP scrape thread serializes THIS, never the live dict the
+        serving loop mutates (lists included - ``list(v)`` of a list being
+        resized concurrently is the old /v1/stats race)."""
+        with self.stats_lock:
+            return {k: (list(v) if isinstance(v, list) else v)
+                    for k, v in self.stats.items()}
+
+    def events_snapshot(self) -> list[dict]:
+        """Copy of the structured event ring (failures, evictions,
+        preemptions, stragglers) for ``GET /v1/events``."""
+        with self.stats_lock:
+            return [dict(e) for e in self.failures.events]
+
+    def _observe_pdq(self, tel_sum) -> None:
+        """Fold one launch's device-side [fallbacks, clip_hits, clip_total]
+        summary (rode the token gather as host numpy) into stats + the
+        metrics registry."""
+        if tel_sum is None or not self.tel.enabled:
+            return
+        fb, hits, total = (float(x) for x in np.asarray(tel_sum).reshape(-1)[:3])
+        with self.stats_lock:
+            self.stats["pdq_fallbacks"] += int(round(fb))
+            self.stats["pdq_clip_hits"] += int(round(hits))
+            self.stats["pdq_clip_total"] += int(round(total))
+        self.tel.observe_pdq(fb, hits, total)
 
     # ------------------------------------------------------------ exec hooks
     def _exec_prefill(self, plan: PrefillPlan, extras):
@@ -348,10 +409,32 @@ class SchedulerCore:
         if idx < req.emitted:
             return      # preempt-regenerated token: already delivered
         req.emitted = idx + 1
+        if self.tel.enabled:
+            now = time.perf_counter()
+            if req.first_token_at is None:
+                req.first_token_at = now
+                if req.submitted_at is not None:
+                    self.tel.ttft.observe(now - req.submitted_at)
+            elif req.last_token_at is not None:
+                self.tel.per_token.observe(now - req.last_token_at)
+            req.last_token_at = now
         if self.on_token is not None:
             self.on_token(req, tok)
 
     def _emit_finish(self, req: Request) -> None:
+        tr = self.tel.tracer
+        if tr.enabled and req.submitted_at is not None:
+            # the request's lifecycle lands as two spans on the request
+            # row: queued (submit -> admit) and active (admit -> finish)
+            t0 = tr.to_us(req.submitted_at)
+            t1 = tr.to_us(req.admitted_at) if req.admitted_at else tr.now_us()
+            tr.add(f"req {req.uid} queued", cat="request", ts=t0,
+                   dur=t1 - t0, tid=tmod.TID_REQUEST, args={"uid": req.uid})
+            tr.add(f"req {req.uid} {req.finish_reason or 'active'}",
+                   cat="request", ts=t1, dur=tr.now_us() - t1,
+                   tid=tmod.TID_REQUEST,
+                   args={"uid": req.uid, "tokens": len(req.generated),
+                         "reason": req.finish_reason or ""})
         if self.on_finish is not None:
             self.on_finish(req)
 
@@ -832,6 +915,8 @@ class SchedulerCore:
             return self._submit_one(req, extras)
         self._validate(len(req.prompt))  # validate before touching the queue
         self._validate_extras(len(req.prompt), extras)
+        if self.tel.enabled and req.submitted_at is None:
+            req.submitted_at = time.perf_counter()
         self.pending.appendleft(req)
         self._admit(extras)
         return True
@@ -856,15 +941,40 @@ class SchedulerCore:
             # the same path a real device error takes), and an exception
             # fails the launch's requests without taking the engine down
             self._inflight = [r for _, r in slots_reqs]
+            if self.tel.enabled:
+                now = time.perf_counter()
+                for _, r in slots_reqs:
+                    if r.admitted_at is None:
+                        r.admitted_at = now
+                        if r.submitted_at is not None:
+                            self.tel.queue_wait.observe(now - r.submitted_at)
+            t0 = time.perf_counter()
             try:
                 self.fault.on_exec(kind, self._round)
-                res = exec_fn()
+                with self.tel.span(f"launch:{kind}", tid=tmod.TID_LAUNCH,
+                                   reqs=len(slots_reqs), round=self._round):
+                    res = exec_fn()
             except Exception as e:
                 if not self._isolate_exec:
                     raise          # multi-host: abort + drain, never desync
                 self._abort_launch(kind, slots_reqs, e)
             else:
-                apply_fn(plan, res)
+                # prefill/chunked launches feed their OWN straggler EMA
+                # (distinct event kind from the decode watchdog)
+                dt = (time.perf_counter() - t0
+                      + self.fault.exec_delay(kind, self._round))
+                if self.prefill_straggler.observe(dt):
+                    self.failures.record(
+                        self._round, "straggler_prefill",
+                        f"{kind} launch {dt:.4f}s > "
+                        f"{self.prefill_straggler.factor:g}x EMA "
+                        f"{self.prefill_straggler.ema:.4f}s")
+                self.stats["prefill_straggler_flags"] = \
+                    self.prefill_straggler.flagged
+                if self.tel.enabled:
+                    self.tel.launch_histogram(kind).observe(dt)
+                with self.tel.span(f"apply:{kind}", tid=tmod.TID_APPLY):
+                    apply_fn(plan, res)
 
         def flush():
             nonlocal admitted
@@ -879,14 +989,16 @@ class SchedulerCore:
                     if not any(per):
                         continue
                 if key[0] == "chunk":
-                    plan = self._plan_chunked(groups[key], per=per)
+                    with self.tel.span("plan:chunked", tid=tmod.TID_PLAN):
+                        plan = self._plan_chunked(groups[key], per=per)
                     plan.share_ok = share
                     launch("chunked", plan,
                            [(s, r) for s, _, r in plan.placed],
                            lambda p=plan: self._exec_chunked(p, extras),
                            self._apply_chunked)
                 else:
-                    plan = self._plan_prefill(per, key[1])
+                    with self.tel.span("plan:prefill", tid=tmod.TID_PLAN):
+                        plan = self._plan_prefill(per, key[1])
                     plan.share_ok = share
                     launch("prefill", plan,
                            [(s, r) for s, _, r in plan.placed],
@@ -1019,7 +1131,9 @@ class SchedulerCore:
                     if victim == slot:
                         break             # preempted ourselves: give up
         for ri, pairs in copies.items():
-            self._exec_page_copy(ri, pairs)
+            with self.tel.span("page_copy", tid=tmod.TID_LAUNCH,
+                               replica=ri, pairs=len(pairs)):
+                self._exec_page_copy(ri, pairs)
 
     def _preempt(self, slot: int) -> None:
         """Evict a request under pool pressure: pages free, the request
@@ -1092,13 +1206,18 @@ class SchedulerCore:
             # every live slot must own the page its next write hits BEFORE
             # the page tables are snapshotted into the plan
             self._ensure_decode_pages()
-        plan = self._plan_decode()
+        with self.tel.span("plan:decode", tid=tmod.TID_PLAN):
+            plan = self._plan_decode()
         if plan is None:
             return 0
+        if self.tel.enabled:
+            self.tel.round_occupancy.observe(len(plan.live))
         t0 = time.perf_counter()
         try:
             self.fault.on_exec("decode", self._round)
-            res = self._exec_decode(plan)
+            with self.tel.span("launch:decode", tid=tmod.TID_LAUNCH,
+                               live=len(plan.live), round=self._round):
+                res = self._exec_decode(plan)
         except Exception as e:
             if not self._isolate_exec:
                 raise
@@ -1114,7 +1233,10 @@ class SchedulerCore:
                     f"decode launch {dt:.4f}s > {self.straggler.factor:g}x "
                     f"EMA {self.straggler.ema:.4f}s")
             self.stats["straggler_flags"] = self.straggler.flagged
-            self._apply_decode(plan, res)
+            if self.tel.enabled:
+                self.tel.launch_histogram("decode").observe(dt)
+            with self.tel.span("apply:decode", tid=tmod.TID_APPLY):
+                self._apply_decode(plan, res)
         self._refresh_page_stats()
         return len([r for r in self.active if r is not None])
 
@@ -1134,6 +1256,11 @@ class SchedulerCore:
         for r in requests:                 # validate upfront: an oversized
             self._validate(len(r.prompt))  # prompt must not dequeue peers
             self._validate_extras(len(r.prompt), extras)
+        if self.tel.enabled:
+            now = time.perf_counter()
+            for r in requests:
+                if r.submitted_at is None:
+                    r.submitted_at = now
         self.pending.extend(requests)
         n_active = sum(r is not None for r in self.active)   # pre-submitted
         while self.pending or n_active:
@@ -1156,7 +1283,8 @@ class SchedulerCore:
         if self._draining and self.snapshot_path:
             # persist the drain record as part of the preemption path: the
             # relaunch rebuilds its queue via ``resume_requests``
-            save_snapshot(self.snapshot_path, self.snapshot())
+            with self.tel.span("snapshot", tid=tmod.TID_SNAPSHOT):
+                save_snapshot(self.snapshot_path, self.snapshot())
         return requests
 
 

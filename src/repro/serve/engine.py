@@ -52,6 +52,7 @@ from repro.kernels import ops
 from repro.models import build_model
 from repro.models.linops import quantize_param_tree
 
+from . import telemetry as tmod
 from .core import (DEFAULT_BUCKETS, ChunkedPlan, DecodePlan, PrefillPlan,
                    Request, SchedulerCore)
 from .pages import SpillRecord
@@ -73,7 +74,10 @@ class ServeEngine(SchedulerCore):
                  page_size: int = 64,
                  pool_pages: int | None = None,
                  prefix_sharing: bool = True,
-                 spill: bool = False):
+                 spill: bool = False,
+                 telemetry: bool = True,
+                 trace: bool = False,
+                 tel: "tmod.Telemetry | None" = None):
         self.cfg = cfg
         self.bundle = build_model(cfg)
         self.params = (quantize_param_tree(params) if quantize_weights
@@ -90,12 +94,14 @@ class ServeEngine(SchedulerCore):
         self.pdq_fallback = bool(pdq_fallback)
         mem_len = 8 if cfg.family == "encdec" else 0
         self.mem_len = mem_len
+        if tel is None:
+            tel = tmod.Telemetry(enabled=telemetry, trace=trace)
         self._init_scheduler(
             slots=slots, n_replicas=n_replicas, max_len=max_len,
             patch_tokens=(cfg.frontend_tokens if cfg.frontend == "vision"
                           else 0),
             buckets=buckets, batch_prefill=batch_prefill,
-            chunked_prefill=chunked_prefill, fault=fault)
+            chunked_prefill=chunked_prefill, fault=fault, tel=tel)
         if paged:
             assert batch_prefill, "the paged pool needs the bucketed path"
             self._paged_ops = self.bundle.paged_cache(
@@ -191,14 +197,23 @@ class ServeEngine(SchedulerCore):
 
     def _traced_jit(self, fn, counter: str, donate: tuple = ()):
         """jit(fn) that bumps ``stats[counter]`` once per (re)trace - i.e.
-        once per compiled executable, the quantity the bucket design caps."""
+        once per compiled executable, the quantity the bucket design caps.
+
+        Every launch also returns the pdq health summary ((3,) float32:
+        guard fallbacks, int8 clip hits, clipped-output count) folded
+        device-side by ops.pdq_telemetry - pure jnp reductions, so the
+        pallas_call census is unchanged and the scalars ride the existing
+        token gather instead of adding a host round-trip.  With telemetry
+        off the summary is a constant zeros vector."""
         stats = self.stats
         guard = self.pdq_fallback
+        collect = self.tel.enabled
 
         def wrapped(*args):
             stats[counter] += 1      # trace-time side effect
-            with ops.pdq_guard(guard):
-                return fn(*args)
+            with ops.pdq_guard(guard), ops.pdq_telemetry(collect) as col:
+                out = fn(*args)
+                return out, col.summary()
 
         return jax.jit(wrapped, donate_argnums=donate)
 
@@ -254,11 +269,13 @@ class ServeEngine(SchedulerCore):
     def _exec_prefill(self, plan: PrefillPlan, extras):
         batch = self._extras_batch({"tokens": jnp.asarray(plan.tokens)},
                                    extras)
-        logits, sub = self._prefill_many(self.params, batch,
-                                         self._prefill_pool,
-                                         jnp.asarray(plan.seq_lens))
+        (logits, sub), tel = self._prefill_many(self.params, batch,
+                                                self._prefill_pool,
+                                                jnp.asarray(plan.seq_lens))
         self._land_sub(plan, sub)
-        return self._sample_rows("prefill", plan, logits)
+        out = self._sample_rows("prefill", plan, logits)
+        self._observe_pdq(tel)     # already computed: rides the token gather
+        return out
 
     def _land_sub(self, plan, sub) -> None:
         """Land a finished prefill batch in the pool: page-wise through the
@@ -277,28 +294,31 @@ class ServeEngine(SchedulerCore):
             raise NotImplementedError(
                 "chunked prefill is text-only (no vision/encdec extras)")
         _, tokens, seq_lens = plan.first
-        logits, sub = self._prefill_many(self.params,
-                                         {"tokens": jnp.asarray(tokens)},
-                                         self._prefill_pool,
-                                         jnp.asarray(seq_lens))
+        (logits, sub), tel = self._prefill_many(
+            self.params, {"tokens": jnp.asarray(tokens)},
+            self._prefill_pool, jnp.asarray(seq_lens))
         for _, tokens, seq_lens, start_lens in plan.chunks:
-            logits, sub = self._prefill_chunk(self.params,
-                                              {"tokens": jnp.asarray(tokens)},
-                                              sub, jnp.asarray(seq_lens),
-                                              jnp.asarray(start_lens))
+            (logits, sub), t2 = self._prefill_chunk(
+                self.params, {"tokens": jnp.asarray(tokens)}, sub,
+                jnp.asarray(seq_lens), jnp.asarray(start_lens))
+            tel = tel + t2        # lazy device add: one fetch per launch set
         self._land_sub(plan, sub)
-        return self._sample_rows("chunked", plan, logits)
+        out = self._sample_rows("chunked", plan, logits)
+        self._observe_pdq(tel)
+        return out
 
     def _exec_decode(self, plan: DecodePlan):
         if self.paged:
-            logits, self.caches = self._decode_paged(
+            (logits, self.caches), tel = self._decode_paged(
                 self.params, self.caches, jnp.asarray(plan.page_tables),
                 jnp.asarray(plan.tokens), jnp.asarray(plan.positions))
         else:
-            logits, self.caches = self._decode(self.params, self.caches,
-                                               jnp.asarray(plan.tokens),
-                                               jnp.asarray(plan.positions))
-        return self._sample_rows("decode", plan, logits)
+            (logits, self.caches), tel = self._decode(
+                self.params, self.caches, jnp.asarray(plan.tokens),
+                jnp.asarray(plan.positions))
+        out = self._sample_rows("decode", plan, logits)
+        self._observe_pdq(tel)
+        return out
 
     # ------------------------------------------------------ paged-pool hooks
     def _copy_map(self, replica: int, pairs) -> np.ndarray:
@@ -346,11 +366,13 @@ class ServeEngine(SchedulerCore):
         batch = {"tokens": jnp.asarray(np.asarray(req.prompt)[None], jnp.int32)}
         if extras:
             batch.update(extras)
-        logits, sub_caches = self._prefill_one(self.params, batch, sub_caches)
+        (logits, sub_caches), tel = self._prefill_one(self.params, batch,
+                                                      sub_caches)
         self.caches = self.bundle.cache_merge(self.caches, sub_caches, slot)
         toks, ok = self._sampler(self.rng, logits,
                                  jnp.asarray([req.uid], jnp.int32),
                                  jnp.asarray([0], jnp.int32))
+        self._observe_pdq(tel)
         if not bool(np.asarray(ok)[0]):
             self._release_slot(slot)
             self._fail(req, "non-finite logits at prefill", "nonfinite")

@@ -10,7 +10,15 @@ Routes:
     tokens), then ``data: {"finish_reason": ...}`` and ``data: [DONE]``.
     Without streaming, one JSON body after the request finishes.
   * ``GET /healthz`` - liveness + drain state.
-  * ``GET /v1/stats`` - the scheduler counters + service watermarks.
+  * ``GET /v1/stats`` - the scheduler counters + service watermarks
+    (snapshot under the engine's stats lock - the loop thread keeps
+    mutating while we serialize).
+  * ``GET /metrics`` - Prometheus text exposition (version 0.0.4) of the
+    engine's metric registry: TTFT / per-token / queue-wait / launch
+    histograms, pdq_fallbacks / pdq_clip_rate quantization health, shed
+    and occupancy series (serve/telemetry.py).
+  * ``GET /v1/events`` - the structured failure/eviction/preemption/
+    straggler event ring as JSONL, one event object per line.
 
 Robustness mapping (the whole point of the front door):
   * overload   -> 429 with ``Retry-After`` (typed ``OverloadedError`` from
@@ -114,6 +122,17 @@ class HttpFrontend:
                 await writer.drain()
             elif method == "GET" and path == "/v1/stats":
                 writer.write(_json_bytes(200, "OK", self.service.stats()))
+                await writer.drain()
+            elif method == "GET" and path == "/metrics":
+                writer.write(_resp_bytes(
+                    200, "OK", "text/plain; version=0.0.4; charset=utf-8",
+                    self.service.metrics_text().encode()))
+                await writer.drain()
+            elif method == "GET" and path == "/v1/events":
+                lines = "".join(json.dumps(e) + "\n"
+                                for e in self.service.events())
+                writer.write(_resp_bytes(200, "OK", "application/jsonl",
+                                         lines.encode()))
                 await writer.drain()
             elif method == "POST" and path == "/v1/completions":
                 await self._completions(reader, writer, body)

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -69,18 +70,28 @@ from repro.distributed.fault import DeadlineWatchdog, _default_deadline_abort, \
 from repro.distributed.sharding import (make_global, pool_shardings,
                                         process_replicas, serve_pool_specs)
 
+from . import telemetry as tmod
 from .core import ChunkedPlan, DecodePlan, PrefillPlan, Request
 from .engine import DEFAULT_BUCKETS
 from .sharded import ShardedServeEngine
 
-# coordinator -> worker opcodes.  Header: int32[4 + 2 * n_processes] =
-# [op, arg, seq, n_extras, ack_0..ack_{n-1}, ing_0..ing_{n-1}] - arg is
+# coordinator -> worker opcodes.  Header: int32[4 + 3 * n_processes] =
+# [op, arg, seq, n_extras, ack_0..ack_{n-1}, ing_0..ing_{n-1},
+#  tim_0..tim_{n-1}] - arg is
 # the bucket length (prefill/chunk), the abort reason code, or the source
 # process (ingress pull); seq numbers every command; ack_p is process p's
 # last-completed command seq (the heartbeat); ing_p is the length of
 # process p's local ingress queue (worker-side submits awaiting pickup),
 # so EVERY command exchange doubles as an ingress announcement and the
-# coordinator never needs a side channel to learn about remote submits.
+# coordinator never needs a side channel to learn about remote submits;
+# tim_p is the wall time (microseconds, int32-clamped) process p spent
+# executing its PREVIOUS command - the telemetry piggyback.  The
+# coordinator attributes slot p to the kind of the command it issued one
+# seq earlier, folds it into per-process fleet launch histograms and,
+# when tracing, reconstructs a retroactive worker span (ts = arrival -
+# duration on the coordinator clock - no clock sync, good enough to read
+# phase overlap).  Timing costs ZERO extra collectives: it rides the
+# header exchange every command already performs.
 CMD_STOP = 0
 CMD_PREFILL = 1        # payload: tokens (slots, L), seq_lens, src_map,
                        #          row_uids, row_steps [+ n_extras arrays,
@@ -99,6 +110,13 @@ CMD_POLL = 8           # no-op rendezvous: harvest acks + ingress counts
                        # while the scheduler is otherwise idle
 CMD_PAGE_COPY = 9      # paged pool COW copy: payload copy map
                        # (n_replicas * pool_pages,) int32, -1 = keep
+
+# opcode -> launch kind for the header timing piggyback (commands whose
+# worker-side execution is a device launch worth a histogram/span; polls,
+# ingress pulls and the chunk-end scatter are protocol overhead)
+_CMD_KINDS = {CMD_PREFILL: "prefill", CMD_CHUNK_FIRST: "chunked",
+              CMD_CHUNK_NEXT: "chunked", CMD_DECODE: "decode",
+              CMD_PAGE_COPY: "page_copy"}
 
 # extras keys the prefill payload can carry (shape-tag header word 0);
 # float32 values ride the int32 psum exchange losslessly via a bitcast
@@ -167,7 +185,8 @@ class MultiHostServeEngine(ShardedServeEngine):
                  snapshot_path: str | None = None,
                  paged: bool = False, page_size: int = 64,
                  pool_pages: int | None = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 telemetry: bool = True, trace: bool = False):
         self.n_processes = jax.process_count()
         self.process_id = jax.process_index()
         self.is_coordinator = self.process_id == 0
@@ -185,9 +204,11 @@ class MultiHostServeEngine(ShardedServeEngine):
         self._chunk_nxt = None         # last chunk's sampled tokens
         self._stopped = False
         self.launch_timeout = launch_timeout
-        self._hdr = 4 + 2 * self.n_processes
+        self._hdr = 4 + 3 * self.n_processes
         self._seq = 1                  # next command number (coordinator)
         self._done_seq = 0             # last completed command (workers)
+        self._last_exec_us = 0         # worker: previous command exec wall
+        self._prev_kind = None         # coordinator: previous command kind
         # worker-side ingress: local submits queued for coordinator pickup
         # (announced as queue counts on every header exchange)
         self._ingress_lock = threading.Lock()
@@ -195,6 +216,11 @@ class MultiHostServeEngine(ShardedServeEngine):
         self._ingress_counts = [0] * self.n_processes
         self._remote: dict[int, dict] = {}   # uid -> {'max_new', 'tokens'}
         self._remote_seq = 1
+        # every process carries its own Telemetry keyed by its jax process
+        # index; the coordinator's additionally aggregates the fleet (the
+        # piggybacked worker timings land there)
+        tel = tmod.Telemetry(enabled=telemetry, trace=trace,
+                             pid=self.process_id)
         super().__init__(cfg, params, mesh=mesh,
                          slots_per_replica=slots_per_replica, max_len=max_len,
                          quantize_weights=quantize_weights,
@@ -202,7 +228,11 @@ class MultiHostServeEngine(ShardedServeEngine):
                          chunked_prefill=chunked_prefill, fault=fault,
                          pdq_fallback=pdq_fallback, paged=paged,
                          page_size=page_size, pool_pages=pool_pages,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing, tel=tel)
+        if self.is_coordinator:
+            for p in range(1, self.n_processes):
+                self.tel.tracer.name_process(p, f"jax process {p}")
+                self.tel.tracer.name_thread(p, tmod.TID_LAUNCH, "launch")
         self.snapshot_path = snapshot_path
         self.stats["remote_ingress"] = 0   # requests pulled from workers
         # replica -> owning process, for per-host stats and routing debug
@@ -273,16 +303,18 @@ class MultiHostServeEngine(ShardedServeEngine):
 
         def sampled(fn, in_specs):
             """shard_map(fn) (TP active inside) returning (sampled tokens,
-            ok flags, caches): logits stay sharded over 'data', sampling
-            and the finite check run per replica, and the replicated
-            out_sharding broadcasts the (slots,) tokens + flags to every
-            device in-program."""
-            mapped = self._sharded(fn, in_specs, (dp, cs))
+            ok flags, caches, pdq health summary): logits stay sharded
+            over 'data', sampling and the finite check run per replica,
+            and the replicated out_sharding broadcasts the (slots,) tokens
+            + flags (and the psum'd (3,) summary) to every device
+            in-program - the health scalars ride the token gather every
+            process already blocks on, zero extra round-trips."""
+            mapped = self._sharded(fn, in_specs, (dp, cs), tel=True)
 
             def prog(uids, steps, *args):
-                logits, caches = mapped(*args)
+                (logits, caches), tel = mapped(*args)
                 toks, ok = sample(logits, uids, steps)
-                return toks, ok, caches
+                return toks, ok, caches, tel
 
             return prog
 
@@ -300,13 +332,13 @@ class MultiHostServeEngine(ShardedServeEngine):
 
         self._decode = traced(
             sampled(self.bundle.decode_step, (P(), cs, dp, dp)),
-            "decode_compiles", out_shardings=(repl, repl, pool_sh))
+            "decode_compiles", out_shardings=(repl, repl, pool_sh, repl))
         self._prefill_many = traced(
             sampled(self.bundle.prefill_many, (P(), dp, cs, dp)),
-            "prefill_compiles", out_shardings=(repl, repl, pool_sh))
+            "prefill_compiles", out_shardings=(repl, repl, pool_sh, repl))
         self._prefill_chunk = traced(
             sampled(self.bundle.prefill_chunk, (P(), dp, cs, dp, dp)),
-            "chunk_compiles", out_shardings=(repl, repl, pool_sh))
+            "chunk_compiles", out_shardings=(repl, repl, pool_sh, repl))
         self._scatter = self._traced_sharded_jit(
             self.bundle.cache_scatter, None,
             in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
@@ -326,7 +358,7 @@ class MultiHostServeEngine(ShardedServeEngine):
 
             self._decode_paged = traced(
                 sampled(decode_paged, (P(), cs, pts, dp, dp)),
-                "decode_compiles", out_shardings=(repl, repl, pool_sh))
+                "decode_compiles", out_shardings=(repl, repl, pool_sh, repl))
             self._land = self._traced_sharded_jit(
                 po.land, None, in_specs=(cs, cs, dp, dp, dp), out_specs=cs,
                 donate=(0,))
@@ -423,6 +455,21 @@ class MultiHostServeEngine(ShardedServeEngine):
         self._seq += 1
         # piggybacked worker ingress announcement (see header layout)
         self._ingress_counts = [int(out[4 + N + p]) for p in range(N)]
+        # piggybacked worker launch timings: slot p carries the wall time
+        # of worker p's PREVIOUS command, so attribute it to the kind of
+        # the command issued one seq earlier
+        if self._prev_kind is not None and self.tel.enabled:
+            tr = self.tel.tracer
+            for p in range(1, N):
+                us = int(out[4 + 2 * N + p])
+                if us > 0:
+                    self.tel.launch_histogram(
+                        self._prev_kind, process=p).observe(us / 1e6)
+                    if tr.enabled:
+                        tr.add(f"launch:{self._prev_kind}",
+                               ts=tr.now_us() - us, dur=us, pid=p,
+                               tid=tmod.TID_LAUNCH, args={"process": p})
+        self._prev_kind = _CMD_KINDS.get(op)
         # piggybacked heartbeat: the worker loop is sequential, so at this
         # rendezvous every live worker must have completed seq - 1 exactly
         for p in range(1, N):
@@ -437,6 +484,8 @@ class MultiHostServeEngine(ShardedServeEngine):
         hdr[4 + self.process_id] = self._done_seq      # heartbeat/ack
         with self._ingress_lock:                       # queued submits
             hdr[4 + self.n_processes + self.process_id] = len(self._out_q)
+        # previous command's exec wall time (telemetry piggyback)
+        hdr[4 + 2 * self.n_processes + self.process_id] = self._last_exec_us
         hdr = self.fault.on_broadcast(self._done_seq + 1, hdr)
         out, = self._broadcast((hdr,), all_ranks=True)
         op, arg, seq, n_ex = (int(out[0]), int(out[1]), int(out[2]),
@@ -525,12 +574,13 @@ class MultiHostServeEngine(ShardedServeEngine):
                     extras=None, land_rows=None, land_js=None):
         u, s = self._us(uids, steps)
         with self._deadline("prefill launch"):
-            nxt, ok, sub = self._prefill_many(
+            nxt, ok, sub, tel = self._prefill_many(
                 u, s, self.params, self._batch(tokens, extras),
                 self._prefill_pool, self._glob(seq_lens, P("data")))
             self._land_global(sub, src_map, land_rows, land_js)
-            jax.block_until_ready((nxt, ok, self.caches))
+            jax.block_until_ready((nxt, ok, tel, self.caches))
         nxt, ok = np.asarray(nxt), np.asarray(ok)
+        self._observe_pdq(tel)      # psum'd fleet totals, replicated
         self._track_remote(nxt, ok, uids, steps)
         return nxt, ok
 
@@ -540,23 +590,25 @@ class MultiHostServeEngine(ShardedServeEngine):
                              np.asarray(steps, np.int32))
         u, s = self._chunk_us
         with self._deadline("chunked-prefill launch"):
-            nxt, ok, self._chunk_sub = self._prefill_many(
+            nxt, ok, self._chunk_sub, tel = self._prefill_many(
                 u, s, self.params,
                 {"tokens": self._glob(tokens, P("data"))},
                 self._prefill_pool, self._glob(seq_lens, P("data")))
-            jax.block_until_ready((nxt, ok, self._chunk_sub))
+            jax.block_until_ready((nxt, ok, tel, self._chunk_sub))
+        self._observe_pdq(tel)
         self._chunk_nxt = (np.asarray(nxt), np.asarray(ok))
         return self._chunk_nxt
 
     def _do_chunk_next(self, tokens, seq_lens, start_lens):
         u, s = self._chunk_us
         with self._deadline("chunked-prefill launch"):
-            nxt, ok, self._chunk_sub = self._prefill_chunk(
+            nxt, ok, self._chunk_sub, tel = self._prefill_chunk(
                 u, s, self.params,
                 {"tokens": self._glob(tokens, P("data"))},
                 self._chunk_sub, self._glob(seq_lens, P("data")),
                 self._glob(start_lens, P("data")))
-            jax.block_until_ready((nxt, ok, self._chunk_sub))
+            jax.block_until_ready((nxt, ok, tel, self._chunk_sub))
+        self._observe_pdq(tel)
         self._chunk_nxt = (np.asarray(nxt), np.asarray(ok))
         return self._chunk_nxt
 
@@ -579,18 +631,19 @@ class MultiHostServeEngine(ShardedServeEngine):
         u, s = self._us(uids, steps)
         with self._deadline("decode launch"):
             if self.paged:
-                nxt, ok, self.caches = self._decode_paged(
+                nxt, ok, self.caches, tel = self._decode_paged(
                     u, s, self.params, self.caches,
                     self._glob(page_tables, P("data", None)),
                     self._glob(tokens, P("data")),
                     self._glob(positions, P("data")))
             else:
-                nxt, ok, self.caches = self._decode(
+                nxt, ok, self.caches, tel = self._decode(
                     u, s, self.params, self.caches,
                     self._glob(tokens, P("data")),
                     self._glob(positions, P("data")))
-            jax.block_until_ready((nxt, ok, self.caches))
+            jax.block_until_ready((nxt, ok, tel, self.caches))
         nxt, ok = np.asarray(nxt), np.asarray(ok)
+        self._observe_pdq(tel)
         self._track_remote(nxt, ok, uids, steps)
         return nxt, ok
 
@@ -855,6 +908,7 @@ class MultiHostServeEngine(ShardedServeEngine):
             op, arg, seq, n_ex = self._recv_cmd()
             if op == CMD_STOP:
                 return
+            t0 = time.perf_counter()   # stamped on the NEXT header exchange
             if op == CMD_PREFILL:
                 recv = self._recv([(S, arg), (S,), (S,), (S,), (S,)] + lnd)
                 t, sl, m, u, st = recv[:5]
@@ -889,6 +943,9 @@ class MultiHostServeEngine(ShardedServeEngine):
                 raise ProtocolError(
                     f"unknown multi-host serve opcode {op} at command seq "
                     f"{seq} (corrupt or desynchronized command stream)")
+            if op in _CMD_KINDS:       # launch kinds only: the coordinator
+                self._last_exec_us = int(min(   # skips non-exec commands
+                    (time.perf_counter() - t0) * 1e6, 2**31 - 1))
             self._done_seq = seq
 
     # ------------------------------------------------------ per-host stats

@@ -78,6 +78,10 @@ class PagePool:
         self._tables: dict[int, list[int]] = {}
         # freed-page callback (the PrefixStore drops its entries there)
         self.on_free = None
+        # COW callback: fired with (uid, src, dst) whenever ensure_writable
+        # breaks a shared frontier page (the engine wires a telemetry
+        # counter + structured event here; None = uninstrumented)
+        self.on_cow = None
         self.stats = {"page_allocs": 0, "page_frees": 0, "cow_copies": 0}
 
     # ------------------------------------------------------------- accounting
@@ -147,6 +151,8 @@ class PagePool:
         self.refs[src] -= 1
         tab[j] = dst
         self.stats["cow_copies"] += 1
+        if self.on_cow is not None:
+            self.on_cow(uid, src, dst)
         return src, dst
 
     def alloc_one_detached(self) -> int:

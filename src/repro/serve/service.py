@@ -242,7 +242,10 @@ class ServeService:
                 raise EngineDraining(
                     "service is draining: new submissions are rejected")
             if self._pending_total() >= self.max_pending:
-                eng.stats["shed"] += 1
+                with eng.stats_lock:
+                    eng.stats["shed"] += 1
+                if eng.tel.enabled:
+                    eng.tel.shed.inc()
                 raise OverloadedError(self._pending_total(),
                                       self.max_pending, self.retry_after)
             if uid is None:
@@ -250,6 +253,10 @@ class ServeService:
             self._next_uid = max(self._next_uid, uid + 1)
             req = Request(uid=uid, prompt=p.astype(np.int32),
                           max_new=int(max_new), deadline=deadline)
+            if eng.tel.enabled:
+                # queue-wait/TTFT clock starts at ACCEPTANCE, not at the
+                # loop thread's pickup - the client is waiting from here
+                req.submitted_at = time.perf_counter()
             if stream:
                 cap = eng.fault.stream_cap(uid)
                 tstream = TokenStream(
@@ -268,14 +275,30 @@ class ServeService:
         self._wake.set()
 
     def stats(self) -> dict:
+        # stats_snapshot copies under the engine's stats lock: the loop
+        # thread mutates counters (and list cells) while HTTP handlers
+        # serialize, so an unlocked dict/list walk could see a partially
+        # updated structure mid-scrape
         eng = self.engine
-        out = {k: (list(v) if isinstance(v, list) else v)
-               for k, v in eng.stats.items()}
+        out = eng.stats_snapshot()
         out.update(round=eng._round, pending=self._pending_total(),
                    active=sum(r is not None for r in eng.active),
                    free_slots=eng._free_total(), slots=eng.slots,
                    draining=eng.drained, watermark=self.max_pending)
         return out
+
+    def events(self) -> list[dict]:
+        """The structured failure/eviction/preemption/straggler event
+        ring, snapshot under the stats lock (JSONL via /v1/events)."""
+        return self.engine.events_snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the engine's metric registry."""
+        return self.engine.tel.metrics.render()
+
+    def trace(self) -> dict:
+        """The Chrome-trace-event object collected so far."""
+        return self.engine.tel.tracer.export()
 
     # ------------------------------------------------------ engine observers
     # called ON the scheduler loop thread, inside the _apply_* paths

@@ -73,7 +73,8 @@ class ShardedServeEngine(ServeEngine):
                  chunked_prefill: bool = False, fault=None,
                  pdq_fallback: bool = False, paged: bool = False,
                  page_size: int = 64, pool_pages: int | None = None,
-                 prefix_sharing: bool = True, spill: bool = False):
+                 prefix_sharing: bool = True, spill: bool = False,
+                 telemetry: bool = True, trace: bool = False, tel=None):
         assert {"data", "model"} <= set(mesh.axis_names), mesh.axis_names
         assert not spill, (
             "host spill is single-device only: the capture/restore hooks "
@@ -88,26 +89,40 @@ class ShardedServeEngine(ServeEngine):
                          n_replicas=self.data_size, fault=fault,
                          pdq_fallback=pdq_fallback, paged=paged,
                          page_size=page_size, pool_pages=pool_pages,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing,
+                         telemetry=telemetry, trace=trace, tel=tel)
 
     # ------------------------------------------------------- device programs
-    def _sharded(self, fn, in_specs, out_specs):
+    def _sharded(self, fn, in_specs, out_specs, tel: bool = False):
         """shard_map(fn) over the mesh with TP (and, when enabled, the
-        per-shard PDQ->fp fallback guard) active inside the body."""
+        per-shard PDQ->fp fallback guard) active inside the body.
+
+        ``tel=True`` additionally opens the pdq telemetry collector INSIDE
+        the body (the TP/guard context is per-shard, so the collector must
+        be too) and psums the (3,) health summary over both mesh axes: the
+        launch returns ``(out, summary)`` with the summary replicated, so
+        the coordinator reads fleet totals off the same device sync as the
+        sampled tokens."""
         T = self.model_size
         guard = self.pdq_fallback
+        collect = bool(tel) and self.tel.enabled
 
         def body(*args):
-            with ops.tp_shard("model", T), ops.pdq_guard(guard):
-                return fn(*args)
+            with ops.tp_shard("model", T), ops.pdq_guard(guard), \
+                    ops.pdq_telemetry(collect) as col:
+                out = fn(*args)
+                if not tel:
+                    return out
+                return out, jax.lax.psum(col.summary(), ("data", "model"))
 
+        specs = (out_specs, P()) if tel else out_specs
         return shard_map(body, mesh=self.mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+                         out_specs=specs, check_vma=False)
 
     def _traced_sharded_jit(self, fn, counter: str, in_specs, out_specs,
-                            donate: tuple[int, ...] = ()):
+                            donate: tuple[int, ...] = (), tel: bool = False):
         stats = self.stats
-        mapped = self._sharded(fn, in_specs, out_specs)
+        mapped = self._sharded(fn, in_specs, out_specs, tel=tel)
 
         def wrapped(*args):
             if counter:
@@ -121,13 +136,13 @@ class ShardedServeEngine(ServeEngine):
         dp = P("data")                       # slot/batch axis over replicas
         self._decode = self._traced_sharded_jit(
             self.bundle.decode_step, "decode_compiles",
-            in_specs=(P(), cs, dp, dp), out_specs=(dp, cs))
+            in_specs=(P(), cs, dp, dp), out_specs=(dp, cs), tel=True)
         self._prefill_many = self._traced_sharded_jit(
             self.bundle.prefill_many, "prefill_compiles",
-            in_specs=(P(), dp, cs, dp), out_specs=(dp, cs))
+            in_specs=(P(), dp, cs, dp), out_specs=(dp, cs), tel=True)
         self._prefill_chunk = self._traced_sharded_jit(
             self.bundle.prefill_chunk, "chunk_compiles",
-            in_specs=(P(), dp, cs, dp, dp), out_specs=(dp, cs))
+            in_specs=(P(), dp, cs, dp, dp), out_specs=(dp, cs), tel=True)
         self._scatter = self._traced_sharded_jit(
             self.bundle.cache_scatter, None,
             in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
@@ -171,7 +186,7 @@ class ShardedServeEngine(ServeEngine):
         self._decode_paged = self._traced_sharded_jit(
             decode_paged, "decode_compiles",
             in_specs=(P(), cs, pts, dp, dp), out_specs=(dp, cs),
-            donate=(1,))
+            donate=(1,), tel=True)
         self._land = self._traced_sharded_jit(
             po.land, None, in_specs=(cs, cs, dp, dp, dp), out_specs=cs,
             donate=(0,))

@@ -46,6 +46,39 @@ class strategies:
     def integers(min_value, max_value, **_):
         return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_):
+        def draw(rng):
+            n = rng.randint(min_size, max_size if max_size is not None
+                            else min_size + 10)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def permutations(values):
+        vals = list(values)
+
+        def draw(rng):
+            out = list(vals)
+            rng.shuffle(out)
+            return out
+        return _Strategy(draw)
+
+    @staticmethod
+    def data():
+        return _Strategy(lambda rng: _InteractiveData(rng))
+
+
+class _InteractiveData:
+    """Shim for hypothesis's interactive ``data()`` object: draws from a
+    strategy mid-test with the same rng stream."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
 
 def settings(max_examples: int = 10, **_):
     """deadline/derandomize/etc. are accepted and ignored: the shim has no

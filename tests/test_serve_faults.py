@@ -51,7 +51,7 @@ from repro.kernels import ops
 from repro.models import build_model
 from repro.models.linops import quantize_weight
 from repro.serve import (CoordinatorAbort, MultiHostServeEngine,
-                         ProtocolError, Request, ServeEngine,
+                         ProtocolError, Request, ServeEngine, Telemetry,
                          resume_requests)
 from repro.serve.multihost import ABORT_DEADLINE, CMD_ABORT
 
@@ -287,9 +287,13 @@ def _bare_mh(n_processes=2, process_id=0):
     eng.n_processes = n_processes
     eng.process_id = process_id
     eng.is_coordinator = process_id == 0
-    eng._hdr = 4 + 2 * n_processes    # acks + per-process ingress counts
+    # acks + per-process ingress counts + per-process launch-timing slots
+    eng._hdr = 4 + 3 * n_processes
     eng._seq = 1
     eng._done_seq = 0
+    eng._last_exec_us = 0
+    eng._prev_kind = None
+    eng.tel = Telemetry(enabled=False)
     eng._stopped = False
     eng._ingress_lock = threading.Lock()
     eng._out_q = collections.deque()
@@ -380,6 +384,53 @@ def test_straggler_flag_surfaces_in_engine_stats(small_model):
     assert eng.failures.count("straggler") >= 1
     detail = [e for e in eng.failures.events if e["kind"] == "straggler"]
     assert "EMA" in detail[0]["detail"]
+
+
+def test_prefill_straggler_has_own_ema_and_event_kind(small_model):
+    """Prefill launches feed their OWN watchdog: an injected virtual delay
+    scoped to ``delay_kind='prefill'`` flags the prefill EMA (distinct
+    'straggler_prefill' event kind) and never touches the decode EMA's
+    flag count - the two streams have very different baselines, so one
+    shared EMA would either mask prefill stragglers or false-flag every
+    prefill after a decode-heavy stretch."""
+    cfg, m, params = small_model
+    # rounds 1-4 serve request 0's undelayed prefill + decode (warming the
+    # prefill EMA); every LATER prefill is virtually 300s slow
+    plan = FaultPlan(delay_rounds={r: 300.0 for r in range(5, 60)},
+                     delay_kind="prefill")
+    eng = ServeEngine(cfg, params, slots=1, max_len=64,
+                      fault=plan.injector())
+    assert eng.prefill_straggler is not eng.straggler   # independent EMAs
+    reqs = _reqs(cfg, [5, 6, 4], max_new=4)
+    eng.run(reqs)
+    assert all(r.done and r.error is None for r in reqs)
+    assert eng.stats["prefill_straggler_flags"] >= 1
+    assert eng.failures.count("straggler_prefill") >= 1
+    ev = [e for e in eng.failures.events if e["kind"] == "straggler_prefill"]
+    assert "prefill launch" in ev[0]["detail"] and "EMA" in ev[0]["detail"]
+    # the decode watchdog saw only real (undelayed) decode timings
+    decode_flagged = [e for e in eng.failures.events
+                      if e["kind"] == "straggler"]
+    assert not any("300" in e["detail"].split("s >")[0]
+                   for e in decode_flagged)
+
+
+def test_chunked_launches_feed_the_prefill_straggler(small_model):
+    """Chunked prefill launches ride the same prefill watchdog (they are
+    the prefill path, just split), with the 'chunked' kind named in the
+    flag detail."""
+    cfg, m, params = small_model
+    plan = FaultPlan(delay_rounds={r: 300.0 for r in range(3, 60)},
+                     delay_kind="chunked")
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, buckets=(8, 16),
+                      chunked_prefill=True, fault=plan.injector())
+    reqs = _reqs(cfg, [20, 24, 18], max_new=4)
+    eng.run(reqs)
+    assert all(r.done and r.error is None for r in reqs)
+    assert eng.stats["chunked_requests"] == 3
+    assert eng.stats["prefill_straggler_flags"] >= 1
+    ev = [e for e in eng.failures.events if e["kind"] == "straggler_prefill"]
+    assert ev and "chunked launch" in ev[0]["detail"]
 
 
 # ---------------------------------------------------------------------------

@@ -509,3 +509,91 @@ def test_multihost_ingress_extras_and_service_eviction():
     st = got["svc_stats"]
     assert st["cancelled"] == 1 and st["deadline_expired"] == 1
     assert st["free"] == st["slots"]
+
+
+# ----------------------------------------------- PR-9: fleet telemetry
+# The launcher's --trace-out on a 2-process fleet: the coordinator writes
+# ONE merged Chrome-trace JSON with a process row per jax process (worker
+# launch timings ride the command-header timing slots), and the registry
+# carries per-process fleet launch histograms.
+
+_TRACE_FLEET = """
+    import json
+    import sys
+
+    proc, port = int(sys.argv[1]), sys.argv[2]
+    trace_path, metrics_path = sys.argv[3], sys.argv[4]
+
+    import repro.launch.serve as launcher
+
+    # dump the coordinator's registry at exit time, alongside the normal
+    # report (the engine is launcher-internal; the wrap is the test's tap)
+    _report = launcher.report_telemetry
+    def report(eng, args):
+        _report(eng, args)
+        with open(metrics_path, "w") as f:
+            f.write(eng.tel.metrics.render())
+    launcher.report_telemetry = report
+
+    launcher.main(["--reduced", "--mesh", "4x2", "--num-processes", "2",
+                   "--process-id", str(proc),
+                   "--coordinator", f"127.0.0.1:{port}",
+                   "--requests", "6", "--max-new", "4", "--prompt-len", "12",
+                   "--buckets", "8,16", "--max-len", "64",
+                   "--trace-out", trace_path])
+    print("PROC", proc, "OK")
+"""
+
+
+def test_multihost_trace_out_merges_both_processes():
+    """--trace-out on a 2-process fleet: one Perfetto-loadable trace with
+    spans attributed to BOTH pids (worker launches reconstructed from the
+    header timing slots), fleet launch histograms labeled by process, and
+    the drain printout reporting latency percentiles."""
+    with tempfile.TemporaryDirectory() as td:
+        trace_path = os.path.join(td, "trace.json")
+        metrics_path = os.path.join(td, "metrics.prom")
+        procs, outs = _spawn_fleet(_TRACE_FLEET,
+                                   [trace_path, metrics_path],
+                                   n_procs=2, devices=4)
+        for p, (so, se) in zip(procs, outs):
+            assert p.returncode == 0, (so[-2000:], se[-3000:])
+        with open(trace_path) as f:
+            trace = json.load(f)
+        with open(metrics_path) as f:
+            metrics = f.read()
+
+    # the drain printout: histogram summaries + the trace-write notice
+    so0 = outs[0][0]
+    assert "ttft: n=6 p50=" in so0 and "p99=" in so0
+    assert "per-token: n=" in so0
+    assert "queue wait: n=6" in so0
+    assert f"spans -> {trace_path}" in so0
+
+    # Chrome-trace schema: X spans from both pids, M rows naming both
+    # process tracks, every span numerically timestamped
+    evs = trace["traceEvents"]
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert {e["pid"] for e in spans} == {0, 1}
+    for e in spans:
+        assert isinstance(e["ts"], (int, float))
+        assert isinstance(e["dur"], (int, float)) and e["dur"] >= 0
+    named = {e["pid"]: e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert "coordinator" in named[0] and named[1] == "jax process 1"
+    names0 = {e["name"] for e in spans if e["pid"] == 0}
+    assert {"plan:prefill", "launch:prefill", "plan:decode",
+            "launch:decode"} <= names0
+    # worker spans: reconstructed launches only, kind-attributed, tagged
+    # with the source process
+    worker = [e for e in spans if e["pid"] == 1]
+    assert worker and all(e["name"].startswith("launch:") for e in worker)
+    assert all(e["args"]["process"] == 1 for e in worker)
+    assert trace["otherData"]["dropped_spans"] == 0
+
+    # fleet aggregation: the registry carries per-process launch
+    # histograms fed from the header timing slots
+    assert 'serve_launch_seconds_bucket{kind="decode"' in metrics
+    assert ('serve_launch_seconds_count{kind="decode",process="1"}'
+            in metrics)
+    assert "serve_ttft_seconds_count 6" in metrics
