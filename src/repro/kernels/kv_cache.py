@@ -102,6 +102,129 @@ def decode_attend_i8kv_p(
     )(length, q, k_q, v_q, k_scale, v_scale)
 
 
+def _fused_kernel(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, oq_ref, sx_ref, s1_ref, s2_ref,
+                  m_ref, l_ref, acc_ref, oall_ref, *,
+                  n_hkv: int, n_s: int, bs: int, scale: float, G: int):
+    h = pl.program_id(0)
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    offs = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = offs < length                                        # (1, bs)
+
+    qb = q_ref[0]                                               # (G, Dh)
+    kf = k_ref[0].astype(jnp.float32) * ks_ref[...].reshape(bs, 1)   # (bs, Dh)
+    vf = v_ref[0].astype(jnp.float32) * vs_ref[...].reshape(bs, 1)
+
+    logits = jnp.dot(qb, kf.T, preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_prev = m_ref[...]                                         # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new) * mask.astype(jnp.float32)      # (G, bs)
+    corr = jnp.exp(m_prev - m_new)                              # (G, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, vf, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finish():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)       # (G, Dh)
+        o_ref[0] = o.astype(o_ref.dtype)
+        # stage this head's normalized rows for the output-stage prologue
+        oall_ref[pl.ds(h * G, G), :] = o
+
+    @pl.when((s == n_s - 1) & (h == n_hkv - 1))
+    def _prologue():
+        # output stage: the wo projection's PDQ prologue over the FULL
+        # flattened (H * Dh) attention output of this batch row, emitted
+        # from the same launch - no separate pdq_prologue pass runs before
+        # the wo matmul (see ops.decode_attend_i8kv / DESIGN.md "Decode
+        # fast path").  Semantics match ref.pdq_prologue_ref on the
+        # flattened row exactly.
+        oa = oall_ref[...]                                      # (H, Dh) f32
+        amax = jnp.maximum(jnp.max(jnp.abs(oa)), 1e-8)
+        sx = amax / 127.0
+        sx_ref[0, 0] = sx
+        s1_ref[0, 0] = jnp.sum(oa)
+        s2_ref[0, 0] = jnp.sum(oa * oa)
+        oq_ref[...] = jnp.clip(jnp.round(oa / sx), -127.0, 127.0).astype(jnp.int8)
+
+
+def decode_attend_i8kv_fused_p(
+    q: jax.Array,        # (Hkv, G, Dh) f32
+    k_q: jax.Array,      # (Hkv, S, Dh) int8
+    v_q: jax.Array,      # (Hkv, S, Dh) int8
+    k_scale: jax.Array,  # (Hkv, S) f32
+    v_scale: jax.Array,  # (Hkv, S) f32
+    length: jax.Array,   # (1, 1) int32
+    *,
+    bs: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """``decode_attend_i8kv_p`` plus the wo projection's fused PDQ prologue
+    in the output stage.
+
+    Returns (o (Hkv, G, Dh) f32, o_q (H, Dh) int8, s_x, s1, s2 each (1, 1)
+    f32) where (o_q, s_x, s1, s2) are ``pdq_prologue_ref`` of the flattened
+    (H * Dh,) output row: everything the downstream W8A8 wo matmul needs,
+    with zero extra launches.  The fp ``o`` is still emitted (it is live in
+    VMEM anyway) for the guarded-fallback path and fp consumers.
+    """
+    Hkv, G, Dh = q.shape
+    H = Hkv * G
+    S = k_q.shape[1]
+    bs = min(bs, S)
+    assert S % bs == 0, (
+        f"decode_attend_i8kv_fused_p requires block-multiple shapes: S ({S}) "
+        f"must be a multiple of bs ({bs}); pad the cache or call "
+        f"repro.kernels.ops.decode_attend_i8kv, which pads for you")
+    n_s = S // bs
+    grid = (Hkv, n_s)
+    kern = functools.partial(_fused_kernel, n_hkv=Hkv, n_s=n_s, bs=bs,
+                             scale=1.0 / (Dh ** 0.5), G=G)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, s: (0, 0)),          # length
+            pl.BlockSpec((1, G, Dh), lambda h, s: (h, 0, 0)),   # q
+            pl.BlockSpec((1, bs, Dh), lambda h, s: (h, s, 0)),  # k
+            pl.BlockSpec((1, bs, Dh), lambda h, s: (h, s, 0)),  # v
+            pl.BlockSpec((1, bs), lambda h, s: (h, s)),         # k_scale
+            pl.BlockSpec((1, bs), lambda h, s: (h, s)),         # v_scale
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, Dh), lambda h, s: (h, 0, 0)),   # o
+            pl.BlockSpec((H, Dh), lambda h, s: (0, 0)),         # o_q
+            pl.BlockSpec((1, 1), lambda h, s: (0, 0)),          # s_x
+            pl.BlockSpec((1, 1), lambda h, s: (0, 0)),          # s1
+            pl.BlockSpec((1, 1), lambda h, s: (0, 0)),          # s2
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Hkv, G, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((H, Dh), jnp.int8),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((H, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k_q, v_q, k_scale, v_scale)
+
+
 # ---------------------------------------------------------------------------
 # Pooled-cache slot scatter (bucketed batched prefill)
 # ---------------------------------------------------------------------------

@@ -20,10 +20,10 @@ import numpy as np
 from . import ref
 from .act_stats import act_stats_p
 from .kv_cache import (cache_scatter_p, cache_scatter_pages_p,
-                       decode_attend_i8kv_p)
+                       decode_attend_i8kv_fused_p, decode_attend_i8kv_p)
 from .pdq_prologue import pdq_prologue_p
 from .quantize import dequantize_p, quantize_p
-from .w8a8_matmul import w8a8_matmul_p
+from .w8a8_matmul import w8a8_matmul_p, w8a8_swiglu_matmul_p
 
 _IMPL = "auto"
 
@@ -417,6 +417,25 @@ def pdq_dense(x, wrec, *, out="fp", out_dtype=None, block=(128, 128, 128),
                           colsum=wrec["colsum"], block=block)
         _tel_clip_q(y_q)
         return y_q, s_out, z_out.astype(jnp.int32)
+    return pdq_dense_from_prologue(x, x_q, s_x, s1, s2, wrec,
+                                   out_dtype=out_dtype, block=block)
+
+
+def pdq_dense_from_prologue(x, x_q, s_x, s1, s2, wrec, *, out_dtype=None,
+                            block=(128, 128, 128)):
+    """``pdq_dense(out='fp')`` with the prologue already computed upstream.
+
+    The serving decode path fuses the wo projection's prologue into the
+    flash-decode attend kernel's output stage (``decode_attend_i8kv`` with
+    ``wo_prologue=True``); this entry consumes those (x_q, s_x, s1, s2)
+    directly, so the projection costs ONE pallas_call instead of two.  The
+    fp ``x`` is still required: the guarded fallback and the TP fallback
+    precision recompute from it.  Numerics are identical to ``pdq_dense``
+    by construction (it is the same tail).
+    """
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    lo, hi, s_out, z_out = pdq_interval(wrec, s1, s2)
     # clamp to the representable extent of the int8 grid rather than the raw
     # interval, so fp-out matches requant->dequant at the clip boundaries.
     lo_g = (-128.0 - z_out) * s_out
@@ -525,6 +544,89 @@ def pdq_dense_grouped(x, grec, *, out="fp", out_dtype=None,
     return tuple(y[..., o:o + n] for o, n in bounds)
 
 
+def pdq_mlp(x, grec, down_rec, *, out_dtype=None, block=(128, 128, 128),
+            prologue_block=(128, 512)):
+    """Fused quantized SwiGLU MLP: gate/up grouped matmul -> silu(g)*u ->
+    w_down, in THREE pallas_calls instead of four.
+
+    The saving comes from ``w8a8_swiglu_matmul_p``: the grouped gate/up
+    matmul's epilogue stages the full clamped output row in VMEM, computes
+    the SwiGLU pairing in-register, and emits the w_down projection's PDQ
+    prologue (hsw_q, s_x, s1, s2) alongside - so no standalone
+    ``pdq_prologue_p`` launch runs between the two matmuls (DESIGN.md
+    "Decode fast path").
+
+    Falls back to the exact unfused composition (``pdq_dense_grouped`` +
+    jnp silu + ``pdq_dense``) whenever the fused epilogue cannot apply:
+    ref/auto-off-TPU mode (bit-identical numerics preserved), tensor
+    parallelism (each shard owns an N-slice of BOTH segments but the
+    prologue needs the full hsw row), an active ``pdq_guard`` (the
+    fallback branch needs the guarded gate/up output), or a group layout
+    that is not two equal lane-padded segments.
+    """
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    segs = grec["segs"]
+    bm, bn, bk = block
+    fused = (_use_kernel() and not _PDQ_GUARD and _TP is None
+             and len(segs.sizes) == 2 and segs.padded[0] == segs.padded[1]
+             and segs.padded[0] % bn == 0)
+    if not fused:
+        g, u = pdq_dense_grouped(x, grec, out="fp", out_dtype=out_dtype,
+                                 block=block, prologue_block=prologue_block)
+        h = jax.nn.silu(g) * u
+        return pdq_dense(h, down_rec, out="fp", out_dtype=out_dtype,
+                         block=block, prologue_block=prologue_block)
+
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    Nt = segs.total
+    reps = np.array([p // bn for p in segs.padded])
+    nb = int(reps.sum())
+
+    x_q, s_x, s1, s2 = pdq_prologue(x, block=prologue_block)
+    lo, hi, s_out, z_out = pdq_interval(grec, s1, s2)           # (..., 2)
+    lo_g = (-128.0 - z_out) * s_out
+    hi_g = (127.0 - z_out) * s_out
+
+    def blockwise(a):
+        return jnp.repeat(a, reps, axis=-1, total_repeat_length=nb)
+
+    # the staging scratch holds a full (bm, Nt) f32 row block: shrink bm
+    # for wide MLPs so it stays well under VMEM
+    while bm > 8 and bm * Nt * 4 > 8 * 1024 * 1024:
+        bm //= 2
+    pads = dict(axis=0, mult=bm)
+    lo_b = blockwise(lo_g).reshape(M, nb)
+    hi_b = blockwise(hi_g).reshape(M, nb)
+    y, _hsw, hsw_q, sxo, s1o, s2o = w8a8_swiglu_matmul_p(
+        _pad_to(_pad_to(x_q.reshape(M, K), 0, bm), 1, bk),
+        _pad_to(grec["q"], 0, bk),
+        _pad_to(_norm_row(s_x, M, jnp.float32), **pads, value=1.0),
+        _pad_to(_norm_row(0, M, jnp.int32), **pads),
+        grec["scale"].reshape(1, Nt), grec["colsum"].reshape(1, Nt),
+        _pad_to(lo_b, **pads), _pad_to(hi_b, **pads),
+        block=(bm, bn, bk), interpret=_interpret(), out_dtype=jnp.float32)
+    _tel_clip(y[:M], jnp.repeat(lo_b, bn, axis=-1),
+              jnp.repeat(hi_b, bn, axis=-1))
+
+    dff, N2 = down_rec["q"].shape
+    hq = hsw_q[:M, :dff].reshape(*lead, dff)
+    sxo = sxo[:M].reshape(*lead, 1)
+    lo2, hi2, so2, zo2 = pdq_interval(down_rec, s1o[:M].reshape(*lead, 1),
+                                      s2o[:M].reshape(*lead, 1))
+    lo_g2 = (-128.0 - zo2) * so2
+    hi_g2 = (127.0 - zo2) * so2
+    y2 = w8a8_matmul(hq, down_rec["q"], sxo, 0, down_rec["scale"],
+                     colsum=down_rec["colsum"], fp_range=(lo_g2, hi_g2),
+                     out_dtype=out_dtype, block=block)
+    _tel_clip(y2, lo_g2, hi_g2)
+    return y2
+
+
 def pdq_dense_unfused(x, wrec):
     """The pre-fusion serving path, kept as the oracle/baseline: 3 reads of
     x (amax / quantize / act_stats) + requant matmul + jnp dequant.
@@ -612,12 +714,23 @@ def dequantize(q, scale, zero_point, *, per_channel: bool = False, out_dtype=jnp
     return y[:M, :N].reshape(*lead, N).astype(out_dtype)
 
 
-def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256):
+def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256,
+                       wo_prologue: bool = False, pro_dtype=None):
     """Batched flash-decode over an int8 KV cache in KERNEL layout.
 
     q: (B, H, Dh) f32; k_q/v_q: (B, Hkv, S, Dh) int8;
     k_scale/v_scale: (B, Hkv, S) f32; length: (B,) int32.
     Returns (B, H, Dh) f32.
+
+    ``wo_prologue=True`` additionally runs the wo projection's PDQ prologue
+    over the flattened (H * Dh,) output row inside the attend kernel's
+    output stage and returns (o (B, H, Dh) f32, o_q (B, H*Dh) int8,
+    s_x, s1, s2 each (B, 1) f32) - feed them to
+    ``pdq_dense_from_prologue`` and the quantized wo projection costs one
+    launch instead of two.  ``pro_dtype`` (default f32) is the compute
+    dtype the unfused path would have cast o to before its prologue; the
+    ref path reproduces that cast so numerics stay bit-identical to the
+    unfused composition.
 
     The cache is head-major so the per-step decode path does no layout
     work: ``models.attention.init_cache`` allocates it this way (S rounded
@@ -636,7 +749,12 @@ def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256):
         v_l = jnp.transpose(v_q, (0, 2, 1, 3))
         ks_l = jnp.transpose(k_scale, (0, 2, 1))
         vs_l = jnp.transpose(v_scale, (0, 2, 1))
-        return jax.vmap(ref.decode_attend_i8kv_ref)(q, k_l, v_l, ks_l, vs_l, length)
+        o = jax.vmap(ref.decode_attend_i8kv_ref)(q, k_l, v_l, ks_l, vs_l, length)
+        if not wo_prologue:
+            return o
+        of = o.astype(pro_dtype) if pro_dtype is not None else o
+        o_q, s_x, s1, s2 = ref.pdq_prologue_ref(of.reshape(B, H * Dh))
+        return o, o_q, s_x, s1, s2
 
     # prefer a scan block that divides S (true whenever the cache came from
     # init_cache, which rounds S to a 128 multiple) over padding per call
@@ -647,6 +765,17 @@ def decode_attend_i8kv(q, k_q, v_q, k_scale, v_scale, length, *, bs: int = 256):
     v_q = _pad_to(v_q, 2, bss)
     k_scale = _pad_to(k_scale, 2, bss, value=1.0)
     v_scale = _pad_to(v_scale, 2, bss, value=1.0)
+
+    if wo_prologue:
+        def one_fused(q1, k1, v1, ks1, vs1, len1):
+            o, oq, sx, s1, s2 = decode_attend_i8kv_fused_p(
+                q1.reshape(Hkv, G, Dh), k1, v1, ks1, vs1,
+                len1.reshape(1, 1).astype(jnp.int32),
+                bs=bss, interpret=_interpret())
+            return (o.reshape(H, Dh), oq.reshape(H * Dh),
+                    sx.reshape(1), s1.reshape(1), s2.reshape(1))
+
+        return jax.vmap(one_fused)(q, k_q, v_q, k_scale, v_scale, length)
 
     def one(q1, k1, v1, ks1, vs1, len1):
         o = decode_attend_i8kv_p(q1.reshape(Hkv, G, Dh), k1, v1, ks1, vs1,

@@ -142,3 +142,136 @@ def w8a8_matmul_p(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_q, w_q, s_x, z_x, s_w, colsum, s_out, z_out, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU + next-prologue epilogue (the serving MLP's fused fast path)
+# ---------------------------------------------------------------------------
+
+
+def _swiglu_kernel(x_ref, w_ref, sx_ref, zx_ref, sw_ref, colsum_ref,
+                   lo_ref, hi_ref,
+                   o_ref, hsw_ref, hswq_ref, osx_ref, os1_ref, os2_ref,
+                   acc_ref, stage_ref, *, n_j: int, n_k: int, bn: int, P: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...] - zx_ref[...] * colsum_ref[...]          # (bm, bn)
+        y = acc.astype(jnp.float32) * (sx_ref[...] * sw_ref[...])
+        y = jnp.clip(y, lo_ref[...], hi_ref[...])
+        o_ref[...] = y.astype(o_ref.dtype)
+        # stage the clamped fp row block: the grid is row-major (j then k
+        # fastest within one i), so by (j == n_j-1, k == n_k-1) the whole
+        # (bm, N) output row lives in scratch and the SwiGLU pairing +
+        # next-layer prologue can run without a second launch.
+        pl.store(stage_ref, (slice(None), pl.ds(j * bn, bn)), y)
+
+    @pl.when((k == n_k - 1) & (j == n_j - 1))
+    def _swiglu_prologue():
+        g = stage_ref[:, :P]                                        # gate
+        u = stage_ref[:, P:]                                        # up
+        hsw = jax.nn.silu(g) * u                                    # (bm, P)
+        hsw_ref[...] = hsw
+        # PDQ prologue of the w_down projection (ref.pdq_prologue_ref
+        # semantics on the (bm, P) rows): lane-padding columns of both
+        # segments are exactly 0 (zero weights, interval widened to
+        # contain 0), so reducing over the padded extent equals reducing
+        # over the real d_ff columns.
+        amax = jnp.maximum(jnp.max(jnp.abs(hsw), axis=-1, keepdims=True), 1e-8)
+        sx = amax / 127.0
+        osx_ref[...] = sx
+        os1_ref[...] = jnp.sum(hsw, axis=-1, keepdims=True)
+        os2_ref[...] = jnp.sum(hsw * hsw, axis=-1, keepdims=True)
+        hswq_ref[...] = jnp.clip(jnp.round(hsw / sx), -127.0, 127.0).astype(jnp.int8)
+
+
+def w8a8_swiglu_matmul_p(
+    x_q: jax.Array,       # (M, K) int8
+    w_q: jax.Array,       # (K, N) int8: [gate | up], each P = N/2 columns
+    s_x: jax.Array,       # (M, 1) f32
+    z_x: jax.Array,       # (M, 1) i32
+    s_w: jax.Array,       # (1, N) f32
+    colsum: jax.Array,    # (1, N) i32
+    lo: jax.Array,        # (M, N/bn) f32 per-(row, N-block) PDQ interval
+    hi: jax.Array,        # (M, N/bn) f32
+    *,
+    block: tuple[int, int, int] = (128, 128, 128),
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> tuple[jax.Array, ...]:
+    """Grouped gate/up W8A8 matmul whose epilogue ALSO computes the SwiGLU
+    pairing silu(gate) * up and the next (w_down) projection's PDQ prologue.
+
+    The epilogue stages each clamped (bm, bn) output block in a (bm, N)
+    VMEM scratch; at the last (j, k) grid step of a row block the full row
+    is resident, so the elementwise pairing and the one-pass prologue
+    reduction run in-register - the quantized serving MLP then needs no
+    standalone ``pdq_prologue_p`` launch between its two matmuls.
+
+    Requires the two segments to occupy equal column extents P = N/2
+    (gate columns [0, P), up columns [P, N) - the ``group_quantize_weights``
+    layout for (w_gate, w_up)).  Returns
+    (y (M, N) ``out_dtype``, hsw (M, P) f32, hsw_q (M, P) int8,
+     s_x, s1, s2 each (M, 1) f32) with hsw = silu(y[:, :P]) * y[:, P:]
+    and (hsw_q, s_x, s1, s2) = pdq_prologue(hsw).
+    """
+    M, K = x_q.shape
+    _, N = w_q.shape
+    bm, bn, bk = block
+    assert N % 2 == 0, N
+    P = N // 2
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0 and P % bn == 0, (
+        f"w8a8_swiglu_matmul_p requires block-multiple shapes: got x_q "
+        f"({M}, {K}), w_q ({K}, {N}) with block ({bm}, {bn}, {bk}); pad the "
+        f"inputs or call repro.kernels.ops.pdq_mlp, which pads for you")
+    nb = N // bn
+    assert lo.shape == (M, nb) and hi.shape == (M, nb), (lo.shape, hi.shape)
+    n_k = K // bk
+    grid = (M // bm, nb, n_k)
+    epi_idx = lambda i, j, k: (i, j)                                # noqa: E731
+    kern = functools.partial(_swiglu_kernel, n_j=nb, n_k=n_k, bn=bn, P=P)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s_x
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # z_x
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # s_w
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # colsum
+            pl.BlockSpec((bm, 1), epi_idx),                   # lo
+            pl.BlockSpec((bm, 1), epi_idx),                   # hi
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),   # y
+            pl.BlockSpec((bm, P), lambda i, j, k: (i, 0)),    # hsw
+            pl.BlockSpec((bm, P), lambda i, j, k: (i, 0)),    # hsw_q
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s_x out
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s1
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # s2
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), out_dtype),
+            jax.ShapeDtypeStruct((M, P), jnp.float32),
+            jax.ShapeDtypeStruct((M, P), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32),
+                        pltpu.VMEM((bm, N), jnp.float32)],
+        interpret=interpret,
+    )(x_q, w_q, s_x, z_x, s_w, colsum, lo, hi)

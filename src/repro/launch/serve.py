@@ -58,6 +58,9 @@ def build_args(argv=None):
     ap.add_argument("--int8", action="store_true", help="PDQ int8 weights")
     ap.add_argument("--int8-kv", action="store_true", help="int8 KV cache")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="decode tokens fused per host dispatch (the N-step "
+                         "decode fast path; 1 = classic per-token launches)")
     ap.add_argument("--prompt-len", type=int, default=8,
                     help="max prompt length (lengths are drawn in [1, this])")
     ap.add_argument("--buckets", default="32,64,128,256",
@@ -356,6 +359,7 @@ def main(argv=None):
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         batch_prefill=not args.legacy_prefill,
         chunked_prefill=args.chunked_prefill,
+        decode_steps=args.decode_steps,
         pdq_fallback=args.pdq_fallback, mesh=mesh,
         slots_per_replica=args.slots_per_replica or args.slots,
         multihost=multiproc, launch_timeout=args.launch_timeout,

@@ -347,21 +347,43 @@ def build_model(cfg: ArchConfig) -> ModelBundle:
                                                  batch_axis=ba)
             return tmap(one, pool, base1)
 
-        def writeback(pool, logical, pt, positions):
-            """Scatter each live row's decode-written page (the one holding
-            ``positions[b]``) back into the pool.  Free slots (-1 table
-            entries) land on the write-only DUMP page 0."""
+        def writeback(pool, logical, pt, positions, n_steps=None,
+                      max_steps: int = 1):
+            """Scatter each live row's decode-written pages back into the
+            pool: the pages holding positions ``positions[b]`` through
+            ``positions[b] + n_steps[b] - 1`` (the N-step block a fused
+            decode dispatch wrote; ``n_steps=None`` is the single-step
+            case).  ``max_steps`` is the STATIC block bound, fixing the
+            per-row window at ``W = (max_steps + page - 2) // page + 1``
+            candidate pages (W == 1 reduces exactly to the old single-page
+            map).  Whole pages are written, so a recycled page comes back
+            fully cleaned (init fill beyond the last written token - the
+            gather laundered it).  Free slots (-1 table entries) and
+            beyond-window candidates land on the write-only DUMP page 0,
+            where colliding writes are harmless: page 0 is never read."""
             B = pt.shape[0]
-            jb = jnp.clip(positions[:, 0] // page, 0, pt.shape[1] - 1)
-            ent = pt[jnp.arange(B), jb]
-            tgt = jnp.where(ent > 0, ent, 0)
+            p0 = positions[:, 0]
+            j0 = jnp.clip(p0 // page, 0, pt.shape[1] - 1)
+            if n_steps is None:
+                j1 = j0
+            else:
+                last = p0 + jnp.maximum(n_steps, 1) - 1
+                j1 = jnp.clip(last // page, 0, pt.shape[1] - 1)
+            W = (int(max_steps) + page - 2) // page + 1
 
             def one(m, pool_leaf, lg, *, ba):
                 if m.kind == "flat":
                     return lg                  # flat state IS the new rows
                 N = pool_leaf.shape[ba]
                 wmap = jnp.full((N,), -1, jnp.int32)
-                wmap = wmap.at[tgt].set(jnp.arange(B) * m.n_leaf + jb)
+                for w in range(W):
+                    jb = jnp.minimum(j0 + w, pt.shape[1] - 1)
+                    valid = (j0 + w) <= j1
+                    ent = pt[jnp.arange(B), jb]
+                    tgt = jnp.where(valid & (ent > 0), ent, 0)
+                    val = jnp.where(valid,
+                                    jnp.arange(B) * m.n_leaf + jb, -1)
+                    wmap = wmap.at[tgt].set(val)
                 lp = kernel_ops.to_page_rows(lg, m.seq_axis, page,
                                              batch_axis=ba)
                 return kernel_ops.cache_scatter_pages(pool_leaf, lp, wmap,

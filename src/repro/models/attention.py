@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from .layers import apply_rope, dense_init, rms_norm, softcap
-from .linops import lin, lin_grouped
+from .linops import is_quantized, is_segment_view, lin, lin_grouped
 
 NEG = -2.0e30
 
@@ -373,6 +373,20 @@ def gqa_apply(
     cache = _cache_write(cache, k, v, positions, dims.quant_kv)
     q1 = q[:, 0]                                            # (B, H, Dh)
     if ("k_scale" in cache and dims.attn_softcap is None and dims.window is None):
+        if is_quantized(p["wo"]) and not is_segment_view(p["wo"]):
+            # fused path: the attend kernel's output stage also runs the wo
+            # projection's PDQ prologue over the flattened row, so the
+            # quantized wo costs one W8A8 launch instead of prologue+matmul
+            o, o_q, s_x, s1, s2 = ops.decode_attend_i8kv(
+                q1.astype(jnp.float32), cache["k"], cache["v"],
+                cache["k_scale"], cache["v_scale"], cache["len"],
+                wo_prologue=True, pro_dtype=x.dtype)
+            y = ops.pdq_dense_from_prologue(
+                o.reshape(B, 1, H * Dh).astype(x.dtype),
+                o_q.reshape(B, 1, H * Dh),
+                s_x.reshape(B, 1, 1), s1.reshape(B, 1, 1), s2.reshape(B, 1, 1),
+                p["wo"], out_dtype=x.dtype)
+            return y, cache
         # int8-KV flash-decode kernel path (falls back to ref off-TPU)
         o = ops.decode_attend_i8kv(
             q1.astype(jnp.float32), cache["k"], cache["v"],

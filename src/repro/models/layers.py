@@ -8,7 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .linops import lin, lin_grouped
+from repro.kernels import ops
+from .linops import _common_group, is_quantized, is_segment_view, lin, lin_grouped
 
 
 def uniform_init(key, shape, scale, dtype):
@@ -79,7 +80,13 @@ def mlp_init(key, d_model, d_ff, dtype):
 
 def mlp_apply(p, x):
     # gate/up consume the same normed input: quantized params run ONE
-    # prologue + ONE wide W8A8 matmul for the pair (linops.lin_grouped)
+    # prologue + ONE wide W8A8 matmul for the pair, and when w_down is
+    # quantized too the gate/up matmul's epilogue also computes
+    # silu(g) * u and w_down's PDQ prologue in-kernel (ops.pdq_mlp)
+    grec = _common_group((p["w_gate"], p["w_up"]))
+    if (grec is not None and is_quantized(p["w_down"])
+            and not is_segment_view(p["w_down"])):
+        return ops.pdq_mlp(x, grec, p["w_down"], out_dtype=x.dtype)
     g, u = lin_grouped(x, (p["w_gate"], p["w_up"]))
     return lin(jax.nn.silu(g) * u, p["w_down"])
 

@@ -46,6 +46,7 @@ class ServeConfig:
     buckets: tuple[int, ...] = DEFAULT_BUCKETS
     batch_prefill: bool = True
     chunked_prefill: bool = False
+    decode_steps: int = 1           # decode tokens fused per host dispatch
     fault: Any = None               # FaultInjector (tests only)
     pdq_fallback: bool = False
 
@@ -115,6 +116,7 @@ def build_engine(config: ServeConfig, *, cfg=None, params=None):
                   temperature=config.temperature, rng=rng,
                   buckets=config.buckets,
                   chunked_prefill=config.chunked_prefill,
+                  decode_steps=config.decode_steps,
                   fault=config.fault, pdq_fallback=config.pdq_fallback,
                   paged=config.paged, page_size=config.page_size,
                   pool_pages=config.pool_pages,

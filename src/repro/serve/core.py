@@ -141,6 +141,10 @@ class DecodePlan:
     # paged pool: per-slot page-table rows with replica-LOCAL page ids
     # (-1 beyond each row's allocation; free slots all -1)
     page_tables: np.ndarray = None   # (slots, n_pp) int32
+    # multi-step decode: tokens each row consumes from this dispatch's
+    # on-device block (min of the engine's decode_steps, the row's
+    # remaining max_new budget, and its cache headroom; 0 = free slot)
+    n_steps: np.ndarray = None       # (slots,) int32
 
 
 class SchedulerCore:
@@ -161,9 +165,11 @@ class SchedulerCore:
     def _init_scheduler(self, *, slots: int, n_replicas: int, max_len: int,
                         patch_tokens: int, buckets: tuple[int, ...],
                         batch_prefill: bool, chunked_prefill: bool,
+                        decode_steps: int = 1,
                         fault: FaultInjector | None = None,
                         tel: tmod.Telemetry | None = None) -> None:
         assert slots % n_replicas == 0, (slots, n_replicas)
+        assert decode_steps >= 1, decode_steps
         assert batch_prefill or n_replicas == 1, (
             "the legacy per-request prefill baseline is single-replica only")
         assert batch_prefill or not chunked_prefill, (
@@ -172,6 +178,13 @@ class SchedulerCore:
         self.n_replicas = n_replicas
         self.slots_per_replica = slots // n_replicas
         self.max_len = max_len
+        # decode block size N: every decode dispatch runs N model steps
+        # on-device (lax.scan) and backhauls an (slots, N) token block, so
+        # host round-trips per token drop to 1/N.  Admission, deadline
+        # sweeps, cancellation and stream flushes quantize to dispatch
+        # boundaries; per-(uid, step) sampling keys keep N>1 output
+        # token-for-token equal to N=1
+        self.decode_steps = int(decode_steps)
         self.patch_tokens = patch_tokens
         self.batch_prefill = batch_prefill
         self.chunked_prefill = chunked_prefill
@@ -740,11 +753,13 @@ class SchedulerCore:
         return land_rows, land_js
 
     def _register_prefix(self, plan, slot: int, req: Request) -> None:
-        """Publish the landed prompt's full pages for COW sharing.  Runs
-        after the ok check (poisoned rows never publish) and before
-        ``_activate`` - if activation completes the request immediately
-        (max_new == 1) the release fires ``on_free`` and the entry drops
-        again, so the store never outlives the pages."""
+        """Publish the landed prompt's full pages for COW sharing.  Since
+        ``_claim_pages`` registers eagerly (intra-round sharing) this is
+        normally a first-writer-wins no-op; it remains as the apply-time
+        backstop so a prompt claimed with sharing disabled for the round
+        (``plan.share_ok`` echoes the flush-time gate) never publishes,
+        and because release fires ``on_free`` the store never outlives
+        the pages either way."""
         if not (self.paged and plan.share_ok):
             return
         ri = slot // self.slots_per_replica
@@ -756,10 +771,24 @@ class SchedulerCore:
         time: longest registered prefix is aliased read-only (refcounted),
         the rest allocated fresh.  On PageError nothing is held (alloc is
         side-effect free + release drops the shared refs) and the caller
-        defers the request instead of admitting it."""
+        defers the request instead of admitting it.
+
+        A successful claim registers its own full pages IMMEDIATELY
+        (first-writer-wins, so apply-time re-registration is a no-op):
+        duplicates admitted in the SAME round - even the same launch -
+        share pages instead of landing fresh copies.  Same-launch sharing
+        is sound because the first writer's land maps cover the shared
+        pages within that launch (``_land_maps`` skips only the SHARER's
+        ``j < k`` entries), and an early entry never outlives its pages:
+        if the claimer's launch aborts or its row is evicted, releasing
+        the pages fires ``on_free`` and the store forgets them - unless a
+        sharer still holds a reference, in which case the landed content
+        (identical for identical prompts) is exactly what the sharer
+        needs."""
         pool = self.page_pools[ri]
         need = pages_for(len(req.prompt) + self.patch_tokens, self.page_size)
-        k, shared = ((0, []) if not self.prefix_sharing or extras
+        share = self.prefix_sharing and not extras
+        k, shared = ((0, []) if not share
                      else self.prefix_stores[ri].lookup(np.asarray(req.prompt)))
         pool.attach(req.uid)
         pool.share(req.uid, shared)
@@ -770,6 +799,9 @@ class SchedulerCore:
             return False
         if k:
             self._shared_k[req.uid] = k
+        if share:
+            self.prefix_stores[ri].register(np.asarray(req.prompt),
+                                            pool.pages(req.uid))
         return True
 
     def _claim_per(self, per: list[list[Request]], extras):
@@ -1044,15 +1076,39 @@ class SchedulerCore:
         return admitted
 
     # ---------------------------------------------------------------- decode
+    def _decode_budget(self, slot: int) -> int:
+        """Tokens this live slot consumes from the next decode dispatch:
+        the engine block size capped by the row's remaining ``max_new``
+        budget and its cache headroom (the last writable position is
+        ``max_len - 2``; the completion check below fires at
+        ``max_len - 1``).  Always >= 1 for an active slot."""
+        r = self.active[slot]
+        return max(1, min(self.decode_steps,
+                          r.max_new - len(r.generated),
+                          self.max_len - 1 - int(self.lengths[slot])))
+
+    def _poison_ok(self, kind: str, plan, ok: np.ndarray) -> np.ndarray:
+        """Host-side arm of fault injection: flip the ok flag of every
+        batch row the injector poisons this round (whole row: the request
+        is evicted at the dispatch boundary, exactly like a device-side
+        non-finite row)."""
+        rows = self.fault.poison_rows(kind, plan)
+        if rows:
+            ok = np.array(ok, copy=True)
+            ok[np.asarray(rows, np.int64)] = False
+        return ok
+
     def _plan_decode(self) -> DecodePlan | None:
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return None
         row_uids = np.full((self.slots,), -1, np.int32)
         row_steps = np.full((self.slots,), -1, np.int32)
+        n_steps = np.zeros((self.slots,), np.int32)
         for i in live:
             row_uids[i] = self.active[i].uid
             row_steps[i] = len(self.active[i].generated)
+            n_steps[i] = self._decode_budget(i)
         page_tables = None
         if self.paged:
             spr = self.slots_per_replica
@@ -1065,44 +1121,63 @@ class SchedulerCore:
                           tokens=self.last_tokens[:, None].astype(np.int32),
                           positions=self.lengths[:, None].astype(np.int32),
                           row_uids=row_uids, row_steps=row_steps,
-                          page_tables=page_tables)
+                          page_tables=page_tables, n_steps=n_steps)
 
     def _apply_decode(self, plan: DecodePlan, res) -> None:
+        """Consume one dispatch's (slots, N) token block.  Each live row
+        takes its planned ``n_steps`` tokens in order; a non-finite step
+        evicts that request alone AT THE DISPATCH BOUNDARY (tokens the row
+        produced before the poisoned step are kept - they were computed
+        from finite state).  ``decode_steps`` counts DISPATCHES and
+        ``decode_tokens`` consumed tokens, so host dispatches per token is
+        deterministically 1/N when rows run full blocks."""
         nxt, ok = res
+        nxt = np.asarray(nxt).reshape(self.slots, -1)
+        ok = np.asarray(ok).reshape(self.slots, -1)
         self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(plan.live)
+        consumed = 0
         for i in plan.live:
             req = self.active[i]
             if req is None:
                 continue              # evicted between plan and apply
-            if not ok[i]:
-                # poisoned slot: evict this request alone; peers' rows in
-                # the cache pool are untouched (per-slot state)
-                self.active[i] = None
-                self._release_slot(i)
-                self._fail(req, "non-finite logits at decode", "nonfinite")
-                continue
-            req.generated.append(int(nxt[i]))
-            self.lengths[i] += 1
-            self.last_tokens[i] = int(nxt[i])
-            self._emit_token(req, int(nxt[i]))
-            if (len(req.generated) >= req.max_new
-                    or self.lengths[i] >= self.max_len - 1):
-                self.active[i] = None
-                self._release_slot(i)   # slot freed for the next admission
-                self._complete(req)
+            for t in range(int(plan.n_steps[i])):
+                if not ok[i, t]:
+                    # poisoned step: evict this request alone; peers' rows
+                    # in the cache pool are untouched (per-slot state)
+                    self.active[i] = None
+                    self._release_slot(i)
+                    self._fail(req, "non-finite logits at decode",
+                               "nonfinite")
+                    break
+                tok = int(nxt[i, t])
+                consumed += 1
+                req.generated.append(tok)
+                self.lengths[i] += 1
+                self.last_tokens[i] = tok
+                self._emit_token(req, tok)
+                if (len(req.generated) >= req.max_new
+                        or self.lengths[i] >= self.max_len - 1):
+                    self.active[i] = None
+                    self._release_slot(i)   # freed for the next admission
+                    self._complete(req)
+                    break
+        self.stats["decode_tokens"] += consumed
 
     # ----------------------------------------------- paged decode growth
     def _ensure_decode_pages(self) -> None:
-        """Make every live slot own (writably) the page its next decode
-        write hits - ``lengths[slot] // page + 1`` pages - BEFORE the page
-        tables are snapshotted into the decode plan.  Growth allocations
-        happen exactly when a length crosses a page boundary; a COW copy
-        fires when the frontier page is prefix-shared.  Under pool
-        pressure the YOUNGEST request on the replica is preempted (LIFO:
-        oldest-first iteration + youngest victim keeps head-of-line work
-        moving); ``pool_pages >= n_pp + 1`` guarantees a sole survivor can
-        always grow, so the victim loop terminates."""
+        """Make every live slot own (writably) every page the next decode
+        dispatch writes - positions ``lengths[slot]`` through
+        ``lengths[slot] + n_steps - 1`` (the whole N-step block is
+        pre-allocated, so preemption only ever happens BETWEEN dispatches)
+        - BEFORE the page tables are snapshotted into the decode plan.
+        Growth allocations happen exactly when the block crosses a page
+        boundary; a COW copy fires when a written page is prefix-shared
+        (only the frontier page ``lengths // page`` can be - later pages
+        are freshly allocated).  Under pool pressure the YOUNGEST request
+        on the replica is preempted (LIFO: oldest-first iteration +
+        youngest victim keeps head-of-line work moving);
+        ``pool_pages >= n_pp + 1`` guarantees a sole survivor can always
+        grow, so the victim loop terminates."""
         spr = self.slots_per_replica
         copies: dict[int, list[tuple[int, int]]] = {}
         order = sorted((s for s in range(self.slots)
@@ -1114,14 +1189,17 @@ class SchedulerCore:
             ri = slot // spr
             pool = self.page_pools[ri]
             uid = self._slot_uids[slot]
-            need = int(self.lengths[slot]) // self.page_size + 1
+            j0 = int(self.lengths[slot]) // self.page_size
+            last = int(self.lengths[slot]) + self._decode_budget(slot) - 1
+            need = last // self.page_size + 1
             while True:
                 try:
                     while pool.n_owned(uid) < need:
                         pool.alloc(uid, 1)
-                    cp = pool.ensure_writable(uid, need - 1)
-                    if cp is not None:
-                        copies.setdefault(ri, []).append(cp)
+                    for j in range(j0, need):
+                        cp = pool.ensure_writable(uid, j)
+                        if cp is not None:
+                            copies.setdefault(ri, []).append(cp)
                     break
                 except PageError:
                     victim = max((s for s in range(ri * spr, (ri + 1) * spr)

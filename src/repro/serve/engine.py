@@ -57,7 +57,55 @@ from .core import (DEFAULT_BUCKETS, ChunkedPlan, DecodePlan, PrefillPlan,
                    Request, SchedulerCore)
 from .pages import SpillRecord
 
-__all__ = ["DEFAULT_BUCKETS", "Request", "ServeEngine"]
+__all__ = ["DECODE_PAD", "DEFAULT_BUCKETS", "Request", "ServeEngine"]
+
+# token-block sentinel: steps a row did not consume (its per-row budget ran
+# out before the block did) come back as this instead of a sampled id.
+# Token ids are non-negative, so -1 is unambiguous; the scheduler's apply
+# loop never reads padded steps, and the multi-host token tracker treats it
+# as end-of-row
+DECODE_PAD = -1
+
+
+def decode_scan(step_fn, sample_fn, n_block: int, collect: bool):
+    """Build the N-step fused decode body shared by every engine: a
+    ``lax.scan`` of ``n_block`` model steps carrying (cache state, token,
+    position) ON DEVICE, sampling each step in-program with the per-(uid,
+    step) keys, so one host dispatch consumes N decode rounds.
+
+    Per-row budgets ride in ``n_steps``: a row past its budget FREEZES -
+    it re-feeds its last token at its last position (rewriting one cache
+    position with identical content, a bit-exact no-op) and emits
+    ``DECODE_PAD``/ok=True, so every row costs the same FLOPs and the
+    block stays one static executable.  PDQ telemetry is collected INSIDE
+    the body (the collector's scalars must be traced per iteration) and
+    summed over the block; ``pdq_guard``/``tp_shard`` are trace-time only
+    and wrap the whole scan at the call site.
+
+    Returns ``run(rng, params, state, tokens, positions, uids, steps,
+    n_steps) -> (toks (B, N), ok (B, N), state, tel (3,))``.
+    """
+    def run(rng, params, state, tokens, positions, uids, steps, n_steps):
+        def body(carry, t):
+            state, tok, pos = carry
+            with ops.pdq_telemetry(collect) as col:
+                logits, state = step_fn(params, state, tok, pos)
+                tel = col.summary()
+            nxt, okt = sample_fn(rng, logits, uids, steps + t)
+            act = t < n_steps
+            otok = jnp.where(act, nxt, DECODE_PAD).astype(jnp.int32)
+            ook = jnp.where(act, okt, True)
+            ntok = jnp.where(act, nxt, tok[:, 0]).astype(tok.dtype)[:, None]
+            npos = jnp.where(act, pos[:, 0] + 1, pos[:, 0])[:, None]
+            return (state, ntok, npos), (otok, ook, tel)
+
+        (state, _, _), (toks, oks, tels) = jax.lax.scan(
+            body, (state, tokens, positions),
+            jnp.arange(n_block, dtype=jnp.int32))
+        return (jnp.moveaxis(toks, 0, 1), jnp.moveaxis(oks, 0, 1), state,
+                jnp.sum(tels, axis=0))
+
+    return run
 
 
 class ServeEngine(SchedulerCore):
@@ -67,6 +115,7 @@ class ServeEngine(SchedulerCore):
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  batch_prefill: bool = True,
                  chunked_prefill: bool = False,
+                 decode_steps: int = 1,
                  n_replicas: int = 1,
                  fault: FaultInjector | None = None,
                  pdq_fallback: bool = False,
@@ -101,7 +150,8 @@ class ServeEngine(SchedulerCore):
             patch_tokens=(cfg.frontend_tokens if cfg.frontend == "vision"
                           else 0),
             buckets=buckets, batch_prefill=batch_prefill,
-            chunked_prefill=chunked_prefill, fault=fault, tel=tel)
+            chunked_prefill=chunked_prefill, decode_steps=decode_steps,
+            fault=fault, tel=tel)
         if paged:
             assert batch_prefill, "the paged pool needs the bucketed path"
             self._paged_ops = self.bundle.paged_cache(
@@ -157,8 +207,12 @@ class ServeEngine(SchedulerCore):
         assert self.n_replicas == 1, (
             "n_replicas > 1 requires replica-aware device programs; "
             "use serve.sharded.ShardedServeEngine")
-        self._decode = self._traced_jit(self.bundle.decode_step,
-                                        "decode_compiles")
+        # the decode fast path: N model steps + in-program sampling fused
+        # into ONE dispatch (see decode_scan); host round-trips per token
+        # drop to 1/N and the block compiles once
+        self._decode = self._traced_decode(decode_scan(
+            self.bundle.decode_step, self._sample_fn(),
+            self.decode_steps, self.tel.enabled))
         # the per-request prefill survives ONLY as the legacy baseline
         # (batch_prefill=False); the scheduler core never reaches it on the
         # bucketed path
@@ -176,21 +230,35 @@ class ServeEngine(SchedulerCore):
         if self.paged:
             self._build_paged_jitted()
 
-    def _build_paged_jitted(self):
-        """Paged-pool device programs: ONE fused decode launch gathers the
-        live rows' pages into the logical layout, steps, and writes each
-        row's frontier page back - no host round-trips beyond the numpy
-        page tables the plan already ships."""
+    def _paged_decode_fn(self):
+        """The paged-pool fused decode body, shared by every engine: gather
+        the live rows' pages into the logical layout ONCE, run the N-step
+        scan on it, write each row's page WINDOW back (the block may cross
+        a page boundary; writeback masks by per-row budget).  Same
+        decode_scan return shape: (toks (B, N), ok, pool, tel)."""
         po = self._paged_ops
-        step = self.bundle.decode_step
+        N = self.decode_steps
+        scan = decode_scan(self.bundle.decode_step, self._sample_fn(),
+                           N, self.tel.enabled)
 
-        def decode_paged(params, pool, pt, tokens, positions):
+        def decode_paged(rng, params, pool, pt, tokens, positions, uids,
+                         steps, n_steps):
             logical = po.gather(pool, pt, positions[:, 0])
-            logits, logical = step(params, logical, tokens, positions)
-            return logits, po.writeback(pool, logical, pt, positions)
+            toks, ok, logical, tel = scan(rng, params, logical, tokens,
+                                          positions, uids, steps, n_steps)
+            pool = po.writeback(pool, logical, pt, positions,
+                                n_steps=n_steps, max_steps=N)
+            return toks, ok, pool, tel
 
-        self._decode_paged = self._traced_jit(decode_paged, "decode_compiles",
-                                              donate=(1,))
+        return decode_paged
+
+    def _build_paged_jitted(self):
+        """Paged-pool device programs: ONE fused decode launch per N-step
+        block - no host round-trips beyond the numpy page tables the plan
+        already ships."""
+        po = self._paged_ops
+        self._decode_paged = self._traced_decode(self._paged_decode_fn(),
+                                                 donate=(2,))
         self._land = jax.jit(po.land, donate_argnums=(0,))
         self._page_copy = jax.jit(po.copy, donate_argnums=(0,))
         self._restore_prog = jax.jit(po.restore, donate_argnums=(0,))
@@ -217,15 +285,33 @@ class ServeEngine(SchedulerCore):
 
         return jax.jit(wrapped, donate_argnums=donate)
 
+    def _traced_decode(self, fn, donate: tuple = ()):
+        """jit for the fused decode block.  Unlike _traced_jit it does NOT
+        open pdq_telemetry here: the scan body collects per-iteration (the
+        summary must be traced inside the body) and ``fn`` already returns
+        the block-summed (3,) vector as its last element.  pdq_guard is
+        trace-time only, so wrapping the whole scan is safe."""
+        stats = self.stats
+        guard = self.pdq_fallback
+
+        def wrapped(*args):
+            stats["decode_compiles"] += 1      # trace-time side effect
+            with ops.pdq_guard(guard):
+                return fn(*args)
+
+        return jax.jit(wrapped, donate_argnums=donate)
+
     # -------------------------------------------------------------- sampling
-    def _build_sampler(self):
-        """One jitted program turning a (slots, V) logits batch into
-        (tokens, ok): per-row sampled token + per-row all-finite flag.
+    def _sample_fn(self):
+        """The pure (rng, logits, uids, steps) -> (tokens, ok) sampling
+        body: per-row sampled token + per-row all-finite flag.
 
         Keys are derived per ROW from (base rng, uid, step) so a token's
         randomness is a pure function of the request identity and its
-        position in the stream; the base key is passed in (not closed
-        over) so engines sharing temperature share the executable."""
+        position in the stream - not of which launch sampled it.  That is
+        what lets the SAME function serve the host-dispatched prefill
+        sampler, the fused decode scan, and the per-replica shard_map
+        bodies with token-exact outputs."""
         temp = float(self.temperature)
 
         def sample(rng, logits, uids, steps):
@@ -239,7 +325,13 @@ class ServeEngine(SchedulerCore):
                 toks = jax.vmap(one)(logits, uids, steps)
             return toks, ok
 
-        self._sampler = jax.jit(sample)
+        return sample
+
+    def _build_sampler(self):
+        """Jit the shared sampling body for the host-side prefill path (the
+        base key is passed in, not closed over, so engines sharing
+        temperature share the executable)."""
+        self._sampler = jax.jit(self._sample_fn())
 
     def _sample_rows(self, kind: str, plan, logits) -> tuple[np.ndarray,
                                                              np.ndarray]:
@@ -308,17 +400,25 @@ class ServeEngine(SchedulerCore):
         return out
 
     def _exec_decode(self, plan: DecodePlan):
+        row_args = (jnp.asarray(plan.row_uids, jnp.int32),
+                    jnp.asarray(plan.row_steps, jnp.int32),
+                    jnp.asarray(plan.n_steps, jnp.int32))
         if self.paged:
-            (logits, self.caches), tel = self._decode_paged(
-                self.params, self.caches, jnp.asarray(plan.page_tables),
-                jnp.asarray(plan.tokens), jnp.asarray(plan.positions))
+            toks, ok, self.caches, tel = self._decode_paged(
+                self.rng, self.params, self.caches,
+                jnp.asarray(plan.page_tables), jnp.asarray(plan.tokens),
+                jnp.asarray(plan.positions), *row_args)
         else:
-            (logits, self.caches), tel = self._decode(
-                self.params, self.caches, jnp.asarray(plan.tokens),
-                jnp.asarray(plan.positions))
-        out = self._sample_rows("decode", plan, logits)
+            toks, ok, self.caches, tel = self._decode(
+                self.rng, self.params, self.caches,
+                jnp.asarray(plan.tokens), jnp.asarray(plan.positions),
+                *row_args)
         self._observe_pdq(tel)
-        return out
+        # fault poisoning moved host-side: sampling now runs in-program, so
+        # the injector marks rows bad AFTER the launch instead of NaN-ing
+        # logits before it (same observable effect: the row evicts)
+        ok = self._poison_ok("decode", plan, np.asarray(ok))
+        return np.asarray(toks), ok
 
     # ------------------------------------------------------ paged-pool hooks
     def _copy_map(self, replica: int, pairs) -> np.ndarray:

@@ -21,17 +21,19 @@ process_replicas``).  All processes execute the SAME SPMD launch sequence
     physically store their replicas' shards) and the in-flight chunked
     sub-pool.
 
-Collective fast path.  The single-process engines sample on the host,
-which forces a device->host gather of the (slots, vocab) logits; across
-processes that gather is not even addressable.  Here sampling runs
-IN-PROGRAM: argmax / categorical is fused after the shard_map body, and
-the jit's replicated out_sharding makes XLA broadcast the (slots,) sampled
-tokens to every device via an in-program all-gather - every process then
-reads the full token vector from its local shard, no host-side device
-gathers.  Because each replica's argmax runs over exactly the logits the
-single-process engine computed (PDQ column-TP epilogue included), tokens
-stay bit-exact vs ``ShardedServeEngine`` on the same logical mesh, fp and
-int8.
+Collective fast path.  Sampling runs IN-PROGRAM per replica (inside the
+shard_map body, like ``ShardedServeEngine``): a host-side sample would
+force a device->host gather of the (slots, vocab) logits, which across
+processes is not even addressable.  Decode additionally runs as an
+N-step fused block (``engine.decode_scan``): ONE broadcast + ONE device
+launch consumes up to ``decode_steps`` tokens per row, and the jit's
+replicated out_sharding makes XLA broadcast the (slots, N) sampled token
+block + ok flags to every device via an in-program all-gather - every
+process then reads the full block from its local shard, no host-side
+device gathers, and command-stream traffic per token drops to 1/N.
+Because each replica samples over exactly the logits the single-process
+engine computed (PDQ column-TP epilogue included), tokens stay bit-exact
+vs ``ShardedServeEngine`` on the same logical mesh, fp and int8.
 
 Failure handling (see DESIGN.md "Failure handling").  The command header
 carries a monotonically increasing sequence number and a per-process ack
@@ -72,7 +74,7 @@ from repro.distributed.sharding import (make_global, pool_shardings,
 
 from . import telemetry as tmod
 from .core import ChunkedPlan, DecodePlan, PrefillPlan, Request
-from .engine import DEFAULT_BUCKETS
+from .engine import DECODE_PAD, DEFAULT_BUCKETS, decode_scan
 from .sharded import ShardedServeEngine
 
 # coordinator -> worker opcodes.  Header: int32[4 + 3 * n_processes] =
@@ -101,7 +103,9 @@ CMD_CHUNK_FIRST = 2    # payload: tokens (slots, L), seq_lens, row_uids,
 CMD_CHUNK_NEXT = 3     # payload: tokens (slots, L), seq_lens, start_lens
 CMD_CHUNK_END = 4      # payload: src_map
 CMD_DECODE = 5         # payload: tokens (slots, 1), positions (slots, 1),
-                       #          row_uids, row_steps
+                       #          row_uids, row_steps, n_steps (per-row
+                       #          block budgets); arg = the block size N
+                       #          (lockstep-verified by every worker)
 CMD_ABORT = 6          # coordinator died: workers raise (arg = reason)
 CMD_INGRESS = 7        # pull process arg's queued submits: count int32[1]
                        # from arg, then per request meta int32[4] =
@@ -179,7 +183,8 @@ class MultiHostServeEngine(ShardedServeEngine):
                  max_len: int = 256, quantize_weights: bool = False,
                  temperature: float = 0.0, rng: jax.Array | None = None,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 chunked_prefill: bool = False, fault=None,
+                 chunked_prefill: bool = False, decode_steps: int = 1,
+                 fault=None,
                  pdq_fallback: bool = False,
                  launch_timeout: float | None = None,
                  snapshot_path: str | None = None,
@@ -225,7 +230,8 @@ class MultiHostServeEngine(ShardedServeEngine):
                          slots_per_replica=slots_per_replica, max_len=max_len,
                          quantize_weights=quantize_weights,
                          temperature=temperature, rng=rng, buckets=buckets,
-                         chunked_prefill=chunked_prefill, fault=fault,
+                         chunked_prefill=chunked_prefill,
+                         decode_steps=decode_steps, fault=fault,
                          pdq_fallback=pdq_fallback, paged=paged,
                          page_size=page_size, pool_pages=pool_pages,
                          prefix_sharing=prefix_sharing, tel=tel)
@@ -286,79 +292,49 @@ class MultiHostServeEngine(ShardedServeEngine):
         self.caches = mk_pool()
         self._prefill_pool = mk_scratch()
 
-        temp = float(self.temperature)
-        base_rng = np.asarray(self.rng)   # identical on every process
+        # the base sampling key, made global once: every process constructs
+        # the engine with the same rng argument, so the replicated shards
+        # agree bit-for-bit
+        self._rng_glob = self._glob(np.asarray(self.rng), P())
 
-        def sample(logits, uids, steps):
-            ok = jnp.isfinite(logits).all(axis=-1)
-            if temp <= 0.0:
-                return jnp.argmax(logits, -1), ok
-
-            def one(lg, uid, step):
-                k = jax.random.fold_in(jax.random.fold_in(base_rng, uid),
-                                       step)
-                return jax.random.categorical(k, lg / temp)
-
-            return jax.vmap(one)(logits, uids, steps), ok
-
-        def sampled(fn, in_specs):
-            """shard_map(fn) (TP active inside) returning (sampled tokens,
-            ok flags, caches, pdq health summary): logits stay sharded
-            over 'data', sampling and the finite check run per replica,
-            and the replicated out_sharding broadcasts the (slots,) tokens
-            + flags (and the psum'd (3,) summary) to every device
-            in-program - the health scalars ride the token gather every
-            process already blocks on, zero extra round-trips."""
-            mapped = self._sharded(fn, in_specs, (dp, cs), tel=True)
-
-            def prog(uids, steps, *args):
-                (logits, caches), tel = mapped(*args)
-                toks, ok = sample(logits, uids, steps)
-                return toks, ok, caches, tel
-
-            return prog
-
-        def traced(fn, counter, **jit_kw):
-            stats = self.stats
-
-            def wrapped(*args):
-                if counter:
-                    stats[counter] += 1      # trace-time side effect
-                # NB: the PDQ fallback guard is applied inside _sharded's
-                # shard_map body (per shard, before the TP all-gather)
-                return fn(*args)
-
-            return jax.jit(wrapped, **jit_kw)
-
-        self._decode = traced(
-            sampled(self.bundle.decode_step, (P(), cs, dp, dp)),
-            "decode_compiles", out_shardings=(repl, repl, pool_sh, repl))
-        self._prefill_many = traced(
-            sampled(self.bundle.prefill_many, (P(), dp, cs, dp)),
-            "prefill_compiles", out_shardings=(repl, repl, pool_sh, repl))
-        self._prefill_chunk = traced(
-            sampled(self.bundle.prefill_chunk, (P(), dp, cs, dp, dp)),
-            "chunk_compiles", out_shardings=(repl, repl, pool_sh, repl))
+        # device programs are the ShardedServeEngine builders verbatim
+        # (per-replica in-body sampling, N-step fused decode scan, TP +
+        # pdq guard in the shard_map body) with one multi-process twist:
+        # replicated out_shardings make XLA all-gather the (slots, N)
+        # sampled-token block + ok flags to every device IN-PROGRAM, so
+        # each process reads the full block off its local shard - no
+        # host-side cross-process gathers, and the pdq health summary
+        # rides the same sync.
+        self._decode = self._traced_decode_sharded(
+            decode_scan(self.bundle.decode_step, self._sample_fn(),
+                        self.decode_steps, self.tel.enabled),
+            in_specs=(P(), P(), cs, dp, dp, dp, dp, dp), donate=(),
+            out_shardings=(repl, repl, pool_sh, repl))
+        ps = ((repl, repl, pool_sh), repl)
+        self._prefill_many = self._traced_sharded_jit(
+            self._sampled_prefill(self.bundle.prefill_many),
+            "prefill_compiles",
+            in_specs=(P(), P(), dp, cs, dp, dp, dp), out_specs=(dp, dp, cs),
+            tel=True, out_shardings=ps)
+        self._prefill_chunk = self._traced_sharded_jit(
+            self._sampled_prefill(self.bundle.prefill_chunk),
+            "chunk_compiles",
+            in_specs=(P(), P(), dp, cs, dp, dp, dp, dp),
+            out_specs=(dp, dp, cs), tel=True, out_shardings=ps)
         self._scatter = self._traced_sharded_jit(
             self.bundle.cache_scatter, None,
             in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
         self._prefill_one = None
 
         if self.paged:
-            # paged decode with IN-PROGRAM sampling (same collective fast
-            # path as _decode); land/copy ride the plain sharded launches
+            # paged N-step decode (same collective fast path as _decode);
+            # land/copy ride the plain sharded launches
             po = self._paged_ops
-            step = self.bundle.decode_step
             pts = P("data", None)
-
-            def decode_paged(params, pool, pt, tokens, positions):
-                logical = po.gather(pool, pt, positions[:, 0])
-                logits, logical = step(params, logical, tokens, positions)
-                return logits, po.writeback(pool, logical, pt, positions)
-
-            self._decode_paged = traced(
-                sampled(decode_paged, (P(), cs, pts, dp, dp)),
-                "decode_compiles", out_shardings=(repl, repl, pool_sh, repl))
+            self._decode_paged = self._traced_decode_sharded(
+                self._paged_decode_fn(),
+                in_specs=(P(), P(), cs, pts, dp, dp, dp, dp, dp), donate=(),
+                out_shardings=(repl, repl, pool_sh, repl))
             self._land = self._traced_sharded_jit(
                 po.land, None, in_specs=(cs, cs, dp, dp, dp), out_specs=cs,
                 donate=(0,))
@@ -545,8 +521,10 @@ class MultiHostServeEngine(ShardedServeEngine):
     # same global-mesh launch; the replicated (tokens, ok) outputs are
     # locally addressable everywhere.
     def _us(self, uids, steps):
-        return (self._glob(np.asarray(uids, np.int32), P()),
-                self._glob(np.asarray(steps, np.int32), P()))
+        # per-row sampling metadata: split over 'data' like the rows it
+        # describes (sampling runs per replica inside the shard_map body)
+        return (self._glob(np.asarray(uids, np.int32), P("data")),
+                self._glob(np.asarray(steps, np.int32), P("data")))
 
     def _batch(self, tokens, extras) -> dict:
         batch = {"tokens": self._glob(tokens, P("data"))}
@@ -574,9 +552,9 @@ class MultiHostServeEngine(ShardedServeEngine):
                     extras=None, land_rows=None, land_js=None):
         u, s = self._us(uids, steps)
         with self._deadline("prefill launch"):
-            nxt, ok, sub, tel = self._prefill_many(
-                u, s, self.params, self._batch(tokens, extras),
-                self._prefill_pool, self._glob(seq_lens, P("data")))
+            (nxt, ok, sub), tel = self._prefill_many(
+                self._rng_glob, self.params, self._batch(tokens, extras),
+                self._prefill_pool, self._glob(seq_lens, P("data")), u, s)
             self._land_global(sub, src_map, land_rows, land_js)
             jax.block_until_ready((nxt, ok, tel, self.caches))
         nxt, ok = np.asarray(nxt), np.asarray(ok)
@@ -590,10 +568,10 @@ class MultiHostServeEngine(ShardedServeEngine):
                              np.asarray(steps, np.int32))
         u, s = self._chunk_us
         with self._deadline("chunked-prefill launch"):
-            nxt, ok, self._chunk_sub, tel = self._prefill_many(
-                u, s, self.params,
+            (nxt, ok, self._chunk_sub), tel = self._prefill_many(
+                self._rng_glob, self.params,
                 {"tokens": self._glob(tokens, P("data"))},
-                self._prefill_pool, self._glob(seq_lens, P("data")))
+                self._prefill_pool, self._glob(seq_lens, P("data")), u, s)
             jax.block_until_ready((nxt, ok, tel, self._chunk_sub))
         self._observe_pdq(tel)
         self._chunk_nxt = (np.asarray(nxt), np.asarray(ok))
@@ -602,11 +580,11 @@ class MultiHostServeEngine(ShardedServeEngine):
     def _do_chunk_next(self, tokens, seq_lens, start_lens):
         u, s = self._chunk_us
         with self._deadline("chunked-prefill launch"):
-            nxt, ok, self._chunk_sub, tel = self._prefill_chunk(
-                u, s, self.params,
+            (nxt, ok, self._chunk_sub), tel = self._prefill_chunk(
+                self._rng_glob, self.params,
                 {"tokens": self._glob(tokens, P("data"))},
                 self._chunk_sub, self._glob(seq_lens, P("data")),
-                self._glob(start_lens, P("data")))
+                self._glob(start_lens, P("data")), u, s)
             jax.block_until_ready((nxt, ok, tel, self._chunk_sub))
         self._observe_pdq(tel)
         self._chunk_nxt = (np.asarray(nxt), np.asarray(ok))
@@ -627,20 +605,22 @@ class MultiHostServeEngine(ShardedServeEngine):
         self._chunk_track = None
         self._chunk_nxt = None
 
-    def _do_decode(self, tokens, positions, uids, steps, page_tables=None):
+    def _do_decode(self, tokens, positions, uids, steps, n_steps,
+                   page_tables=None):
         u, s = self._us(uids, steps)
+        ns = self._glob(np.asarray(n_steps, np.int32), P("data"))
         with self._deadline("decode launch"):
             if self.paged:
                 nxt, ok, self.caches, tel = self._decode_paged(
-                    u, s, self.params, self.caches,
+                    self._rng_glob, self.params, self.caches,
                     self._glob(page_tables, P("data", None)),
                     self._glob(tokens, P("data")),
-                    self._glob(positions, P("data")))
+                    self._glob(positions, P("data")), u, s, ns)
             else:
                 nxt, ok, self.caches, tel = self._decode(
-                    u, s, self.params, self.caches,
+                    self._rng_glob, self.params, self.caches,
                     self._glob(tokens, P("data")),
-                    self._glob(positions, P("data")))
+                    self._glob(positions, P("data")), u, s, ns)
             jax.block_until_ready((nxt, ok, tel, self.caches))
         nxt, ok = np.asarray(nxt), np.asarray(ok)
         self._observe_pdq(tel)
@@ -658,16 +638,28 @@ class MultiHostServeEngine(ShardedServeEngine):
         tokens are replicated to every process in-program, so a worker
         reads its requests' streams straight off the plans it already
         executes - no result backhaul.  The (uid, step)-keyed append makes
-        it robust to dummy rows and replays: a row only lands if its step
-        equals the tokens mirrored so far."""
+        it robust to dummy rows and replays: a token only lands if its
+        step equals the tokens mirrored so far.  ``nxt``/``ok`` may be
+        (slots,) prefill rows or (slots, N) decode blocks; a row's block
+        walk stops at the first bad token (non-finite row, DECODE_PAD
+        budget padding, step replay, or max_new reached)."""
         if not self._remote:
             return
-        for row, uid in enumerate(np.asarray(uids)):
+        uids = np.asarray(uids)
+        steps = np.asarray(steps)
+        nxt = np.asarray(nxt).reshape(len(uids), -1)
+        ok = np.asarray(ok).reshape(len(uids), -1)
+        for row, uid in enumerate(uids):
             rec = self._remote.get(int(uid))
-            if (rec is not None and bool(np.asarray(ok)[row])
-                    and int(np.asarray(steps)[row]) == len(rec["tokens"])
-                    and len(rec["tokens"]) < rec["max_new"]):
-                rec["tokens"].append(int(np.asarray(nxt)[row]))
+            if rec is None:
+                continue
+            for t in range(nxt.shape[1]):
+                tok = int(nxt[row, t])
+                if (not bool(ok[row, t]) or tok == DECODE_PAD
+                        or int(steps[row]) + t != len(rec["tokens"])
+                        or len(rec["tokens"]) >= rec["max_new"]):
+                    break
+                rec["tokens"].append(tok)
 
     # --------------------------------------------------- coordinator driver
     def _exec_prefill(self, plan: PrefillPlan, extras):
@@ -710,14 +702,17 @@ class MultiHostServeEngine(ShardedServeEngine):
         return res
 
     def _exec_decode(self, plan: DecodePlan):
-        self._cmd(CMD_DECODE)
+        # arg carries the BLOCK size N: a worker built with a different
+        # decode_steps would trace a different executable and desync the
+        # fleet, so it verifies lockstep before executing
+        self._cmd(CMD_DECODE, self.decode_steps)
         payload = [plan.tokens, plan.positions,
-                   plan.row_uids, plan.row_steps]
+                   plan.row_uids, plan.row_steps, plan.n_steps]
         if self.paged:          # (slots, n_pp) replica-local page tables
             payload += [plan.page_tables]
         self._send(payload)
         return self._do_decode(plan.tokens, plan.positions,
-                               plan.row_uids, plan.row_steps,
+                               plan.row_uids, plan.row_steps, plan.n_steps,
                                page_tables=plan.page_tables)
 
     def _exec_page_copy(self, replica: int, pairs) -> None:
@@ -928,10 +923,16 @@ class MultiHostServeEngine(ShardedServeEngine):
                                    recv[1] if self.paged else None,
                                    recv[2] if self.paged else None)
             elif op == CMD_DECODE:
-                recv = self._recv([(S, 1), (S, 1), (S,), (S,)]
+                if arg != self.decode_steps:
+                    raise ProtocolError(
+                        f"coordinator decode block size {arg} != this "
+                        f"worker's decode_steps {self.decode_steps}: every "
+                        "process must construct the engine with identical "
+                        "arguments")
+                recv = self._recv([(S, 1), (S, 1), (S,), (S,), (S,)]
                                   + ([(S, self.n_pp)] if self.paged else []))
-                self._do_decode(*recv[:4],
-                                page_tables=recv[4] if self.paged else None)
+                self._do_decode(*recv[:5],
+                                page_tables=recv[5] if self.paged else None)
             elif op == CMD_PAGE_COPY:
                 cmap, = self._recv([(Np,)])
                 self._do_page_copy(cmap)

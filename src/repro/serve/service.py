@@ -23,6 +23,12 @@ submit/result handoff:
     propagates into the scheduler as the first-class ``cancel(uid)``:
     queued cancels apply at the next round boundary, evicting only their
     own request through the PR-6 isolation path - peers stay bit-exact.
+    With the N-step decode fast path (``decode_steps > 1``) a "round" is
+    one DISPATCH of up to N tokens per row: cancels, deadline sweeps and
+    stream flushes quantize to dispatch boundaries (a mid-block cancel
+    still delivers the block's already-sampled tokens first, exactly the
+    tokens an N=1 engine would have produced), and peer streams stay
+    token-identical because sampling keys are per-(uid, step).
   * a stalled consumer cannot wedge the fleet: stream buffers are bounded
     (``max_stream_buffer``) and an overflowing stream cancels ITS request
     with a ``slow_consumer`` finish, nothing else.

@@ -47,13 +47,15 @@ to worker processes.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import pool_shardings, serve_pool_specs
 from repro.kernels import ops
 from repro.models.context import shard_map
 
-from .engine import DEFAULT_BUCKETS, ServeEngine
+from .engine import DEFAULT_BUCKETS, ServeEngine, decode_scan
 
 
 class ShardedServeEngine(ServeEngine):
@@ -70,7 +72,8 @@ class ShardedServeEngine(ServeEngine):
                  max_len: int = 256, quantize_weights: bool = False,
                  temperature: float = 0.0, rng: jax.Array | None = None,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 chunked_prefill: bool = False, fault=None,
+                 chunked_prefill: bool = False, decode_steps: int = 1,
+                 fault=None,
                  pdq_fallback: bool = False, paged: bool = False,
                  page_size: int = 64, pool_pages: int | None = None,
                  prefix_sharing: bool = True, spill: bool = False,
@@ -86,6 +89,7 @@ class ShardedServeEngine(ServeEngine):
                          max_len=max_len, quantize_weights=quantize_weights,
                          temperature=temperature, rng=rng, buckets=buckets,
                          batch_prefill=True, chunked_prefill=chunked_prefill,
+                         decode_steps=decode_steps,
                          n_replicas=self.data_size, fault=fault,
                          pdq_fallback=pdq_fallback, paged=paged,
                          page_size=page_size, pool_pages=pool_pages,
@@ -120,7 +124,8 @@ class ShardedServeEngine(ServeEngine):
                          out_specs=specs, check_vma=False)
 
     def _traced_sharded_jit(self, fn, counter: str, in_specs, out_specs,
-                            donate: tuple[int, ...] = (), tel: bool = False):
+                            donate: tuple[int, ...] = (), tel: bool = False,
+                            out_shardings=None):
         stats = self.stats
         mapped = self._sharded(fn, in_specs, out_specs, tel=tel)
 
@@ -129,20 +134,79 @@ class ShardedServeEngine(ServeEngine):
                 stats[counter] += 1      # trace-time side effect
             return mapped(*args)
 
-        return jax.jit(wrapped, donate_argnums=donate)
+        kw = {} if out_shardings is None else {"out_shardings": out_shardings}
+        return jax.jit(wrapped, donate_argnums=donate, **kw)
+
+    def _traced_decode_sharded(self, fn, in_specs, donate: tuple[int, ...],
+                               out_shardings=None):
+        """shard_map + jit for the fused decode block (the sharded analogue
+        of ServeEngine._traced_decode).  ``fn`` is a decode_scan-shaped
+        body returning (toks, ok, state, tel): telemetry is collected
+        INSIDE the scan (per iteration, per shard), so this wrapper only
+        opens tp_shard/pdq_guard around it and psums the block-summed
+        (3,) health vector over both mesh axes.  Sampling runs in-body:
+        each replica samples its OWN slot block with the per-(uid, step)
+        keys - the per-row keys make that bit-identical to global
+        sampling, and the launch returns (slots, N) int32 tokens instead
+        of gathering a replicated (slots, vocab) logits batch."""
+        T = self.model_size
+        guard = self.pdq_fallback
+        dp = P("data")
+
+        def body(*args):
+            with ops.tp_shard("model", T), ops.pdq_guard(guard):
+                toks, ok, state, tel = fn(*args)
+            return toks, ok, state, jax.lax.psum(tel, ("data", "model"))
+
+        mapped = shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                           out_specs=(dp, dp, serve_pool_specs(self.caches),
+                                      P()),
+                           check_vma=False)
+        stats = self.stats
+
+        def wrapped(*args):
+            stats["decode_compiles"] += 1      # trace-time side effect
+            return mapped(*args)
+
+        kw = {} if out_shardings is None else {"out_shardings": out_shardings}
+        return jax.jit(wrapped, donate_argnums=donate, **kw)
+
+    def _sampled_prefill(self, fn):
+        """Wrap a prefill-shaped body so it samples in-body: each replica
+        samples its own rows right where the logits live, so the launch
+        ships (slots,) tokens + ok flags instead of (slots, vocab) logits.
+        fn(params, *args) -> (logits, sub) becomes
+        wrapped(rng, params, *args, uids, steps) -> (toks, ok, sub)."""
+        sample = self._sample_fn()
+
+        def wrapped(rng, params, *rest):
+            *args, uids, steps = rest
+            logits, sub = fn(params, *args)
+            toks, ok = sample(rng, logits, uids, steps)
+            return toks, ok, sub
+
+        return wrapped
 
     def _build_jitted(self):
         cs = serve_pool_specs(self.caches)
         dp = P("data")                       # slot/batch axis over replicas
-        self._decode = self._traced_sharded_jit(
-            self.bundle.decode_step, "decode_compiles",
-            in_specs=(P(), cs, dp, dp), out_specs=(dp, cs), tel=True)
+        # N-step fused decode: scan + in-body sampling, one dispatch per
+        # token BLOCK (see engine.decode_scan); state/tokens/positions/row
+        # metadata all split over 'data', rng + params replicated
+        self._decode = self._traced_decode_sharded(
+            decode_scan(self.bundle.decode_step, self._sample_fn(),
+                        self.decode_steps, self.tel.enabled),
+            in_specs=(P(), P(), cs, dp, dp, dp, dp, dp), donate=())
         self._prefill_many = self._traced_sharded_jit(
-            self.bundle.prefill_many, "prefill_compiles",
-            in_specs=(P(), dp, cs, dp), out_specs=(dp, cs), tel=True)
+            self._sampled_prefill(self.bundle.prefill_many),
+            "prefill_compiles",
+            in_specs=(P(), P(), dp, cs, dp, dp, dp), out_specs=(dp, dp, cs),
+            tel=True)
         self._prefill_chunk = self._traced_sharded_jit(
-            self.bundle.prefill_chunk, "chunk_compiles",
-            in_specs=(P(), dp, cs, dp, dp), out_specs=(dp, cs), tel=True)
+            self._sampled_prefill(self.bundle.prefill_chunk),
+            "chunk_compiles",
+            in_specs=(P(), P(), dp, cs, dp, dp, dp, dp),
+            out_specs=(dp, dp, cs), tel=True)
         self._scatter = self._traced_sharded_jit(
             self.bundle.cache_scatter, None,
             in_specs=(cs, cs, dp), out_specs=cs, donate=(0,))
@@ -173,22 +237,55 @@ class ShardedServeEngine(ServeEngine):
         body runs the identical single-device gather/step/writeback (or
         land / copy) on local indices."""
         po = self._paged_ops
-        step = self.bundle.decode_step
         cs = serve_pool_specs(self.caches)
         dp = P("data")
         pts = P("data", None)                # (slots, n_pp) page tables
-
-        def decode_paged(params, pool, pt, tokens, positions):
-            logical = po.gather(pool, pt, positions[:, 0])
-            logits, logical = step(params, logical, tokens, positions)
-            return logits, po.writeback(pool, logical, pt, positions)
-
-        self._decode_paged = self._traced_sharded_jit(
-            decode_paged, "decode_compiles",
-            in_specs=(P(), cs, pts, dp, dp), out_specs=(dp, cs),
-            donate=(1,), tel=True)
+        self._decode_paged = self._traced_decode_sharded(
+            self._paged_decode_fn(),
+            in_specs=(P(), P(), cs, pts, dp, dp, dp, dp, dp),
+            donate=(2,))
         self._land = self._traced_sharded_jit(
             po.land, None, in_specs=(cs, cs, dp, dp, dp), out_specs=cs,
             donate=(0,))
         self._page_copy = self._traced_sharded_jit(
             po.copy, None, in_specs=(cs, dp), out_specs=cs, donate=(0,))
+
+    # ------------------------------------------------------------ exec hooks
+    # prefill sampling runs in-body on the mesh (each replica samples its
+    # own rows), so the launch protocol differs from the single-device
+    # engine's host-side _sample_rows: tokens/ok come back directly and
+    # fault poisoning flips the ok rows host-side instead of NaN-ing logits
+    def _exec_prefill(self, plan, extras):
+        batch = self._extras_batch({"tokens": jnp.asarray(plan.tokens)},
+                                   extras)
+        (toks, ok, sub), tel = self._prefill_many(
+            self.rng, self.params, batch, self._prefill_pool,
+            jnp.asarray(plan.seq_lens),
+            jnp.asarray(plan.row_uids, jnp.int32),
+            jnp.asarray(plan.row_steps, jnp.int32))
+        self._land_sub(plan, sub)
+        self._observe_pdq(tel)
+        ok = self._poison_ok("prefill", plan, np.asarray(ok))
+        return np.asarray(toks), ok
+
+    def _exec_chunked(self, plan, extras):
+        if extras:
+            raise NotImplementedError(
+                "chunked prefill is text-only (no vision/encdec extras)")
+        uids = jnp.asarray(plan.row_uids, jnp.int32)
+        steps = jnp.asarray(plan.row_steps, jnp.int32)
+        _, tokens, seq_lens = plan.first
+        (toks, ok, sub), tel = self._prefill_many(
+            self.rng, self.params, {"tokens": jnp.asarray(tokens)},
+            self._prefill_pool, jnp.asarray(seq_lens), uids, steps)
+        for _, tokens, seq_lens, start_lens in plan.chunks:
+            # intermediate chunks sample throwaway tokens (same per-row
+            # keys, discarded logits) - only the final chunk's row matters
+            (toks, ok, sub), t2 = self._prefill_chunk(
+                self.rng, self.params, {"tokens": jnp.asarray(tokens)}, sub,
+                jnp.asarray(seq_lens), jnp.asarray(start_lens), uids, steps)
+            tel = tel + t2        # lazy device add: one fetch per launch set
+        self._land_sub(plan, sub)
+        self._observe_pdq(tel)
+        ok = self._poison_ok("chunked", plan, np.asarray(ok))
+        return np.asarray(toks), ok

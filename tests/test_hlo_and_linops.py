@@ -150,17 +150,15 @@ def test_lin_grouped_falls_back_per_projection():
     np.testing.assert_allclose(np.asarray(y2f), np.asarray(x @ w2), rtol=1e-6)
 
 
-def test_quantized_gqa_decode_block_is_eight_kernels():
-    """A full quantized GQA decode block (attn norm -> QKV -> attend -> wo,
-    ffn norm -> gate/up -> down) must trace to EXACTLY 8 pallas_calls: one
-    prologue + one wide matmul for each of the grouped QKV triple and the
-    gate/up pair, plus the two per-projection pairs (wo, w_down).  A
-    regression to per-projection dispatch (3 + 2 separate lin calls) would
-    trace 14."""
+def _decode_block_census(quant_kv: str) -> int:
+    """Trace a full quantized GQA decode block (attn norm -> QKV -> attend ->
+    wo, ffn norm -> gate/up -> down) under kernel impl and count
+    pallas_calls."""
     from repro.models.attention import AttnDims, gqa_apply, gqa_init, init_cache
     from repro.models.layers import mlp_apply, mlp_init, rms_norm
 
-    dims = AttnDims(d_model=256, n_heads=4, n_kv_heads=2, head_dim=64)
+    dims = AttnDims(d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+                    quant_kv=quant_kv)
     key = jax.random.PRNGKey(0)
     params = {"attn": gqa_init(key, dims, jnp.float32),
               "attn_norm": jnp.zeros((256,)),
@@ -182,5 +180,28 @@ def test_quantized_gqa_decode_block_is_eight_kernels():
         jaxpr = jax.make_jaxpr(block)(qp, h, cache, pos)
     finally:
         ops.set_impl("auto")
-    n = _count_pallas_calls(jaxpr)
-    assert n == 8, f"expected 8 pallas_calls per quantized decode block, got {n}"
+    return _count_pallas_calls(jaxpr)
+
+
+def test_quantized_gqa_decode_block_is_seven_kernels():
+    """A full quantized GQA decode block (fp KV cache) must trace to EXACTLY
+    7 pallas_calls: one prologue + one wide matmul for each of the grouped
+    QKV triple and the wo projection, plus the fused SwiGLU MLP triple
+    (the gate/up matmul's epilogue computes silu(g)*u AND w_down's PDQ
+    prologue, so no standalone prologue launch runs between the MLP
+    matmuls).  A regression to per-projection dispatch would trace 14;
+    losing the SwiGLU fusion regresses to 8 (tools/check_census.py pins
+    the same table in the lint job)."""
+    n = _decode_block_census("none")
+    assert n == 7, f"expected 7 pallas_calls per quantized decode block, got {n}"
+
+
+def test_quantized_gqa_decode_block_int8kv_is_seven_kernels():
+    """The int8-KV decode block also traces to EXACTLY 7 pallas_calls: the
+    flash-decode attend kernel's output stage emits the wo projection's
+    PDQ prologue (decode_attend_i8kv_fused_p), so wo costs ONE W8A8
+    matmul launch - QKV pair + fused attend + wo matmul + fused MLP
+    triple.  Losing the attend fold regresses to 9 (attend + wo
+    prologue + wo matmul)."""
+    n = _decode_block_census("dynamic")
+    assert n == 7, f"expected 7 pallas_calls per int8-KV decode block, got {n}"

@@ -14,10 +14,10 @@ except ImportError:  # clean envs: deterministic shim, see requirements-dev.txt
 
 from repro.kernels import ops, ref
 from repro.kernels.act_stats import act_stats_p
-from repro.kernels.kv_cache import decode_attend_i8kv_p
+from repro.kernels.kv_cache import decode_attend_i8kv_fused_p, decode_attend_i8kv_p
 from repro.kernels.pdq_prologue import pdq_prologue_p
 from repro.kernels.quantize import dequantize_p, quantize_p
-from repro.kernels.w8a8_matmul import w8a8_matmul_p
+from repro.kernels.w8a8_matmul import w8a8_matmul_p, w8a8_swiglu_matmul_p
 from repro.models.linops import group_quantize_weights, quantize_weight
 
 jax.config.update("jax_enable_x64", False)
@@ -435,3 +435,136 @@ def test_raw_kernels_reject_non_block_multiples():
                              jnp.zeros((2, 200, 64), jnp.int8),
                              jnp.ones((2, 200)), jnp.ones((2, 200)),
                              jnp.ones((1, 1), jnp.int32), bs=128)
+
+
+# ---------------------------------------------------------------------------
+# fused decode epilogues (ISSUE 10): attend + wo prologue, SwiGLU + w_down
+# prologue - the launches behind the 7-pallas_call decode census
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("frac", [0.3, 1.0])
+def test_decode_i8kv_fused_wo_prologue_kernel_vs_ref(frac):
+    """decode_attend_i8kv_fused_p must return the SAME o as the plain attend
+    kernel plus the wo prologue ref run over the flattened (H*Dh,) row."""
+    s, hkv, g, dh = 256, 2, 2, 64
+    H = hkv * g
+    keys = jax.random.split(jax.random.PRNGKey(41), 5)
+    q = jax.random.normal(keys[0], (H, dh))
+    k_q = _rand_i8(keys[1], (hkv, s, dh))
+    v_q = _rand_i8(keys[2], (hkv, s, dh))
+    k_s = jax.random.uniform(keys[3], (hkv, s), minval=0.01, maxval=0.05)
+    v_s = jax.random.uniform(keys[4], (hkv, s), minval=0.01, maxval=0.05)
+    length = jnp.full((1, 1), int(s * frac), jnp.int32)
+
+    o_plain = decode_attend_i8kv_p(q.reshape(hkv, g, dh), k_q, v_q, k_s, v_s,
+                                   length, bs=128, interpret=True)
+    o, o_q, s_x, s1, s2 = decode_attend_i8kv_fused_p(
+        q.reshape(hkv, g, dh), k_q, v_q, k_s, v_s, length,
+        bs=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o_plain))
+    wq, wsx, ws1, ws2 = ref.pdq_prologue_ref(o_plain.reshape(1, H * dh))
+    np.testing.assert_allclose(s_x.reshape(1, 1), wsx, rtol=1e-5)
+    np.testing.assert_allclose(s1.reshape(1, 1), ws1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s2.reshape(1, 1), ws2, rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(o_q, np.int32).reshape(1, H * dh)
+                  - np.asarray(wq, np.int32)).max() <= 1
+
+
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+def test_decode_i8kv_ops_wo_prologue_batched(impl):
+    """ops.decode_attend_i8kv(wo_prologue=True) == plain attend + prologue
+    ref, in BOTH impls (the ref path must be bit-identical to the unfused
+    composition so CPU engine parity is unaffected)."""
+    B, Hkv, G, Dh, s = 3, 2, 2, 64, 256
+    keys = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(keys[0], (B, Hkv * G, Dh))
+    k_q = _rand_i8(keys[1], (B, Hkv, s, Dh))
+    v_q = _rand_i8(keys[2], (B, Hkv, s, Dh))
+    k_s = jax.random.uniform(keys[3], (B, Hkv, s), minval=0.01, maxval=0.05)
+    v_s = jax.random.uniform(keys[4], (B, Hkv, s), minval=0.01, maxval=0.05)
+    lens = jnp.array([256, 57, 1], jnp.int32)
+    ops.set_impl(impl)
+    try:
+        o, o_q, s_x, s1, s2 = ops.decode_attend_i8kv(
+            q, k_q, v_q, k_s, v_s, lens, wo_prologue=True,
+            pro_dtype=jnp.float32)
+        o_plain = ops.decode_attend_i8kv(q, k_q, v_q, k_s, v_s, lens)
+    finally:
+        ops.set_impl("auto")
+    np.testing.assert_allclose(o, o_plain, rtol=1e-6, atol=1e-6)
+    wq, wsx, ws1, ws2 = ref.pdq_prologue_ref(
+        np.asarray(o_plain).reshape(B, Hkv * G * Dh))
+    np.testing.assert_allclose(s_x.reshape(B, 1), wsx, rtol=1e-5)
+    np.testing.assert_allclose(s1.reshape(B, 1), ws1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s2.reshape(B, 1), ws2, rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(o_q, np.int32).reshape(B, -1)
+                  - np.asarray(wq, np.int32)).max() <= 1
+    if impl == "ref":
+        # ref path is the EXACT unfused composition
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(o_plain))
+        np.testing.assert_array_equal(np.asarray(o_q).reshape(B, -1),
+                                      np.asarray(wq))
+
+
+def test_w8a8_swiglu_matmul_kernel_vs_unfused():
+    """The raw SwiGLU-epilogue matmul == plain clamped matmul + jnp
+    silu(g)*u + prologue ref, including the padded-lane columns (zero
+    weight cols produce hsw == 0, which the prologue must tolerate)."""
+    M, K, N = 128, 256, 512          # P = 256: gate cols [0:256), up [256:512)
+    P = N // 2
+    keys = jax.random.split(jax.random.PRNGKey(3), 6)
+    x_q = _rand_i8(keys[0], (M, K))
+    w_q = _rand_i8(keys[1], (K, N))
+    s_x = jax.random.uniform(keys[2], (M, 1), minval=0.01, maxval=0.05)
+    z_x = jnp.zeros((M, 1), jnp.int32)
+    s_w = jax.random.uniform(keys[3], (1, N), minval=0.001, maxval=0.01)
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+    nb = N // 128
+    lo = -20.0 * jnp.ones((M, nb))
+    hi = 20.0 * jnp.ones((M, nb))
+
+    y, hsw, hsw_q, sxo, s1o, s2o = w8a8_swiglu_matmul_p(
+        x_q, w_q, s_x, z_x, s_w, colsum, lo, hi, interpret=True)
+    y_want = w8a8_matmul_p(x_q, w_q, s_x, z_x, s_w, colsum,
+                           jnp.ones((M, nb)), jnp.zeros((M, nb), jnp.int32),
+                           lo, hi, requant=False, fp_clamp=True,
+                           per_nblock=True, interpret=True)
+    np.testing.assert_allclose(y, y_want, rtol=1e-5, atol=1e-5)
+    hsw_want = jax.nn.silu(y_want[:, :P]) * y_want[:, P:]
+    np.testing.assert_allclose(hsw, hsw_want, rtol=1e-5, atol=1e-5)
+    wq_, wsx, ws1, ws2 = ref.pdq_prologue_ref(hsw_want)
+    np.testing.assert_allclose(sxo, wsx, rtol=1e-5)
+    np.testing.assert_allclose(s1o, ws1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s2o, ws2, rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(hsw_q, np.int32)
+                  - np.asarray(wq_, np.int32)).max() <= 1
+
+
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+@pytest.mark.parametrize("shape", [(8, 1, 256, 512), (130, 257, 384)])
+def test_pdq_mlp_fused_matches_unfused(impl, shape):
+    """ops.pdq_mlp == pdq_dense_grouped + jnp silu(g)*u + pdq_dense, in both
+    impls (ref falls back to EXACTLY that composition; the kernel path
+    must agree to float tolerance), with ragged shapes covering padding."""
+    *lead, d_model, d_ff = shape
+    keys = jax.random.split(jax.random.PRNGKey(11), 4)
+    wg = 0.1 * jax.random.normal(keys[0], (d_model, d_ff))
+    wu = 0.1 * jax.random.normal(keys[1], (d_model, d_ff))
+    wd = 0.1 * jax.random.normal(keys[2], (d_ff, d_model))
+    grec = group_quantize_weights((wg, wu))
+    drec = quantize_weight(wd)
+    x = jax.random.normal(keys[3], (*lead, d_model))
+    ops.set_impl(impl)
+    try:
+        y = ops.pdq_mlp(x, grec, drec, out_dtype=jnp.float32)
+        g, u = ops.pdq_dense_grouped(x, grec, out="fp", out_dtype=jnp.float32)
+        want = ops.pdq_dense(jax.nn.silu(g) * u, drec, out="fp",
+                             out_dtype=jnp.float32)
+    finally:
+        ops.set_impl("auto")
+    assert y.shape == want.shape
+    if impl == "ref":
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    else:
+        np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,314 @@
+"""Multi-step fused decode (``decode_steps=N``): N-vs-1 parity + edges.
+
+Pins the decode fast-path contract: with ``decode_steps=N`` the engine
+runs N decode steps per host dispatch inside one ``lax.scan`` (cache
+state stays on device between steps) and backhauls one ``(slots, N)``
+token block - and this must never change a single token.  Every test
+here compares against the same engine at ``N=1`` (itself pinned against
+the pre-fast-path engine by the rest of the suite):
+
+  * the parity matrix: N in {4, 16} x {slot-row, paged} x {greedy,
+    temperature}, plus the int8 kernel-layout KV cache;
+  * dispatch accounting: host dispatches per token is deterministically
+    1/N (``stats["decode_steps"]`` counts dispatches,
+    ``stats["decode_tokens"]`` consumed tokens), including non-divisible
+    ``max_new`` and cache-headroom-capped tail blocks;
+  * lifecycle edges quantize to dispatch boundaries: cancel/disconnect
+    landing while a block is IN FLIGHT drops that whole block (the row's
+    stream ends on the previous dispatch boundary), deadlines sweep at
+    round boundaries so the delivered length is 1 + k*N, and in every
+    case peers stay bit-exact;
+  * preemption under pool pressure and drain -> snapshot -> resume
+    regenerate token-exactly at N>1 ((uid, step) sampling keys are
+    dispatch-shape-independent);
+  * intra-round prefix sharing: identical prompts admitted in the SAME
+    round share prompt pages (eager registration in ``_claim_pages``).
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.distributed.fault import FaultPlan, load_snapshot
+from repro.models import build_model
+from repro.serve import Request, ServeEngine, resume_requests
+
+MIXED_LENS = [3, 5, 8, 9, 12, 16, 17, 23, 30, 4, 11, 27]
+
+_MODELS = {}
+
+
+def _model(quant_kv=None):
+    if quant_kv not in _MODELS:
+        cfg = reduced_config("stablelm-1.6b")
+        if quant_kv:
+            cfg = dataclasses.replace(cfg, quant_kv=quant_kv)
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        _MODELS[quant_kv] = (cfg, params)
+    return _MODELS[quant_kv]
+
+
+def _requests(cfg, lens, max_new=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
+                    max_new=max_new) for i, L in enumerate(lens)]
+
+
+def _outputs(reqs):
+    return {r.uid: (tuple(r.generated), r.finish_reason, r.error)
+            for r in reqs}
+
+
+def _run(cfg, params, lens, *, max_new=6, seed=0, **kw):
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      **kw)
+    reqs = _requests(cfg, lens, max_new=max_new, seed=seed)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    return eng, _outputs(reqs)
+
+
+_REFS = {}
+
+
+def _ref(temperature):
+    """N=1 reference outputs for the mixed trace, cached per temperature."""
+    if temperature not in _REFS:
+        cfg, params = _model()
+        _, out = _run(cfg, params, MIXED_LENS, temperature=temperature)
+        _REFS[temperature] = out
+    return _REFS[temperature]
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: N-step == single-step, token for token
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("n", [4, 16])
+def test_nstep_matches_single_step(n, paged, temperature):
+    cfg, params = _model()
+    kw = dict(paged=True, page_size=16) if paged else {}
+    eng, got = _run(cfg, params, MIXED_LENS, decode_steps=n,
+                    temperature=temperature, **kw)
+    assert got == _ref(temperature)
+    # the fused block is one program: still exactly one decode compile
+    assert eng.stats["decode_compiles"] == 1
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_nstep_matches_single_step_int8_kv(temperature):
+    cfg, params = _model("dynamic")
+    _, want = _run(cfg, params, MIXED_LENS, temperature=temperature)
+    _, got = _run(cfg, params, MIXED_LENS, decode_steps=4,
+                  temperature=temperature, paged=True, page_size=16)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting: host dispatches per token == 1/N, deterministically
+# ---------------------------------------------------------------------------
+
+
+def test_dispatches_per_token_is_one_over_n():
+    """Solo row, max_new=33: prefill emits token 0, decode consumes the
+    other 32.  At N=4 that is exactly 8 full-block dispatches."""
+    cfg, params = _model()
+    eng, out = _run(cfg, params, [5], max_new=33, decode_steps=4)
+    assert eng.stats["decode_steps"] == 8
+    assert eng.stats["decode_tokens"] == 32
+    eng1, out1 = _run(cfg, params, [5], max_new=33)
+    assert eng1.stats["decode_steps"] == 32
+    assert out == out1
+
+
+def test_non_divisible_budget_runs_partial_tail_block():
+    """max_new=6 -> 5 decode tokens: one full block of 4 then a tail
+    dispatch with a 1-step budget (rows beyond it are DECODE_PAD)."""
+    cfg, params = _model()
+    eng, out = _run(cfg, params, [5], max_new=6, decode_steps=4)
+    assert eng.stats["decode_steps"] == 2
+    assert eng.stats["decode_tokens"] == 5
+    _, out1 = _run(cfg, params, [5], max_new=6)
+    assert out == out1
+
+
+def test_cache_headroom_caps_block_budget():
+    """A row nearing max_len gets its per-row step budget capped by the
+    cache headroom (last writable position max_len - 2), completes early
+    without ever writing past the cache, and stays token-exact."""
+    cfg, params = _model()
+
+    def run(**kw):
+        eng = ServeEngine(cfg, params, slots=4, max_len=40,
+                          buckets=(8, 16, 32), **kw)
+        reqs = _requests(cfg, [30, 5], max_new=30)
+        eng.run(reqs)
+        assert len(reqs[0].generated) < 30     # the cache, not max_new
+        return _outputs(reqs)
+
+    assert run(decode_steps=4) == run()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle edges quantize to dispatch boundaries
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["cancel", "disconnect"])
+def test_cancel_mid_block_drops_in_flight_block(kind):
+    """A cancel landing while dispatch k's block is IN FLIGHT frees the
+    slot before apply, so that whole block is dropped: the victim's
+    stream ends on the previous dispatch boundary (1 prefill + (k-1)*N
+    tokens) and peers are bit-exact."""
+    cfg, params = _model()
+    _, want = _run(cfg, params, [5, 9, 7], max_new=12)
+
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      decode_steps=4)
+    orig = eng._exec_decode
+    calls = []
+
+    def exec_then_cancel(plan):
+        res = orig(plan)
+        calls.append(plan)
+        if len(calls) == 2:
+            assert eng.cancel(1, kind=kind, reason="client gone")
+        return res
+
+    eng._exec_decode = exec_then_cancel
+    reqs = _requests(cfg, [5, 9, 7], max_new=12)
+    eng.run(reqs)
+    assert reqs[1].done and reqs[1].finish_reason == kind
+    assert len(reqs[1].generated) == 1 + 4          # block 2 dropped whole
+    assert tuple(reqs[1].generated) == want[1][0][:5]
+    for uid in (0, 2):
+        assert _outputs([reqs[uid]])[uid] == want[uid]
+    assert eng.stats["cancelled"] == 1
+    assert eng._free_total() == eng.slots
+
+
+def test_deadline_expiry_quantizes_to_dispatch_boundary():
+    """On the deterministic round clock, the deadline sweep runs between
+    dispatches: the victim's delivered length is 1 + k*N, a prefix of the
+    uninterrupted stream, and peers are untouched."""
+    cfg, params = _model()
+    _, want = _run(cfg, params, [5, 9, 7], max_new=20)
+
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      decode_steps=4)
+    eng._clock = lambda: float(eng._round)          # rounds, not wall time
+    reqs = [Request(uid=i, prompt=r.prompt, max_new=20,
+                    deadline=(3.0 if i == 1 else None))
+            for i, r in enumerate(_requests(cfg, [5, 9, 7], max_new=20))]
+    eng.run(reqs)
+    assert reqs[1].done and reqs[1].finish_reason == "deadline"
+    n = len(reqs[1].generated)
+    assert 0 < n < 20 and (n - 1) % 4 == 0          # dispatch-quantized
+    assert tuple(reqs[1].generated) == want[1][0][:n]
+    for uid in (0, 2):
+        assert _outputs([reqs[uid]])[uid] == want[uid]
+    assert eng.stats["deadline_expired"] == 1
+    assert eng._free_total() == eng.slots
+
+
+# ---------------------------------------------------------------------------
+# preemption / snapshot-resume at N>1
+# ---------------------------------------------------------------------------
+
+
+def _grow_reqs():
+    # 17-token prompts claim 2 pages; max_new=30 forces a 3rd page
+    # mid-decode, colliding in a 6-usable-page pool with 3 live rows
+    rng = np.random.default_rng(7)
+    return [Request(uid=50 + i,
+                    prompt=rng.integers(1, 200, size=17).astype(np.int32),
+                    max_new=30) for i in range(4)]
+
+
+def test_preempt_and_requeue_token_exact_at_n4():
+    """Pool pressure with whole N-step page windows pre-allocated: the
+    preempt-and-requeue path still regenerates the evicted rows exactly
+    ((uid, step) keys do not see dispatch shapes)."""
+    cfg, params = _model()
+    ref = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.9)
+    want_reqs = _grow_reqs()
+    ref.run(want_reqs)
+
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.9, paged=True, page_size=16,
+                      pool_pages=7, decode_steps=4)
+    reqs = _grow_reqs()
+    eng.run(reqs)
+    assert _outputs(reqs) == _outputs(want_reqs)
+    assert eng.stats["preemptions"] > 0
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_snapshot_resume_token_parity_at_n4(tmp_path, temperature):
+    """Preempt mid-serve at N=4, snapshot, resume on a FRESH N=4 engine:
+    finished + regenerated streams match the uninterrupted N=1 run."""
+    cfg, params = _model()
+    kw = dict(slots=2, max_len=64, temperature=temperature,
+              rng=jax.random.PRNGKey(3))
+    lens = [4, 6, 9, 5, 7]
+    ref = _requests(cfg, lens, max_new=8)
+    ServeEngine(cfg, params, **kw).run(ref)
+
+    plan = FaultPlan(preempt_at_round=3)
+    eng = ServeEngine(cfg, params, **kw, decode_steps=4,
+                      fault=plan.injector())
+    eng.snapshot_path = os.path.join(tmp_path, f"snap{temperature}.npy")
+    eng.run(_requests(cfg, lens, max_new=8))
+    assert eng.drained and os.path.exists(eng.snapshot_path)
+
+    finished, todo = resume_requests(load_snapshot(eng.snapshot_path))
+    assert todo                                # the preemption left work
+    eng2 = ServeEngine(cfg, params, **kw, decode_steps=4)
+    eng2.run(todo)
+
+    out = finished + todo
+    assert {r.uid for r in out} == set(range(len(lens)))
+    assert all(r.done and r.error is None for r in out)
+    assert ({r.uid: tuple(r.generated) for r in out}
+            == {r.uid: tuple(r.generated) for r in ref})
+
+
+# ---------------------------------------------------------------------------
+# intra-round prefix sharing (eager registration in _claim_pages)
+# ---------------------------------------------------------------------------
+
+
+def test_identical_prompts_same_round_share_prompt_pages():
+    """Three identical 17-token prompts admitted in the SAME round: the
+    first claim registers its full prompt page eagerly, so both peers hit
+    it within that round - and all three streams stay exact ((uid, step)
+    keys diverge the sampled continuations)."""
+    cfg, params = _model()
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, 200, size=17).astype(np.int32)
+
+    def mk():
+        return [Request(uid=200 + i, prompt=prompt.copy(), max_new=8)
+                for i in range(3)]
+
+    ref = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.7)
+    want_reqs = mk()
+    ref.run(want_reqs)
+
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, buckets=(8, 16, 32),
+                      temperature=0.7, paged=True, page_size=16,
+                      decode_steps=4)
+    reqs = mk()
+    eng.run(reqs)
+    assert _outputs(reqs) == _outputs(want_reqs)
+    assert eng.stats["prefix_hits"] == 2        # both peers, same round
+    assert eng.stats["prefix_shared_pages"] == 2

@@ -59,6 +59,19 @@ _CASES = """
                                            buckets=(8, 16, 32),
                                            temperature=0.9, paged=True,
                                            page_size=16, pool_pages=6)),
+        # N-step fused decode over the wire: CMD_DECODE ships the block
+        # size (workers verify lockstep), decode runs 4 steps per
+        # dispatch inside the shard_map-ed scan, and ONE (slots, N)
+        # token block comes back per round.  The reference run strips
+        # decode_steps, so these pin multihost N=4 == sharded N=1
+        # token-for-token - including preempt-and-requeue under the
+        # tight pool.
+        ("nstep", MIXED, 9, dict(max_len=64, buckets=(8, 16, 32),
+                                 temperature=0.9, decode_steps=4)),
+        ("nstep_tight", [17] * 8, 30, dict(max_len=64, buckets=(8, 16, 32),
+                                           temperature=0.9, paged=True,
+                                           page_size=16, pool_pages=6,
+                                           decode_steps=4)),
     ]
 """
 
@@ -75,8 +88,11 @@ _REF = _CASES + """
     mesh = make_serve_mesh(4, 2)
     out = {}
     for name, lens, max_new, kw in CASES:
+        # the reference always decodes single-step: a decode_steps case
+        # therefore pins multihost N-step == sharded N=1 across engines
         eng = ShardedServeEngine(cfg, params, mesh=mesh, slots_per_replica=2,
-                                 **kw)
+                                 **{k: v for k, v in kw.items()
+                                    if k != "decode_steps"})
         reqs = requests(cfg, lens, max_new)
         eng.run(reqs)
         assert all(r.done for r in reqs)
@@ -220,7 +236,8 @@ def test_multihost_matches_single_process_sharded_engine():
         with open(mh_path) as f:
             got = json.load(f)
 
-    for name in ("fp", "int8", "chunked", "paged", "paged_tight"):
+    for name in ("fp", "int8", "chunked", "paged", "paged_tight",
+                 "nstep", "nstep_tight"):
         assert got[name] == want[name], (
             name, [i for i, (a, b) in enumerate(zip(got[name], want[name]))
                    if a != b])
@@ -238,6 +255,10 @@ def test_multihost_matches_single_process_sharded_engine():
     # the tight paged pool actually preempted (and still matched the
     # single-process engine token for token above)
     assert got["stats"]["paged_tight"]["preemptions"] > 0
+    # N-step blocks: one fused program, and the preempt-and-requeue path
+    # stays token-exact at N=4 too (compared against the N=1 ref above)
+    assert got["stats"]["nstep"]["decode_compiles"] == 1
+    assert got["stats"]["nstep_tight"]["preemptions"] > 0
 
 
 def test_multihost_engine_degenerate_single_process():

@@ -214,7 +214,11 @@ def test_sharded_decode_block_is_eight_kernels_per_replica():
     """A quantized GQA block inside the shard_map body (TP over 'model')
     must still trace to the grouped 8 pallas_calls per replica: the
     column-split rides INSIDE the one-prologue-one-matmul pipeline (slice
-    + all-gather add no kernel launches)."""
+    + all-gather add no kernel launches).  Under TP the fused SwiGLU MLP
+    (7-launch single-device census, tools/check_census.py) intentionally
+    falls back to the unfused 4-launch composition: each shard owns an
+    N-slice of BOTH gate and up segments, but w_down's prologue needs the
+    full silu(g)*u row, which only exists after the all-gather."""
     out = _run_subprocess("""
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
@@ -321,3 +325,46 @@ def test_sharded_service_cancel_and_deadline_evict_in_isolation():
         print("OK")
     """))
     assert "OK" in out
+
+
+# ------------------------------------------------- N-step decode fast path
+def test_sharded_nstep_decode_matches_single_step():
+    """decode_steps=4 on a 4x2 mesh: N decode steps per dispatch run
+    inside one shard_map-ed scan (per-replica in-body sampling, one
+    (slots, N) backhaul) and must equal the single-device N=1 engine
+    token-for-token - fp and int8-KV, greedy and temperature, slot-row
+    and paged."""
+    out = _run_subprocess(_parity_case("""
+        import dataclasses
+        MIXED = [3, 5, 8, 9, 12, 16, 17, 23, 30, 4, 11, 27]
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cells = [("fp greedy slotrow", None, 0.0, {}),
+                 ("fp temp paged", None, 0.9,
+                  dict(paged=True, page_size=16)),
+                 ("int8 temp paged", "dynamic", 0.9,
+                  dict(paged=True, page_size=16))]
+        for name, qkv, temp, kw in cells:
+            cfg = reduced_config("stablelm-1.6b")
+            if qkv:
+                cfg = dataclasses.replace(cfg, quant_kv=qkv)
+            params = build_model(cfg).init(jax.random.PRNGKey(0))
+            ref = ServeEngine(cfg, params, slots=4, max_len=64,
+                              buckets=(8, 16, 32), temperature=temp)
+            want = outputs(ref, cfg, MIXED, max_new=9)
+            eng = ShardedServeEngine(cfg, params, mesh=mesh,
+                                     slots_per_replica=2, max_len=64,
+                                     buckets=(8, 16, 32), temperature=temp,
+                                     decode_steps=4, **kw)
+            got = outputs(eng, cfg, MIXED, max_new=9)
+            assert got == want, (name, [i for i, (a, b) in
+                                        enumerate(zip(got, want)) if a != b])
+            assert eng.stats["decode_compiles"] == 1
+            # full blocks: dispatches-per-token is exactly 1/4 (two
+            # admission waves of lockstep rows, 8 decode tokens each ->
+            # 2 dispatches per wave)
+            assert eng.stats["decode_tokens"] == len(MIXED) * 8
+            assert eng.stats["decode_steps"] == 4
+            print("OK", name)
+        print("OK all")
+    """))
+    assert "OK all" in out
